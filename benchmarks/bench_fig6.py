@@ -1,0 +1,91 @@
+"""Fig 6 — adaptive communication control under shifting load.
+
+The workload moves through phases (low → high → low).  Static
+granularities are each optimal in one phase only; the controller's
+AdaptiveGranularityPolicy observes tester load and switches the channel
+at runtime, converging to the best mechanism per phase (the paper's
+Fig 6 demonstration).
+"""
+from __future__ import annotations
+
+import statistics
+
+from benchmarks.common import Report, pctl
+from repro.agents import AgenticPipeline, PipelineConfig, WorkloadConfig
+from repro.agents.workloads import Phase, PhasedLoad
+from repro.core.policies import AdaptiveGranularityPolicy
+from repro.core.types import Granularity
+
+PHASES = [Phase(25.0, 2), Phase(25.0, 64), Phase(25.0, 2)]
+HORIZON = sum(p.duration for p in PHASES)
+
+
+def run_mode(mode: str):
+    p = AgenticPipeline(PipelineConfig(
+        granularity=Granularity.PIPELINE if mode == "adaptive"
+        else Granularity(mode),
+        n_testers=1, stream_chunk=1))
+    pol = None
+    if mode == "adaptive":
+        pol = AdaptiveGranularityPolicy("dev->tester", ["tester-0"],
+                                        stream_below=3.0, batch_above=20.0)
+        p.controller.install(pol)
+    load = PhasedLoad(p, WorkloadConfig(think_time=0.3), PHASES)
+    load.start()
+    p.run(until=HORIZON + 10.0)
+
+    # per-phase completion counts
+    per_phase = []
+    t = 0.0
+    for ph in PHASES:
+        n = sum(1 for s in p.done if t <= s.finished_at < t + ph.duration)
+        per_phase.append(n / ph.duration)
+        t += ph.duration
+    lats = p.latencies()
+    return {
+        "per_phase": per_phase,
+        "total": len(p.done),
+        "mean_lat": statistics.mean(lats) if lats else float("nan"),
+        "p95_lat": pctl(lats, 0.95),
+        "switches": [(round(t, 1), g.value) for t, g in pol.switches]
+        if pol else [],
+    }
+
+
+def main(report: Report | None = None) -> Report:
+    rep = report or Report("fig6: adaptive granularity under shifting load")
+    results = {}
+    for mode in ("batch", "pipeline", "stream", "adaptive"):
+        r = run_mode(mode)
+        results[mode] = r
+        rep.add(f"fig6.{mode}",
+                phase_thpt="/".join(f"{x:.2f}" for x in r["per_phase"]),
+                total=r["total"],
+                mean_lat=f"{r['mean_lat']:.3f}",
+                p95_lat=f"{r['p95_lat']:.3f}")
+    ad = results["adaptive"]
+    rep.add("fig6.switching", events=";".join(
+        f"{t}s->{g}" for t, g in ad["switches"]) or "none")
+
+    # convergence check: adaptive within tolerance of the best static
+    # config in every phase
+    ok = True
+    for i in range(len(PHASES)):
+        best_static = max(results[m]["per_phase"][i]
+                          for m in ("batch", "pipeline", "stream"))
+        if ad["per_phase"][i] < 0.85 * best_static:
+            ok = False
+    best_total = max(results[m]["total"]
+                     for m in ("batch", "pipeline", "stream"))
+    rep.add("fig6.summary",
+            adaptive_total=ad["total"],
+            best_static_total=best_total,
+            adaptive_tracks_best_static_per_phase=ok)
+    rep.note("fig6: the controller switches mechanism as load shifts and "
+             f"tracks the per-phase best static config (ok={ok}); no "
+             "static config is best in all phases")
+    return rep
+
+
+if __name__ == "__main__":
+    print(main().render())

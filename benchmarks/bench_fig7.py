@@ -1,0 +1,114 @@
+"""Fig 7 — controller-driven load balancing with KV-cache transfer.
+
+One developer, two tester instances.  Session→instance static hashing is
+adversarially skewed (75% of sessions land on tester-0), arrivals are
+open-loop Poisson near the two-instance capacity, so without control the
+hot instance builds queue while the other idles.
+
+Three arms, as in the paper:
+  * none      — static hashing, no balancing (baseline),
+  * reactive  — controller re-pins sessions to the least-loaded
+                instance; the destination pulls session KV only when the
+                request arrives (transfer on the critical path),
+  * hints     — the controller pre-positions the KV at task_start,
+                overlapping the transfer with the developer's generation.
+
+Primary metric: goodput (tasks completing within the SLO), as the
+paper's control objective balances user experience with throughput.
+Paper ratios: hints ≈ 1.8× over reactive-after-arrival; controller LB
+≈ 2.3× over no balancing.
+"""
+from __future__ import annotations
+
+import statistics
+
+from benchmarks.common import Report, pctl
+from repro.agents import AgenticPipeline, PipelineConfig, WorkloadConfig
+from repro.agents.workloads import OpenLoopSource
+from repro.core.policies import LoadBalancePolicy
+from repro.core.types import Granularity
+
+# crc32(name) % 2 == 0 -> tester-0 (precomputed; router uses crc32)
+HOT = ["sess-4", "sess-5", "sess-6", "sess-7", "sess-14", "sess-15",
+       "sess-16", "sess-17", "sess-20", "sess-21", "sess-26", "sess-27"]
+COLD = ["sess-0", "sess-1", "sess-9", "sess-11"]
+
+RATE = 0.55             # tasks/s/session -> ~8.8 tasks/s offered
+T_END = 60.0
+HORIZON = 100.0
+SLO = 3.0               # seconds end-to-end per task
+
+
+def run_mode(mode: str):
+    p = AgenticPipeline(PipelineConfig(
+        granularity=Granularity.PIPELINE, n_testers=2,
+        router_policy="static", dev_chips=8, tester_chips=2,
+        kv_bandwidth=3.125e9))
+    pol = LoadBalancePolicy([t.name for t in p.testers], mode=mode,
+                            imbalance_min=4.0, cooldown=4.0)
+    p.controller.install(pol)
+    src = OpenLoopSource(p, HOT + COLD, RATE,
+                         WorkloadConfig(n_functions=6, func_tokens=48,
+                                        test_tokens=40),
+                         t_end=T_END)
+    src.start()
+    p.run(until=HORIZON)
+    lats = p.latencies()
+    good = sum(1 for s in p.done
+               if (s.finished_at - s.submitted_at) <= SLO)
+    kvw = [w for t in p.testers for w in t.kv_waits]
+    stalls = [w for w in kvw if w > 0]
+    stall_per_handoff = (sum(stalls) / max(pol.migrations, 1)
+                         if pol.migrations else 0.0)
+    return {
+        "offered": src.submitted / T_END,
+        "completed": len(p.done),
+        "goodput": good / T_END,
+        "mean_lat": statistics.mean(lats) if lats else float("nan"),
+        "p95_lat": pctl(lats, 0.95),
+        "migrations": pol.migrations,
+        "transfers": p.kvx.transfers,
+        "kv_wait_mean": statistics.mean(kvw) if kvw else 0.0,
+        "handoff_stall": stall_per_handoff,
+        "stalled_handoffs": len(stalls),
+        "gb_moved": p.kvx.bytes_moved / 1e9,
+    }
+
+
+def main(report: Report | None = None) -> Report:
+    rep = report or Report("fig7: load balancing + KV transfer hints")
+    res = {}
+    for mode in ("none", "reactive", "hints"):
+        r = res[mode] = run_mode(mode)
+        rep.add(f"fig7.{mode}",
+                offered=f"{r['offered']:.2f}",
+                goodput=f"{r['goodput']:.2f}",
+                completed=r["completed"],
+                mean_lat=f"{r['mean_lat']:.2f}",
+                p95_lat=f"{r['p95_lat']:.2f}",
+                migrations=r["migrations"],
+                handoff_stall=f"{r['handoff_stall']:.3f}",
+                stalled=r["stalled_handoffs"],
+                gb_moved=f"{r['gb_moved']:.1f}")
+    lb_gain = res["hints"]["goodput"] / max(res["none"]["goodput"], 1e-9)
+    stall_gain = (res["reactive"]["handoff_stall"]
+                  / max(res["hints"]["handoff_stall"], 1e-9))
+    hint_lat = (res["reactive"]["p95_lat"]
+                / max(res["hints"]["p95_lat"], 1e-9))
+    rep.add("fig7.summary",
+            lb_vs_none=f"{lb_gain:.2f}x", paper_lb="2.3x",
+            hints_vs_reactive_handoff_stall=f"{stall_gain:.2f}x",
+            hints_vs_reactive_p95=f"{hint_lat:.2f}x",
+            paper_hints="1.8x")
+    rep.note(f"fig7: controller LB {lb_gain:.2f}x goodput over no "
+             f"balancing (paper 2.3x); proactive hints cut the per-"
+             f"hand-off KV stall {stall_gain:.2f}x vs reactive transfer "
+             f"(paper reports 1.8x end-to-end on a GPU prototype whose "
+             f"reactive path also stalls the engine; our virtual-clock "
+             f"engines keep serving while a transfer is in flight, so "
+             f"the aggregate-latency effect is smaller)")
+    return rep
+
+
+if __name__ == "__main__":
+    print(main().render())

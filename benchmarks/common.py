@@ -1,0 +1,42 @@
+"""Shared benchmark utilities: workload builders + reporting."""
+from __future__ import annotations
+
+import statistics
+from dataclasses import dataclass, field
+
+
+def pctl(xs, q):
+    if not xs:
+        return float("nan")
+    s = sorted(xs)
+    k = max(0, min(len(s) - 1, int(round(q * (len(s) - 1)))))
+    return s[k]
+
+
+@dataclass
+class Row:
+    name: str
+    fields: dict
+
+    def csv(self) -> str:
+        vals = ",".join(f"{k}={v}" for k, v in self.fields.items())
+        return f"{self.name},{vals}"
+
+
+class Report:
+    def __init__(self, title: str):
+        self.title = title
+        self.rows: list[Row] = []
+        self.notes: list[str] = []
+
+    def add(self, name: str, **fields):
+        self.rows.append(Row(name, fields))
+
+    def note(self, text: str):
+        self.notes.append(text)
+
+    def render(self) -> str:
+        out = [f"== {self.title} =="]
+        out += [r.csv() for r in self.rows]
+        out += [f"# {n}" for n in self.notes]
+        return "\n".join(out)

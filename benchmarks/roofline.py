@@ -1,0 +1,121 @@
+"""Roofline analysis: render §Dry-run + §Roofline tables from the
+artifacts launch/dryrun.py wrote.
+
+Three terms per (arch × shape), single-pod mesh, TPU v5e constants:
+
+    compute    = HLO_FLOPs        / (chips × 197e12 FLOP/s)
+    memory     = HLO_bytes        / (chips × 819e9  B/s)
+    collective = collective_bytes / (chips × 2 links × 50e9 B/s)
+
+HLO totals come from the *unrolled* cost pass (XLA counts while-loop
+bodies once — see dryrun.py); cost_analysis totals are per-partition
+already, so the `chips` division applies to the collective term only
+(its byte count is summed over the whole module's collective ops).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+PEAK = 197e12          # bf16 FLOP/s/chip
+HBM = 819e9            # B/s/chip
+ICI = 50e9             # B/s/link
+LINKS = 2              # effective links/chip for ring collectives
+
+ART = Path("artifacts/dryrun")
+
+
+def load(mesh: str = "single") -> list[dict]:
+    recs = []
+    for f in sorted(ART.glob(f"*.{mesh}.json")):
+        recs.append(json.loads(f.read_text()))
+    return recs
+
+
+def terms(rec: dict) -> dict | None:
+    if "flops" not in rec:
+        return None
+    chips = rec["chips"]
+    t_c = rec["flops"] / PEAK                       # per-partition FLOPs
+    t_m = rec["bytes_accessed"] / HBM
+    t_x = rec["collectives"]["total"] / (chips * LINKS * ICI)
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+              key=lambda kv: kv[1])[0]
+    useful = rec["model_flops"] / max(rec["flops"] * chips, 1.0)
+    return {"compute": t_c, "memory": t_m, "collective": t_x,
+            "dominant": dom, "useful": useful,
+            "bound": max(t_c, t_m, t_x),
+            "frac": (rec["model_flops"] / chips / PEAK)
+            / max(t_c, t_m, t_x, 1e-12)}
+
+
+SUGGEST = {
+    "compute": "compute-bound: fuse/reduce non-matmul FLOPs "
+               "(remat policy, cheaper recompute), or grow per-chip batch",
+    "memory": "HBM-bound: cut bytes/step — fuse elementwise chains, "
+              "bigger per-step batch to amortize weight reads, quantize "
+              "weights/KV",
+    "collective": "collective-bound: reshard to cut resharding traffic "
+                  "(kv-head TP cap, seq-sharding), or overlap collectives "
+                  "with compute (latency-hiding schedule)",
+}
+
+
+def render(mesh: str = "single") -> str:
+    rows = []
+    head = ("| arch | shape | compute s | memory s | collective s | "
+            "dominant | MODEL/HLO | roofline frac |")
+    sep = "|" + "---|" * 8
+    rows += [head, sep]
+    for rec in load(mesh):
+        tag = f"| {rec['arch']} | {rec['shape']} "
+        if "skipped" in rec:
+            rows.append(tag + "| — | — | — | skipped | — | — |")
+            continue
+        if "error" in rec:
+            rows.append(tag + "| — | — | — | ERROR | — | — |")
+            continue
+        t = terms(rec)
+        if t is None:
+            continue
+        rows.append(
+            tag + f"| {t['compute']:.3e} | {t['memory']:.3e} "
+            f"| {t['collective']:.3e} | {t['dominant']} "
+            f"| {t['useful']:.2f} | {t['frac']:.1%} |")
+    return "\n".join(rows)
+
+
+def render_memory(mesh: str) -> str:
+    rows = ["| arch | shape | mesh | peak GB/dev | args GB | temps GB | "
+            "compile s |", "|" + "---|" * 7]
+    for rec in load(mesh):
+        if "memory" not in rec:
+            continue
+        m = rec["memory"]
+        rows.append(
+            f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} "
+            f"| {m['peak_bytes']/1e9:.2f} | {m['argument_bytes']/1e9:.2f} "
+            f"| {m['temp_bytes']/1e9:.2f} | {rec['compile_s']} |")
+    return "\n".join(rows)
+
+
+def main():
+    print("== roofline (single-pod, 256 chips) ==")
+    print(render("single"))
+    print()
+    print("== memory / compile (single-pod) ==")
+    print(render_memory("single"))
+    print()
+    print("== multi-pod sharding proof (512 chips) ==")
+    print(render_memory("multi"))
+    # per-cell suggestion lines
+    print()
+    for rec in load("single"):
+        t = terms(rec)
+        if t:
+            print(f"# {rec['arch']}.{rec['shape']}: {t['dominant']}-bound "
+                  f"-> {SUGGEST[t['dominant']]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Benchmark orchestrator — one section per paper figure/table plus the
+kernel microbench and (if dry-run artifacts exist) the roofline tables.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig3,fig6,...]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from pathlib import Path
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="all",
+                    help="comma list: fig3,fig6,fig7,kernels,roofline")
+    args = ap.parse_args()
+    want = None if args.only == "all" else set(args.only.split(","))
+
+    names = [n for n in ("fig3", "fig6", "fig7", "kernels", "roofline")
+             if want is None or n in want]
+    for name in names:
+        t0 = time.time()
+        print(f"\n######## {name} ########", flush=True)
+        if name == "fig3":
+            from benchmarks import bench_fig3
+            print(bench_fig3.main().render())
+        elif name == "fig6":
+            from benchmarks import bench_fig6
+            print(bench_fig6.main().render())
+        elif name == "fig7":
+            from benchmarks import bench_fig7
+            print(bench_fig7.main().render())
+        elif name == "kernels":
+            from benchmarks import bench_kernels
+            print(bench_kernels.main().render())
+        elif name == "roofline":
+            from benchmarks import roofline
+            if Path("artifacts/dryrun").exists():
+                roofline.main()
+            else:
+                print("# no artifacts/dryrun — run "
+                      "`python -m repro.launch.dryrun` first")
+        print(f"# section {name} took {time.time()-t0:.1f}s", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,85 @@
+"""Serve a (tiny, real-JAX) model with batched requests through the full
+stack: continuous-batching engine, metrics plane, controller with an SLO
+intent, and the Table-1 set()/reset() surface.
+
+    PYTHONPATH=src python examples/serve_llm.py
+"""
+import numpy as np
+
+import jax
+
+from repro import models
+from repro.configs import get_config
+from repro.core import Controller, Registry, compile_intent
+from repro.core.metrics import CentralPoller, Collector, StateStore
+from repro.core.types import Priority, Request
+from repro.serving.engine import Engine
+from repro.serving.scheduler import SchedulerConfig
+from repro.sim.clock import EventLoop
+
+
+def main():
+    cfg = get_config("tiny-agent")
+    params = models.init(cfg, jax.random.key(0))
+    collector = Collector("serve")
+    eng = Engine(cfg, params,
+                 SchedulerConfig(max_slots=4, num_pages=128,
+                                 max_context=128),
+                 name="llm-0", collector=collector)
+
+    # control plane wiring (the engine registers its card + knobs)
+    loop = EventLoop()
+    registry = Registry()
+    card = registry.register(eng)
+    print(f"registered {card.name}: knobs={sorted(card.knobs)}")
+
+    store = StateStore()
+    poller = CentralPoller(store)
+    poller.attach(collector)
+    controller = Controller(loop, registry, poller)
+    controller.install(compile_intent("""
+objective: minimize p95(llm-0.latency)
+rule shed: when last(llm-0.queue_len) > 6 => set llm-0.admit_priority_min 1
+rule open: when last(llm-0.queue_len) <= 2 => reset llm-0.admit_priority_min
+"""))
+
+    # batched requests: mixed priorities and prompt lengths
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i in range(10):
+        plen = int(rng.integers(4, 24))
+        prio = Priority.INTERACTIVE if i % 3 == 0 else Priority.LOW
+        r = Request(prompt_len=plen, max_new_tokens=12, priority=prio,
+                    prompt_tokens=rng.integers(
+                        0, cfg.vocab, plen).astype(np.int32))
+        reqs.append(r)
+        eng.submit(r)
+
+    # drive the engine; poll the controller between steps
+    for step in range(200):
+        if not eng.busy:
+            break
+        eng.step()
+        poller.poll(eng.now())
+        controller._tick_once = True      # manual tick (wall-clock engine)
+        from repro.core.controller import ControlContext
+        ctx = ControlContext(controller)
+        for pol in controller.policies:
+            pol.on_tick(ctx)
+
+    done = [r for r in reqs if r.state.value == "finished"]
+    print(f"\ncompleted {len(done)}/10 requests")
+    for r in done[:4]:
+        print(f"  {r.req_id}: prio={r.priority.name:11s} "
+              f"prompt={r.prompt_len:3d} tokens={r.output_tokens[:8]}...")
+    lat = [r.finish_time - r.arrival_time for r in done]
+    print(f"latency mean={np.mean(lat):.3f}s p95={np.quantile(lat,0.95):.3f}s")
+    print(f"controller actions: {[(a.kind, a.detail) for a in controller.actions]}")
+    # demonstrate the uniform shim: retune batch size live
+    registry.set("llm-0", "max_num_seqs", 2)
+    print(f"set('max_num_seqs', 2) -> engine slots now "
+          f"{eng.scheduler.cfg.max_slots}")
+
+
+if __name__ == "__main__":
+    main()

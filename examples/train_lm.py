@@ -1,0 +1,97 @@
+"""End-to-end training driver: a ~100M-param LM for a few hundred steps
+on CPU, through the full production path — sharded train step (1-device
+mesh), synthetic token pipeline, AdamW with warmup+cosine, atomic
+checkpointing, and supervised restart.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300] [--chaos]
+
+``--chaos`` injects a failure mid-run to demonstrate checkpoint/restart
+(the resumed loss curve continues exactly where it left off).
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro import models
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.data import DataConfig, TokenPipeline
+from repro.launch.mesh import make_mesh
+from repro.launch.train import AdamWConfig, TrainPlan, make_train_step
+from repro.optim.adamw import adamw_init
+from repro.runtime import SimulatedFailure, TrainSupervisor
+from repro.runtime.supervisor import SupervisorConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    # full deliverable: --model lm-100m --steps 300 (hours on this CPU
+    # container; minutes on one accelerator). CPU-friendly default below.
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--model", default="lm-100m")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="artifacts/train_lm")
+    ap.add_argument("--chaos", action="store_true",
+                    help="inject a failure at step 2/3 of the run")
+    args = ap.parse_args()
+
+    cfg = get_config(args.model)
+    n = models.param_count(cfg)
+    print(f"model {cfg.name}: {n/1e6:.1f}M params")
+
+    mesh = make_mesh((1, 1), ("data", "model"))
+    acfg = AdamWConfig(lr=1e-3, warmup_steps=min(30, args.steps // 5),
+                       total_steps=args.steps)
+    from repro.configs.base import ShapeConfig
+    shape = ShapeConfig("train", args.seq, args.batch, "train")
+    with jax.set_mesh(mesh):
+        step_fn, _ = make_train_step(cfg, mesh, TrainPlan(), acfg,
+                                     shape=shape)
+
+        params = models.init(cfg, jax.random.key(0))
+        opt = adamw_init(params, acfg)
+
+        pipe = TokenPipeline(DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                                        global_batch=args.batch, seed=1))
+        mgr = CheckpointManager(args.ckpt_dir, keep=2)
+        sup = TrainSupervisor(mgr, SupervisorConfig(ckpt_every=50))
+
+        losses = []
+        t0 = time.time()
+        chaos_at = {args.steps * 2 // 3} if args.chaos else set()
+
+        def train_one(state, batch, step):
+            if step in chaos_at:
+                chaos_at.discard(step)
+                raise SimulatedFailure(f"injected failure at step {step}")
+            p, o = state
+            batch = {k: np.asarray(v) for k, v in batch.items()}
+            p, o, metrics = step_fn(p, o, batch)
+            losses.append(float(metrics["loss"]))
+            if (step + 1) % 25 == 0:
+                rate = (step + 1) / (time.time() - t0)
+                print(f"step {step+1:4d}  loss {losses[-1]:.4f}  "
+                      f"lr {float(metrics['lr']):.2e}  "
+                      f"({rate:.2f} steps/s)", flush=True)
+            return (p, o)
+
+        state = sup.run(state=(params, opt), pipeline=pipe,
+                        step_fn=train_one, total_steps=args.steps)
+        pipe.close()
+
+    first = np.mean(losses[:20])
+    last = np.mean(losses[-20:])
+    print(f"\nloss: {first:.3f} -> {last:.3f} "
+          f"(improved {first-last:.3f} nats)")
+    if sup.restarts:
+        print(f"survived {sup.restarts} failure(s); log: {sup.log}")
+    need = 0.2 if args.steps >= 150 else 0.04
+    assert last < first - need, "training did not make progress"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

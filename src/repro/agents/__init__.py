@@ -1,0 +1,8 @@
+from repro.agents.agent import DeveloperAgent, TesterAgent, ToolAgent
+from repro.agents.pipeline import AgenticPipeline, PipelineConfig, TaskSpec
+from repro.agents.workloads import ClosedLoopClient, WorkloadConfig
+
+__all__ = [
+    "AgenticPipeline", "ClosedLoopClient", "DeveloperAgent", "PipelineConfig",
+    "TaskSpec", "TesterAgent", "ToolAgent", "WorkloadConfig",
+]

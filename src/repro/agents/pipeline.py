@@ -1,0 +1,169 @@
+"""Pipeline assembly: one call builds the paper's Fig-1 topology —
+
+    clients → developer(engine) → channel(shim) → router → tester[i](engine)
+
+with the metrics plane attached to every component, everything registered
+with the controller, and the KV-transfer fabric wired between tester
+instances.  All benchmarks and the serving examples build through here.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.agents.agent import DeveloperAgent, TesterAgent
+from repro.configs import get_config
+from repro.core.controller import Controller
+from repro.core.dataplane import Channel
+from repro.core.metrics import CentralPoller, Collector, StateStore
+from repro.core.registry import Registry
+from repro.core.types import Granularity, Priority, fresh_id
+from repro.serving.engine_sim import SimEngine
+from repro.serving.kv_transfer import KVTransferManager, SessionDirectory
+from repro.serving.router import Router
+from repro.serving.scheduler import SchedulerConfig
+from repro.sim.clock import EventLoop
+from repro.sim.costmodel import CostModel
+from repro.sim.network import Link
+
+
+@dataclass
+class TaskSpec:
+    """One MetaGPT-style task: write n functions, each gets tests."""
+
+    session: str
+    prompt_tokens: int = 192
+    n_functions: int = 6
+    func_tokens: int = 48
+    test_tokens: int = 40
+    priority: Priority = Priority.NORMAL
+    speculative: bool = False
+    task_id: str = field(default_factory=lambda: fresh_id("task"))
+    submitted_at: float = 0.0
+    finished_at: float = 0.0
+
+
+@dataclass
+class PipelineConfig:
+    model: str = "agent-7b"             # cost-model architecture
+    n_testers: int = 1
+    dev_chips: int = 4                  # developer engine TP degree
+    tester_chips: int = 4               # per-tester-instance TP degree
+    granularity: Granularity = Granularity.PIPELINE
+    stream_chunk: int = 4
+    header_tokens: int = 64
+    dev_slots: int = 32                 # developer engine batch capacity
+    tester_slots: int = 12              # tester engine batch capacity
+    num_pages: int = 4096
+    max_context: int = 8192
+    msg_bandwidth: float = 1.25e9       # 10 GbE-class agent links
+    msg_proc_time: float = 1.0e-3      # per-message protocol/serde cost
+    kv_bandwidth: float = 12.5e9        # 100 Gb interconnect for KV
+    controller_interval: float = 0.05
+    router_policy: str = "static"
+
+
+class AgenticPipeline:
+    def __init__(self, cfg: PipelineConfig, loop: Optional[EventLoop] = None):
+        self.cfg = cfg
+        self.loop = loop or EventLoop()
+        self.collector = Collector("pipeline")
+        self.store = StateStore()
+        self.poller = CentralPoller(self.store)
+        self.poller.attach(self.collector)
+        self.registry = Registry()
+        self.controller = Controller(self.loop, self.registry, self.poller,
+                                     interval=cfg.controller_interval)
+
+        model_cfg = get_config(cfg.model)
+        self.costmodel = CostModel(model_cfg, chips=cfg.tester_chips)
+        self.dev_costmodel = CostModel(model_cfg, chips=cfg.dev_chips)
+        sched = lambda slots: SchedulerConfig(
+            max_slots=slots, num_pages=cfg.num_pages,
+            max_context=cfg.max_context)
+
+        # --- KV fabric + session directory --------------------------------
+        self.directory = SessionDirectory()
+        # session KV is bounded by the engine's context window
+        kv_bytes = lambda ctx_len: self.costmodel.kv_transfer_bytes(
+            min(ctx_len, cfg.max_context))
+        self.kvx = KVTransferManager(
+            self.loop, self.directory, bytes_fn=kv_bytes,
+            bandwidth=cfg.kv_bandwidth, collector=self.collector)
+
+        # --- tester instances behind the router -----------------------------
+        self.router = Router(self.loop, "tester-router",
+                             policy=cfg.router_policy,
+                             collector=self.collector)
+        self.testers: list[TesterAgent] = []
+        for i in range(cfg.n_testers):
+            eng = SimEngine(self.loop, self.costmodel,
+                            sched(cfg.tester_slots),
+                            name=f"tester-{i}", collector=self.collector)
+            t = TesterAgent(f"tester-{i}", eng, self.loop,
+                            directory=self.directory, kvx=self.kvx,
+                            header_tokens=cfg.header_tokens,
+                            on_task_done=self._task_done)
+            self.testers.append(t)
+            self.router.add_instance(t)
+            self.registry.register(eng)
+
+        # --- developer + the controllable channel ----------------------------
+        dev_eng = SimEngine(self.loop, self.dev_costmodel,
+                            sched(cfg.dev_slots),
+                            name="developer", collector=self.collector)
+        link = Link(self.loop, bandwidth=cfg.msg_bandwidth,
+                    proc_time=cfg.msg_proc_time, name="dev-link")
+        self.channel = Channel(self.loop, link, "developer", self.router,
+                               name="dev->tester", collector=self.collector,
+                               granularity=cfg.granularity,
+                               stream_chunk=cfg.stream_chunk)
+        self.developer = DeveloperAgent("developer", dev_eng, self.loop,
+                                        self.channel,
+                                        controller=self.controller)
+        self.registry.register(dev_eng)
+        self.registry.register(self.channel)
+        self.registry.register(self.router)
+        self.router.rules = self.controller.rules
+        self.controller.attach_transfer(
+            lambda sess, src, dst, proactive: self.kvx.transfer(
+                sess, src, dst, proactive=proactive))
+
+        # --- bookkeeping -------------------------------------------------------
+        self._inflight: dict[str, TaskSpec] = {}
+        self.done: list[TaskSpec] = []
+        self.on_task_done = None
+        self.collector.describe(
+            "pipeline.task_latency",
+            "End-to-end pipeline task latency in seconds; lower is better.")
+
+    # -- workload entry -----------------------------------------------------------
+    def submit(self, spec: TaskSpec) -> None:
+        spec.submitted_at = self.loop.now()
+        self._inflight[spec.task_id] = spec
+        self.developer.submit_task(spec)
+
+    def _task_done(self, st, t: float) -> None:
+        spec = self._inflight.pop(st.task_id, None)
+        if spec is None:
+            return
+        spec.finished_at = t
+        self.done.append(spec)
+        self.collector.observe("pipeline.task_latency",
+                               t - spec.submitted_at, t)
+        self.collector.counter("pipeline.tasks_done", 1, t)
+        if self.on_task_done is not None:
+            self.on_task_done(spec)
+
+    # -- results ---------------------------------------------------------------------
+    def run(self, until: float) -> None:
+        self.controller.start()
+        self.loop.run_until(until)
+
+    def throughput(self, t0: float = 0.0, t1: Optional[float] = None) -> float:
+        t1 = t1 if t1 is not None else self.loop.now()
+        n = sum(1 for s in self.done if t0 <= s.finished_at <= t1)
+        return n / max(t1 - t0, 1e-9)
+
+    def latencies(self) -> list[float]:
+        return [s.finished_at - s.submitted_at for s in self.done]

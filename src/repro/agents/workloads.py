@@ -1,0 +1,168 @@
+"""Workload generators for the MetaGPT-style developer→tester pipeline.
+
+``ClosedLoopClient`` — N concurrent sessions; each submits a task, waits
+for completion, thinks, submits the next.  Sweeping N is the paper's
+"varying load" axis (Fig 3): at low N latency dominates (streaming wins),
+at high N engine efficiency dominates (batching wins).
+
+``PhasedLoad`` — drives the client count through phases (low → high →
+low) for the Fig-6 adaptive-switching experiment.
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.agents.pipeline import AgenticPipeline, TaskSpec
+from repro.core.types import Priority
+
+
+@dataclass
+class WorkloadConfig:
+    n_clients: int = 4
+    think_time: float = 0.5
+    tasks_per_client: int = 0          # 0 = unlimited (run until t_end)
+    prompt_tokens: int = 192
+    n_functions: int = 6
+    func_tokens: int = 48
+    test_tokens: int = 40
+    jitter: float = 0.25               # fractional think-time jitter
+    seed: int = 0
+
+
+class ClosedLoopClient:
+    def __init__(self, pipeline: AgenticPipeline, session: str,
+                 cfg: WorkloadConfig, rng: random.Random,
+                 stop_at: float = float("inf")):
+        self.p = pipeline
+        self.session = session
+        self.cfg = cfg
+        self.rng = rng
+        self.stop_at = stop_at
+        self.submitted = 0
+        self.completed = 0
+        self.active = False
+
+    def start(self, delay: float = 0.0) -> None:
+        self.active = True
+        self.p.loop.call_after(delay, self._next)
+
+    def stop(self) -> None:
+        self.active = False
+
+    def _next(self) -> None:
+        if not self.active or self.p.loop.now() >= self.stop_at:
+            return
+        if self.cfg.tasks_per_client and self.submitted >= self.cfg.tasks_per_client:
+            return
+        spec = TaskSpec(session=self.session,
+                        prompt_tokens=self.cfg.prompt_tokens,
+                        n_functions=self.cfg.n_functions,
+                        func_tokens=self.cfg.func_tokens,
+                        test_tokens=self.cfg.test_tokens)
+        spec.meta_client = self        # dispatch handle for _dispatch_done
+        self.submitted += 1
+        self.p.submit(spec)
+
+    def _on_done(self) -> None:
+        self.completed += 1
+        think = self.cfg.think_time * (
+            1 + self.rng.uniform(-self.cfg.jitter, self.cfg.jitter))
+        self.p.loop.call_after(max(think, 0.0), self._next)
+
+
+def _dispatch_done(spec: TaskSpec) -> None:
+    client = getattr(spec, "meta_client", None)
+    if client is not None:
+        client._on_done()
+
+
+def launch_clients(pipeline: AgenticPipeline, cfg: WorkloadConfig,
+                   stop_at: float = float("inf")) -> list[ClosedLoopClient]:
+    rng = random.Random(cfg.seed)
+    clients = []
+    pipeline.on_task_done = _dispatch_done
+    for i in range(cfg.n_clients):
+        c = ClosedLoopClient(pipeline, f"sess-{i}", cfg, rng, stop_at)
+        clients.append(c)
+        c.start(delay=rng.uniform(0, cfg.think_time + 1e-3))
+    return clients
+
+
+class OpenLoopSource:
+    """Poisson arrivals per session, independent of completions — the
+    load does NOT self-throttle, so hot-instance queue buildup is fully
+    visible (Fig 7 needs this; closed loops hide imbalance)."""
+
+    def __init__(self, pipeline: AgenticPipeline, sessions: list[str],
+                 rate_per_session: float, cfg: WorkloadConfig,
+                 t_end: float, seed: int = 0):
+        self.p = pipeline
+        self.sessions = sessions
+        self.rate = rate_per_session
+        self.cfg = cfg
+        self.t_end = t_end
+        self.rng = random.Random(seed)
+        self.submitted = 0
+
+    def start(self) -> None:
+        for s in self.sessions:
+            self._schedule(s, self.rng.expovariate(self.rate))
+
+    def _schedule(self, session: str, dt: float) -> None:
+        t = self.p.loop.now() + dt
+        if t >= self.t_end:
+            return
+        self.p.loop.call_at(t, lambda: self._fire(session))
+
+    def _fire(self, session: str) -> None:
+        spec = TaskSpec(session=session,
+                        prompt_tokens=self.cfg.prompt_tokens,
+                        n_functions=self.cfg.n_functions,
+                        func_tokens=self.cfg.func_tokens,
+                        test_tokens=self.cfg.test_tokens)
+        self.submitted += 1
+        self.p.submit(spec)
+        self._schedule(session, self.rng.expovariate(self.rate))
+
+
+@dataclass
+class Phase:
+    duration: float
+    n_clients: int
+
+
+class PhasedLoad:
+    """Fig 6: load that shifts between phases at runtime."""
+
+    def __init__(self, pipeline: AgenticPipeline, cfg: WorkloadConfig,
+                 phases: list[Phase]):
+        self.p = pipeline
+        self.cfg = cfg
+        self.phases = phases
+        self.clients: list[ClosedLoopClient] = []
+        self.rng = random.Random(cfg.seed)
+        self.boundaries: list[float] = []
+
+    def start(self) -> None:
+        self.p.on_task_done = _dispatch_done
+        t = 0.0
+        for ph in self.phases:
+            self.p.loop.call_at(t, lambda n=ph.n_clients: self._set_clients(n))
+            self.boundaries.append(t)
+            t += ph.duration
+        self.t_end = t
+
+    def _set_clients(self, n: int) -> None:
+        while len(self.clients) < n:
+            i = len(self.clients)
+            c = ClosedLoopClient(self.p, f"sess-{i}", self.cfg, self.rng)
+            self.clients.append(c)
+            c.start(delay=self.rng.uniform(0, 0.2))
+        for i, c in enumerate(self.clients):
+            if i < n and not c.active:
+                c.active = True
+                c.start(delay=self.rng.uniform(0, 0.2))
+            elif i >= n:
+                c.stop()

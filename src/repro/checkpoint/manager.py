@@ -1,0 +1,151 @@
+"""Atomic, keep-K, optionally-async checkpointing.
+
+Layout:  <dir>/step_<n>/  arrays.npz  +  meta.json  +  _COMPLETE
+Atomicity: write into ``<dir>/.tmp_<n>``, fsync, then ``os.rename`` —
+a crashed writer never leaves a half checkpoint that restore could pick
+up (restore only considers directories with the ``_COMPLETE`` marker).
+
+``save(..., blocking=False)`` hands the (host-fetched) pytree to a
+writer thread so the train loop overlaps checkpoint I/O with compute —
+the async-checkpoint trick every large run uses.  ``restore_latest``
+reshards onto the current mesh via the provided shardings (elastic
+restarts onto a different topology work as long as dims stay divisible).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | Path, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # -- save ----------------------------------------------------------------
+    _BITS = {1: np.uint8, 2: np.uint16, 4: np.uint32, 8: np.uint64}
+
+    def save(self, step: int, tree: Any, meta: Optional[dict] = None,
+             blocking: bool = True) -> None:
+        """``tree`` may contain jax Arrays (fetched here) or numpy."""
+        self.wait()                           # one async save at a time
+        leaves, treedef = jax.tree.flatten(tree)
+        host_leaves = [np.asarray(jax.device_get(x)) for x in leaves]
+        dtypes = []
+        payload = {}
+        for i, x in enumerate(host_leaves):
+            dtypes.append(str(x.dtype))
+            if x.dtype.kind not in "biufc":   # bf16/f8 etc: store raw bits
+                x = x.view(self._BITS[x.dtype.itemsize])
+            payload[f"leaf_{i}"] = x
+        meta = dict(meta or {})
+        meta["step"] = step
+        meta["treedef"] = str(treedef)
+        meta["n_leaves"] = len(host_leaves)
+        meta["dtypes"] = dtypes
+
+        if blocking:
+            self._write(step, payload, meta)
+        else:
+            t = threading.Thread(target=self._write_guarded,
+                                 args=(step, payload, meta), daemon=True)
+            self._thread = t
+            t.start()
+
+    def _write_guarded(self, step, payload, meta):
+        try:
+            self._write(step, payload, meta)
+        except BaseException as e:          # surfaced on next wait()
+            self._error = e
+
+    def _write(self, step: int, payload: dict, meta: dict) -> None:
+        tmp = self.dir / f".tmp_{step}"
+        final = self.dir / f"step_{step}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        np.savez(tmp / "arrays.npz", **payload)
+        (tmp / "meta.json").write_text(json.dumps(
+            {k: v for k, v in meta.items()}, default=str))
+        (tmp / "_COMPLETE").touch()
+        with open(tmp / "_COMPLETE", "rb") as f:
+            os.fsync(f.fileno())
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError("async checkpoint write failed") from err
+
+    def _gc(self) -> None:
+        steps = sorted(self.steps())
+        for s in steps[:-self.keep] if self.keep > 0 else []:
+            shutil.rmtree(self.dir / f"step_{s}", ignore_errors=True)
+
+    # -- restore -----------------------------------------------------------------
+    def steps(self) -> list[int]:
+        out = []
+        for p in self.dir.glob("step_*"):
+            if (p / "_COMPLETE").exists():
+                try:
+                    out.append(int(p.name.split("_", 1)[1]))
+                except ValueError:
+                    continue
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def restore(self, step: int, like: Any,
+                shardings: Optional[Any] = None) -> tuple[Any, dict]:
+        """Restore into the structure of ``like`` (a pytree of arrays or
+        ShapeDtypeStructs).  ``shardings``: optional matching pytree of
+        NamedShardings to place leaves onto the current mesh."""
+        path = self.dir / f"step_{step}"
+        if not (path / "_COMPLETE").exists():
+            raise FileNotFoundError(f"incomplete checkpoint: {path}")
+        with np.load(path / "arrays.npz") as z:
+            leaves = [z[f"leaf_{i}"] for i in range(len(z.files))]
+        meta = json.loads((path / "meta.json").read_text())
+        saved_dtypes = meta.get("dtypes")
+        if saved_dtypes:
+            leaves = [a.view(np.dtype(d)) if a.dtype.kind in "u"
+                      and np.dtype(d).kind not in "biufc" else a
+                      for a, d in zip(leaves, saved_dtypes)]
+        _, treedef = jax.tree.flatten(like)
+        assert treedef.num_leaves == len(leaves), \
+            f"leaf count mismatch: ckpt {len(leaves)} vs {treedef.num_leaves}"
+        ref = jax.tree.leaves(like)
+        cast = []
+        for a, r in zip(leaves, ref):
+            dt = getattr(r, "dtype", None)
+            cast.append(a.astype(dt) if dt is not None else a)
+        if shardings is not None:
+            flat_sh = treedef.flatten_up_to(shardings)
+            cast = [jax.device_put(a, s) if s is not None else a
+                    for a, s in zip(cast, flat_sh)]
+        return jax.tree.unflatten(treedef, cast), meta
+
+    def restore_latest(self, like: Any, shardings: Optional[Any] = None):
+        step = self.latest_step()
+        if step is None:
+            return None
+        tree, meta = self.restore(step, like, shardings)
+        return step, tree, meta

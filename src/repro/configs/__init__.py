@@ -1,0 +1,57 @@
+"""Architecture config registry.
+
+``get_config(name)`` / ``get_smoke(name)`` resolve the 10 assigned
+architectures plus the paper's own agentic-workload configs; ``ARCHS``
+lists the assigned ids in the assignment's order.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (FULL_ATTENTION, SHAPES, BlockSpec,
+                                ModelConfig, Segment, ShapeConfig,
+                                shape_applicable)
+
+ARCHS: tuple[str, ...] = (
+    "h2o-danube-3-4b",
+    "llama3-405b",
+    "command-r-plus-104b",
+    "gemma3-27b",
+    "arctic-480b",
+    "kimi-k2-1t-a32b",
+    "qwen2-vl-2b",
+    "hymba-1.5b",
+    "xlstm-350m",
+    "seamless-m4t-large-v2",
+)
+
+_EXTRA = ("tiny-agent", "lm-100m", "agent-7b")
+
+
+def _module(name: str) -> str:
+    if name in _EXTRA:
+        return "repro.configs.paper_agentic"
+    return "repro.configs." + name.replace("-", "_").replace(".", "_")
+
+
+def get_config(name: str) -> ModelConfig:
+    mod = importlib.import_module(_module(name))
+    if name in _EXTRA:
+        attr = {"tiny-agent": "TINY_AGENT", "lm-100m": "LM_100M",
+                "agent-7b": "AGENT_7B"}[name]
+        return getattr(mod, attr)
+    cfg = mod.CONFIG
+    assert cfg.name == name, (cfg.name, name)
+    return cfg
+
+
+def get_smoke(name: str) -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests."""
+    mod = importlib.import_module(_module(name))
+    return getattr(mod, "SMOKE", get_config(name))
+
+
+__all__ = [
+    "ARCHS", "SHAPES", "BlockSpec", "FULL_ATTENTION", "ModelConfig",
+    "Segment", "ShapeConfig", "get_config", "get_smoke", "shape_applicable",
+]

@@ -1,0 +1,27 @@
+"""The paper's contribution: a software-defined agentic serving stack.
+
+* metrics plane — core/metrics.py  (collectors, aggregation, specs)
+* data plane    — core/dataplane.py (the reconfigurable channel shim)
+* control plane — core/controller.py + core/registry.py + core/rules.py
+* intents       — core/intent.py   (declarative policy language)
+* policies      — core/policies.py (Fig 6/7 control programs)
+"""
+from repro.core.controller import (Action, ControlContext, Controller,
+                                   Policy)
+from repro.core.dataplane import Channel
+from repro.core.intent import IntentError, IntentPolicy, compile_intent
+from repro.core.metrics import (AGGREGATIONS, CentralPoller, Collector,
+                                MetricSpec, StateStore,
+                                register_aggregation)
+from repro.core.registry import Registry
+from repro.core.rules import AgentRule, RequestRule, RuleTable
+from repro.core.types import (AgentCard, Granularity, Message, Priority,
+                              Request, RequestState)
+
+__all__ = [
+    "AGGREGATIONS", "Action", "AgentCard", "AgentRule", "CentralPoller",
+    "Channel", "Collector", "ControlContext", "Controller", "Granularity",
+    "IntentError", "IntentPolicy", "Message", "MetricSpec", "Policy",
+    "Priority", "Registry", "Request", "RequestRule", "RequestState",
+    "RuleTable", "StateStore", "compile_intent", "register_aggregation",
+]

@@ -1,0 +1,171 @@
+"""Control plane (paper §3.1).
+
+A logically centralized controller that
+
+1. polls the metrics plane into its ``StateStore`` on a fixed interval
+   (the paper's centralized on-demand polling),
+2. runs installed **policies** — closed-loop programs written against the
+   store + registry (hand-written, or compiled from the declarative
+   intent language in core/intent.py),
+3. enforces decisions through the Table-1 ``set()/reset()`` surface and
+   the **rule table** (agent-level + request-level rules) the data plane
+   consults.
+
+Policies receive a ``ControlContext`` capability object rather than raw
+internals, which keeps control programs small and auditable — and gives
+us one choke-point to log every action (the audit trail the benchmarks
+print).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from repro.core.metrics import CentralPoller, StateStore
+from repro.core.registry import Registry
+from repro.core.rules import AgentRule, RequestRule, RuleTable
+from repro.core.types import Granularity
+from repro.sim.clock import EventLoop
+
+
+@dataclass
+class Action:
+    t: float
+    kind: str         # set | reset | rule | transfer | scale | note
+    target: str
+    detail: str
+
+
+class ControlContext:
+    """Capability surface handed to policies each tick."""
+
+    def __init__(self, controller: "Controller"):
+        self._c = controller
+        self.store: StateStore = controller.store
+        self.registry: Registry = controller.registry
+        self.rules: RuleTable = controller.rules
+
+    @property
+    def now(self) -> float:
+        return self._c.loop.now()
+
+    # -- metric sugar -----------------------------------------------------------
+    def metric(self, name: str, agg: Optional[str] = None,
+               window: float = float("inf"), default: float = 0.0) -> float:
+        return self.store.get(name, agg, window, default)
+
+    # -- Table-1 surface ---------------------------------------------------------
+    def set(self, target: str, knob: str, value) -> None:
+        cur = self._c.registry.get_param(target, knob)
+        if cur == value:
+            return                      # no-op sets don't thrash the system
+        self._c.registry.set(target, knob, value)
+        self._c._log("set", target, f"{knob}={value}")
+
+    def reset(self, target: str, knob: str) -> None:
+        before = self._c.registry.get_param(target, knob)
+        self._c.registry.reset(target, knob)
+        if self._c.registry.get_param(target, knob) != before:
+            self._c._log("reset", target, knob)
+
+    def get(self, target: str, knob: str):
+        return self._c.registry.get_param(target, knob)
+
+    # -- convenience wrappers ---------------------------------------------------
+    def granularity(self, channel: str, g) -> None:
+        self.set(channel, "granularity", Granularity(g))
+
+    def install(self, rule) -> None:
+        self._c.rules.install(rule)
+        self._c._log("rule", getattr(rule, "target", "request"), repr(rule))
+
+    def route(self, session: str, instance: str) -> None:
+        """Pin a session to an instance (request-level rule)."""
+        self._c.rules.remove_request_rules(
+            lambda r: r.session == session and r.route_to is not None)
+        self._c.rules.install(RequestRule(session=session,
+                                          route_to=instance))
+        self._c._log("rule", instance, f"route session={session}")
+
+    def transfer_kv(self, session: str, src: str, dst: str,
+                    proactive: bool = False) -> None:
+        """Cross-instance state transfer (§3.1's rich-control example)."""
+        if self._c.transfer_fn is None:
+            raise RuntimeError("no kv-transfer backend attached")
+        self._c.transfer_fn(session, src, dst, proactive)
+        self._c._log("transfer", f"{src}->{dst}",
+                     f"session={session} proactive={proactive}")
+
+    def note(self, target: str, detail: str) -> None:
+        self._c._log("note", target, detail)
+
+
+class Policy:
+    """Base class: closed-loop control program."""
+
+    name = "policy"
+
+    def on_tick(self, ctx: ControlContext) -> None:  # pragma: no cover
+        raise NotImplementedError
+
+    def on_event(self, ctx: ControlContext, kind: str, **kw) -> None:
+        """Optional push-path: agents raise events (task_start, task_done,
+        instance_failed) the controller forwards between polls."""
+
+
+class Controller:
+    def __init__(self, loop: EventLoop, registry: Registry,
+                 poller: CentralPoller, store: Optional[StateStore] = None,
+                 interval: float = 0.05):
+        self.loop = loop
+        self.registry = registry
+        self.poller = poller
+        self.store = store or poller.store
+        self.interval = interval
+        self.rules = RuleTable()
+        self.policies: list[Policy] = []
+        self.actions: list[Action] = []
+        self.transfer_fn: Optional[Callable] = None
+        self._running = False
+        self.ticks = 0
+
+    # -- policy management ---------------------------------------------------
+    def install(self, policy: Policy) -> None:
+        self.policies.append(policy)
+
+    def attach_transfer(self, fn: Callable) -> None:
+        self.transfer_fn = fn
+
+    # -- loop ------------------------------------------------------------------
+    def start(self) -> None:
+        if self._running:
+            return
+        self._running = True
+        self.loop.call_after(self.interval, self._tick)
+
+    def stop(self) -> None:
+        self._running = False
+
+    def _tick(self) -> None:
+        if not self._running:
+            return
+        now = self.loop.now()
+        self.poller.poll(now)
+        ctx = ControlContext(self)
+        for p in self.policies:
+            p.on_tick(ctx)
+        self.ticks += 1
+        self.loop.call_after(self.interval, self._tick)
+
+    # -- push events from agents ------------------------------------------------
+    def event(self, kind: str, **kw) -> None:
+        ctx = ControlContext(self)
+        for p in self.policies:
+            p.on_event(ctx, kind, **kw)
+
+    # -- audit ---------------------------------------------------------------------
+    def _log(self, kind: str, target: str, detail: str) -> None:
+        self.actions.append(Action(self.loop.now(), kind, target, detail))
+
+    def action_log(self, kind: Optional[str] = None) -> list[Action]:
+        return [a for a in self.actions if kind is None or a.kind == kind]

@@ -1,0 +1,256 @@
+"""Declarative intent language (paper §3.1 goal 3, §5 "Languages for
+Agentic Control").
+
+Infrastructure engineers express goals without touching control-plane
+internals; the compiler turns them into a closed-loop ``Policy``:
+
+    objective: maximize throughput under p95(pipeline.task_latency) <= 2.0
+
+    rule high_load: when mean(tester.queue_len, 2.0) > 8
+        => granularity dev->tester batch
+    rule mid_load: when mean(tester.queue_len, 2.0) > 2
+        => granularity dev->tester pipeline
+    rule low_load hold 0.5: when mean(tester.queue_len, 2.0) <= 2
+        => granularity dev->tester stream; reset tester-0.admit_priority_min
+
+Grammar (line oriented; '#' comments):
+
+    objective: (minimize|maximize) EXPR [under COND]
+    rule NAME [hold SECONDS]: when COND => ACTION (';' ACTION)*
+
+    COND   := TERM (('and'|'or') TERM)*
+    TERM   := AGG '(' METRIC [',' WINDOW] ')' CMP NUMBER
+    ACTION := set TARGET.KNOB VALUE | reset TARGET.KNOB
+            | granularity CHANNEL (batch|pipeline|stream)
+            | route SESSION INSTANCE | pace CHANNEL SECONDS
+            | note TEXT
+
+Rules are evaluated top-to-bottom each controller tick; **the first rule
+whose condition holds fires** (guarded-command semantics — put the most
+specific condition first), unless it is still within its ``hold``
+window.  ``set`` is idempotent at the controller, so a firing rule does
+not thrash knobs that already hold the target value.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from repro.core.controller import ControlContext, Policy
+from repro.core.metrics import AGGREGATIONS
+
+
+class IntentError(ValueError):
+    pass
+
+
+_CMP = {
+    "<=": lambda a, b: a <= b,
+    ">=": lambda a, b: a >= b,
+    "<": lambda a, b: a < b,
+    ">": lambda a, b: a > b,
+    "==": lambda a, b: a == b,
+    "!=": lambda a, b: a != b,
+}
+
+_TERM_RE = re.compile(
+    r"^\s*(?P<agg>\w+)\s*\(\s*(?P<metric>[\w.>\-]+)"
+    r"\s*(?:,\s*(?P<window>[\d.]+)\s*)?\)\s*"
+    r"(?P<cmp><=|>=|==|!=|<|>)\s*(?P<num>-?[\d.]+(?:e-?\d+)?)\s*$")
+
+
+@dataclass
+class Term:
+    agg: str
+    metric: str
+    window: float
+    cmp: str
+    value: float
+
+    def eval(self, ctx: ControlContext) -> bool:
+        v = ctx.metric(self.metric, self.agg, self.window,
+                       default=float("nan"))
+        if v != v:                      # NaN — metric not yet observed
+            return False
+        return _CMP[self.cmp](v, self.value)
+
+    def describe(self, ctx: ControlContext) -> str:
+        v = ctx.metric(self.metric, self.agg, self.window,
+                       default=float("nan"))
+        return f"{self.agg}({self.metric})={v:.4g} {self.cmp} {self.value}"
+
+
+@dataclass
+class Cond:
+    terms: list[Term]
+    ops: list[str]                     # 'and' | 'or' between terms
+
+    def eval(self, ctx: ControlContext) -> bool:
+        out = self.terms[0].eval(ctx)
+        for op, term in zip(self.ops, self.terms[1:]):
+            if op == "and":
+                out = out and term.eval(ctx)
+            else:
+                out = out or term.eval(ctx)
+        return out
+
+
+def _parse_value(s: str):
+    ls = s.lower()
+    if ls in ("true", "false"):
+        return ls == "true"
+    try:
+        return int(s)
+    except ValueError:
+        pass
+    try:
+        return float(s)
+    except ValueError:
+        return s
+
+
+def _parse_cond(text: str, lineno: int) -> Cond:
+    parts = re.split(r"\s+(and|or)\s+", text)
+    terms, ops = [], []
+    for i, p in enumerate(parts):
+        if i % 2 == 1:
+            ops.append(p)
+            continue
+        m = _TERM_RE.match(p)
+        if not m:
+            raise IntentError(f"line {lineno}: bad condition term {p!r}")
+        agg = m.group("agg")
+        if agg not in AGGREGATIONS:
+            raise IntentError(f"line {lineno}: unknown aggregation {agg!r}")
+        terms.append(Term(agg, m.group("metric"),
+                          float(m.group("window") or "inf"),
+                          m.group("cmp"), float(m.group("num"))))
+    return Cond(terms, ops)
+
+
+def _parse_action(text: str, lineno: int) -> Callable[[ControlContext], None]:
+    toks = text.split()
+    if not toks:
+        raise IntentError(f"line {lineno}: empty action")
+    op, args = toks[0], toks[1:]
+    if op == "set" and len(args) == 2:
+        target, _, knob = args[0].rpartition(".")
+        value = _parse_value(args[1])
+        if not target:
+            raise IntentError(f"line {lineno}: set needs TARGET.KNOB")
+        return lambda ctx: ctx.set(target, knob, value)
+    if op == "reset" and len(args) == 1:
+        target, _, knob = args[0].rpartition(".")
+        if not target:
+            raise IntentError(f"line {lineno}: reset needs TARGET.KNOB")
+        return lambda ctx: ctx.reset(target, knob)
+    if op == "granularity" and len(args) == 2:
+        chan, mode = args
+        return lambda ctx: ctx.granularity(chan, mode)
+    if op == "pace" and len(args) == 2:
+        chan, sec = args[0], float(args[1])
+        return lambda ctx: ctx.set(chan, "pace", sec)
+    if op == "route" and len(args) == 2:
+        sess, inst = args
+        return lambda ctx: ctx.route(sess, inst)
+    if op == "note":
+        text_ = " ".join(args)
+        return lambda ctx: ctx.note("intent", text_)
+    raise IntentError(f"line {lineno}: unknown action {text!r}")
+
+
+@dataclass
+class IntentRule:
+    name: str
+    cond: Cond
+    actions: list[Callable]
+    hold: float = 0.0
+    last_fired: float = -1e18
+    fire_count: int = 0
+
+    def maybe_fire(self, ctx: ControlContext) -> bool:
+        if not self.cond.eval(ctx):
+            return False
+        if ctx.now - self.last_fired < self.hold:
+            return True                 # matched but held: still consumes
+        self.last_fired = ctx.now
+        self.fire_count += 1
+        for act in self.actions:
+            act(ctx)
+        return True
+
+
+@dataclass
+class Objective:
+    direction: str                      # minimize | maximize
+    expr: str
+    constraint: Optional[str] = None
+
+    def describe(self) -> str:
+        s = f"{self.direction} {self.expr}"
+        if self.constraint:
+            s += f" under {self.constraint}"
+        return s
+
+
+class IntentPolicy(Policy):
+    """A compiled intent program: guarded rules over the state store."""
+
+    def __init__(self, objective: Optional[Objective],
+                 rules: list[IntentRule], source: str = ""):
+        self.objective = objective
+        self.rules = rules
+        self.source = source
+        self.name = "intent"
+
+    def on_tick(self, ctx: ControlContext) -> None:
+        for rule in self.rules:
+            if rule.maybe_fire(ctx):
+                return                 # guarded commands: first match wins
+
+    # -- introspection -----------------------------------------------------
+    def stats(self) -> dict[str, int]:
+        return {r.name: r.fire_count for r in self.rules}
+
+
+_RULE_RE = re.compile(
+    r"^rule\s+(?P<name>[\w\-]+)(?:\s+hold\s+(?P<hold>[\d.]+))?\s*:"
+    r"\s*when\s+(?P<cond>.+?)\s*=>\s*(?P<actions>.+)$")
+_OBJ_RE = re.compile(
+    r"^objective\s*:\s*(?P<dir>minimize|maximize)\s+(?P<expr>.+?)"
+    r"(?:\s+under\s+(?P<constraint>.+))?$")
+
+
+def compile_intent(text: str) -> IntentPolicy:
+    objective: Optional[Objective] = None
+    rules: list[IntentRule] = []
+    # allow rules to wrap onto continuation lines (indented)
+    logical: list[tuple[int, str]] = []
+    for i, raw in enumerate(text.splitlines(), 1):
+        line = raw.split("#", 1)[0].rstrip()
+        if not line.strip():
+            continue
+        if line[0].isspace() and logical:
+            n, prev = logical[-1]
+            logical[-1] = (n, prev + " " + line.strip())
+        else:
+            logical.append((i, line.strip()))
+    for lineno, line in logical:
+        m = _OBJ_RE.match(line)
+        if m:
+            objective = Objective(m.group("dir"), m.group("expr"),
+                                  m.group("constraint"))
+            continue
+        m = _RULE_RE.match(line)
+        if m:
+            cond = _parse_cond(m.group("cond"), lineno)
+            actions = [_parse_action(a.strip(), lineno)
+                       for a in m.group("actions").split(";") if a.strip()]
+            rules.append(IntentRule(m.group("name"), cond, actions,
+                                    hold=float(m.group("hold") or 0.0)))
+            continue
+        raise IntentError(f"line {lineno}: cannot parse {line!r}")
+    if not rules:
+        raise IntentError("intent program has no rules")
+    return IntentPolicy(objective, rules, source=text)

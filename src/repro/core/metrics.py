@@ -1,0 +1,356 @@
+"""Metrics plane (paper §3.2).
+
+Two-tier design, exactly as proposed:
+
+* ``Collector`` — the *local metric collector* at each node.  Writes go
+  into fixed-size ring buffers (the paper's "lightweight shared-memory
+  structures"): O(1) per observation, no allocation on the hot path, and
+  bounded memory regardless of traffic.
+* ``CentralPoller`` — the control plane's *centralized polling* façade:
+  it fetches windows from every registered collector **on demand** (no
+  constant streaming) and materializes aggregates into the controller's
+  ``StateStore``.
+* ``AGGREGATIONS`` — the *flexible aggregation functions*; callers can
+  register custom ones (``register_aggregation``) without touching the
+  plane, as §3.2 requires for mixed-volume metrics (per-token TPT vs
+  per-query TTFT).
+* ``MetricSpec`` — the *metric specification language* giving the
+  controller semantic understanding (direction, kind, unit).  Specs come
+  from structured dicts (the paper's JSON/YAML path) or from
+  ``MetricSpec.from_docstring`` — a deterministic parser over the
+  natural-language docstring grammar (the paper suggests an LLM here; we
+  keep the interface and make the transform rule-based so the container
+  needs no model).
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Callable, Iterable, Optional
+
+# ---------------------------------------------------------------------------
+# Ring buffer
+# ---------------------------------------------------------------------------
+
+
+class Ring:
+    """Fixed-capacity (value, time) ring; O(1) append, windowed reads."""
+
+    __slots__ = ("cap", "vals", "times", "idx", "count")
+
+    def __init__(self, cap: int = 256):
+        self.cap = cap
+        self.vals = [0.0] * cap
+        self.times = [0.0] * cap
+        self.idx = 0
+        self.count = 0
+
+    def push(self, value: float, t: float) -> None:
+        self.vals[self.idx] = value
+        self.times[self.idx] = t
+        self.idx = (self.idx + 1) % self.cap
+        self.count += 1
+
+    def window(self, since: float = -math.inf) -> list[tuple[float, float]]:
+        """(time, value) pairs newer than ``since``, oldest first."""
+        n = min(self.count, self.cap)
+        start = (self.idx - n) % self.cap
+        out = []
+        for i in range(n):
+            j = (start + i) % self.cap
+            if self.times[j] >= since:
+                out.append((self.times[j], self.vals[j]))
+        return out
+
+    def last(self) -> Optional[float]:
+        if self.count == 0:
+            return None
+        return self.vals[(self.idx - 1) % self.cap]
+
+
+# ---------------------------------------------------------------------------
+# Aggregation functions (flexible, user-extensible)
+# ---------------------------------------------------------------------------
+
+
+def _percentile(xs: list[float], q: float) -> float:
+    if not xs:
+        return math.nan
+    s = sorted(xs)
+    k = (len(s) - 1) * q
+    lo, hi = int(math.floor(k)), int(math.ceil(k))
+    if lo == hi:
+        return s[lo]
+    return s[lo] + (s[hi] - s[lo]) * (k - lo)
+
+
+AGGREGATIONS: dict[str, Callable[[list[float]], float]] = {
+    "mean": lambda xs: sum(xs) / len(xs) if xs else math.nan,
+    "max": lambda xs: max(xs) if xs else math.nan,
+    "min": lambda xs: min(xs) if xs else math.nan,
+    "sum": lambda xs: sum(xs),
+    "count": lambda xs: float(len(xs)),
+    "last": lambda xs: xs[-1] if xs else math.nan,
+    "p50": lambda xs: _percentile(xs, 0.50),
+    "p90": lambda xs: _percentile(xs, 0.90),
+    "p95": lambda xs: _percentile(xs, 0.95),
+    "p99": lambda xs: _percentile(xs, 0.99),
+}
+
+
+def register_aggregation(name: str,
+                         fn: Callable[[list[float]], float]) -> None:
+    """§3.2 'custom aggregation functions' hook."""
+    AGGREGATIONS[name] = fn
+
+
+def ewma(alpha: float = 0.3) -> Callable[[list[float]], float]:
+    def _fn(xs: list[float]) -> float:
+        acc = math.nan
+        for x in xs:
+            acc = x if math.isnan(acc) else alpha * x + (1 - alpha) * acc
+        return acc
+    return _fn
+
+
+register_aggregation("ewma", ewma())
+
+
+# ---------------------------------------------------------------------------
+# Metric specification (semantic understanding)
+# ---------------------------------------------------------------------------
+
+_KIND_WORDS = {
+    "latency": ("latency", "time", "delay", "seconds", "duration"),
+    "counter": ("count", "total", "number of", "cumulative"),
+    "utilization": ("utilization", "fraction", "occupancy", "pressure"),
+    "rate": ("per second", "rate", "throughput"),
+    "gauge": ("length", "depth", "size", "current"),
+}
+
+_LOWER_BETTER = ("lower is better", "minimize", "smaller is better",
+                 "lower the better", "should be low")
+_HIGHER_BETTER = ("higher is better", "maximize", "larger is better",
+                  "higher the better", "should be high")
+
+_UNIT_RE = re.compile(r"\bin\s+(seconds|ms|milliseconds|tokens|bytes|"
+                      r"pages|requests|fraction|percent)\b")
+
+
+@dataclass(frozen=True)
+class MetricSpec:
+    """Semantic descriptor the controller uses to interpret a metric.
+
+    direction: 'lower_better' | 'higher_better' | 'neutral' — e.g. when
+    the objective is throughput, high ``page_util`` is good but a high
+    ``queue_len`` is not; the spec is what encodes that (§3.2 goal 4).
+    """
+
+    name: str
+    kind: str = "gauge"            # gauge|counter|latency|rate|utilization
+    unit: str = ""
+    direction: str = "neutral"
+    description: str = ""
+    default_agg: str = "mean"
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "MetricSpec":
+        """Structured (JSON/YAML-shaped) spec file path."""
+        return cls(name=d["name"], kind=d.get("kind", "gauge"),
+                   unit=d.get("unit", ""),
+                   direction=d.get("direction", "neutral"),
+                   description=d.get("description", ""),
+                   default_agg=d.get("default_agg", "mean"))
+
+    @classmethod
+    def from_docstring(cls, name: str, doc: str) -> "MetricSpec":
+        """Deterministic NL → spec transform (rule-based stand-in for the
+        paper's LLM-assisted path; same interface)."""
+        low = doc.lower()
+        kind = "gauge"
+        for k, words in _KIND_WORDS.items():
+            if any(w in low for w in words):
+                kind = k
+                break
+        direction = "neutral"
+        if any(w in low for w in _LOWER_BETTER):
+            direction = "lower_better"
+        elif any(w in low for w in _HIGHER_BETTER):
+            direction = "higher_better"
+        elif kind == "latency":
+            direction = "lower_better"
+        m = _UNIT_RE.search(low)
+        unit = m.group(1) if m else ("seconds" if kind == "latency" else "")
+        default_agg = "p95" if kind == "latency" else (
+            "sum" if kind == "counter" else "mean")
+        return cls(name=name, kind=kind, unit=unit, direction=direction,
+                   description=doc.strip(), default_agg=default_agg)
+
+
+# Built-in specs for everything the engines/channels/agents export.
+BUILTIN_SPECS: dict[str, MetricSpec] = {}
+
+
+def _builtin(name: str, doc: str) -> None:
+    BUILTIN_SPECS[name] = MetricSpec.from_docstring(name, doc)
+
+
+_builtin("queue_len", "Current length of the admission queue; lower is better under latency goals.")
+_builtin("num_running", "Current number of running sequences.")
+_builtin("page_util", "KV page pool utilization as a fraction; higher is better for throughput, but 1.0 means preemption pressure.")
+_builtin("step_time", "Engine step time in seconds; lower is better.")
+_builtin("ttft", "Time to first token in seconds; lower is better.")
+_builtin("latency", "End-to-end request latency in seconds; lower is better.")
+_builtin("tpt", "Time per output token in seconds; lower is better.")
+_builtin("throughput", "Completed requests per second; higher is better.")
+_builtin("tokens_total", "Cumulative number of generated tokens.")
+_builtin("task_latency", "End-to-end pipeline task latency in seconds; lower is better.")
+_builtin("msgs_sent", "Cumulative number of messages sent on a channel.")
+_builtin("bytes_sent", "Cumulative number of bytes sent on a channel.")
+_builtin("link_delay", "Current queueing delay of the link in seconds; lower is better.")
+_builtin("transfer_bytes", "Cumulative bytes of KV-cache state moved between instances.")
+
+
+# ---------------------------------------------------------------------------
+# Local collector (tier 1)
+# ---------------------------------------------------------------------------
+
+
+class Collector:
+    """Per-node metric collector.
+
+    ``gauge`` overwrites a point-in-time series; ``observe`` appends an
+    event sample (latencies etc.); ``counter`` accumulates.  All three
+    land in ring buffers read by ``CentralPoller.poll`` — writers never
+    block on the control plane.
+    """
+
+    def __init__(self, node: str = "node0", cap: int = 512):
+        self.node = node
+        self.cap = cap
+        self._rings: dict[str, Ring] = {}
+        self._counters: dict[str, float] = {}
+        self._specs: dict[str, MetricSpec] = {}
+
+    # -- write side (hot path) ------------------------------------------------
+    def _ring(self, name: str) -> Ring:
+        r = self._rings.get(name)
+        if r is None:
+            r = self._rings[name] = Ring(self.cap)
+        return r
+
+    def gauge(self, name: str, value: float, t: float) -> None:
+        self._ring(name).push(float(value), t)
+
+    def observe(self, name: str, value: float, t: float) -> None:
+        self._ring(name).push(float(value), t)
+
+    def counter(self, name: str, delta: float, t: float) -> None:
+        total = self._counters.get(name, 0.0) + delta
+        self._counters[name] = total
+        self._ring(name).push(total, t)
+
+    # -- spec side --------------------------------------------------------------
+    def describe(self, name: str, spec_or_doc) -> None:
+        """Attach semantics: a MetricSpec, a dict (JSON path), or a
+        natural-language docstring (NL path)."""
+        if isinstance(spec_or_doc, MetricSpec):
+            self._specs[name] = spec_or_doc
+        elif isinstance(spec_or_doc, dict):
+            self._specs[name] = MetricSpec.from_dict({"name": name,
+                                                      **spec_or_doc})
+        else:
+            self._specs[name] = MetricSpec.from_docstring(name,
+                                                          str(spec_or_doc))
+
+    def spec(self, name: str) -> MetricSpec:
+        if name in self._specs:
+            return self._specs[name]
+        base = name.rsplit(".", 1)[-1]
+        return BUILTIN_SPECS.get(base, MetricSpec(name=name))
+
+    # -- read side (poller only) --------------------------------------------
+    def names(self) -> list[str]:
+        return list(self._rings)
+
+    def read(self, name: str, since: float = -math.inf):
+        r = self._rings.get(name)
+        return r.window(since) if r is not None else []
+
+    def last(self, name: str) -> Optional[float]:
+        r = self._rings.get(name)
+        return r.last() if r is not None else None
+
+
+# ---------------------------------------------------------------------------
+# State store + central poller (tier 2)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Series:
+    spec: MetricSpec
+    points: list[tuple[float, float]] = field(default_factory=list)
+
+    def agg(self, how: str, window: float = math.inf,
+            now: float = math.inf) -> float:
+        lo = (now - window) if math.isfinite(now) else -math.inf
+        xs = [v for (t, v) in self.points if t >= lo]
+        return AGGREGATIONS[how](xs)
+
+
+class StateStore:
+    """The controller's logical state store (§3.1 design point 3): the
+    freshest polled window of every metric, keyed ``node.metric``."""
+
+    def __init__(self):
+        self.series: dict[str, Series] = {}
+        self.polled_at: float = -math.inf
+
+    def update(self, name: str, spec: MetricSpec,
+               points: Iterable[tuple[float, float]]) -> None:
+        s = self.series.get(name)
+        if s is None:
+            s = self.series[name] = Series(spec)
+        s.spec = spec
+        s.points = list(points)
+
+    # -- query API used by policies / the intent language ---------------------
+    def get(self, name: str, agg: Optional[str] = None,
+            window: float = math.inf, default: float = math.nan) -> float:
+        s = self.series.get(name)
+        if s is None or not s.points:
+            return default
+        how = agg or s.spec.default_agg
+        v = s.agg(how, window, now=self.polled_at)
+        return default if (isinstance(v, float) and math.isnan(v)) else v
+
+    def names(self, pattern: str = "") -> list[str]:
+        return [n for n in self.series if pattern in n]
+
+    def spec(self, name: str) -> Optional[MetricSpec]:
+        s = self.series.get(name)
+        return s.spec if s else None
+
+
+class CentralPoller:
+    """On-demand pull of every collector's fresh window into the store."""
+
+    def __init__(self, store: StateStore, window: float = 5.0):
+        self.store = store
+        self.window = window
+        self.collectors: list[Collector] = []
+        self.polls = 0
+
+    def attach(self, collector: Collector) -> None:
+        if collector not in self.collectors:
+            self.collectors.append(collector)
+
+    def poll(self, now: float) -> None:
+        since = now - self.window
+        for c in self.collectors:
+            for name in c.names():
+                self.store.update(name, c.spec(name), c.read(name, since))
+        self.store.polled_at = now
+        self.polls += 1

@@ -1,0 +1,282 @@
+"""Control policies — the closed-loop programs the paper's evaluation
+exercises (Figs 6–7), plus guards used by examples/tests.
+
+Each is a plain ``Policy``: it reads the state store, and acts only
+through the ControlContext capability surface.  The same behaviours can
+be expressed in the declarative intent language (core/intent.py); these
+programmatic versions exist because Fig 6/7 need stateful logic
+(hysteresis counters, per-session placement maps) beyond the guarded
+commands the language targets.
+"""
+from __future__ import annotations
+
+import zlib
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.core.controller import ControlContext, Policy
+from repro.core.types import Granularity
+
+
+class AdaptiveGranularityPolicy(Policy):
+    """Fig 6: switch a channel's granularity with downstream load.
+
+    Load signal = queue length + running at the consumer engine(s).
+    Thresholds carry hysteresis (switch up at ``hi``, back down at
+    ``lo``) so the data plane doesn't flap around a boundary.
+    """
+
+    name = "adaptive-granularity"
+
+    def __init__(self, channel: str, consumers: list[str],
+                 stream_below: float = 2.0, batch_above: float = 8.0,
+                 window: float = 1.0, dwell: float = 1.5):
+        assert stream_below <= batch_above
+        self.channel = channel
+        self.consumers = consumers
+        self.stream_below = stream_below
+        self.batch_above = batch_above
+        self.window = window
+        self.dwell = dwell              # min residency in a mode (anti-flap)
+        self.mode: Optional[Granularity] = None
+        self.switches: list[tuple[float, Granularity]] = []
+
+    def _load(self, ctx: ControlContext) -> float:
+        total = 0.0
+        for c in self.consumers:
+            total += ctx.metric(f"{c}.queue_len", "mean", self.window)
+            total += ctx.metric(f"{c}.num_running", "mean", self.window)
+        return total
+
+    def on_tick(self, ctx: ControlContext) -> None:
+        load = self._load(ctx)
+        mode = self.mode or Granularity.PIPELINE
+        if load >= self.batch_above:
+            mode = Granularity.BATCH
+        elif load <= self.stream_below:
+            mode = Granularity.STREAM
+        elif self.mode is None:
+            mode = Granularity.PIPELINE
+        elif self.mode is Granularity.BATCH and load < self.batch_above * 0.6:
+            mode = Granularity.PIPELINE
+        elif self.mode is Granularity.STREAM and load > self.stream_below * 1.5:
+            mode = Granularity.PIPELINE
+        if mode is not self.mode:
+            if self.switches and ctx.now - self.switches[-1][0] < self.dwell:
+                return
+            ctx.granularity(self.channel, mode)
+            self.mode = mode
+            self.switches.append((ctx.now, mode))
+
+
+@dataclass
+class _SessionHome:
+    instance: str
+    context_len: int = 0
+
+
+class LoadBalancePolicy(Policy):
+    """Fig 7: keep tester instances balanced; migrate session KV state.
+
+    * ``mode='none'``   — static session→instance hash (the baseline).
+    * ``mode='reactive'`` — route to least-loaded; the destination pulls
+      session KV *after* the request arrives (transfer serializes with
+      the request).
+    * ``mode='hints'``  — on ``task_start`` (the upstream agent begins
+      generating) the controller *proactively* pushes the session KV to
+      the chosen instance, overlapping the transfer with generation —
+      the paper's 1.8× mechanism.
+    """
+
+    name = "load-balance"
+
+    def __init__(self, instances: list[str], mode: str = "hints",
+                 imbalance_min: float = 6.0, cooldown: float = 4.0,
+                 window: float = 0.5, pending_weight: float = 6.0,
+                 pending_horizon: float = 1.5):
+        assert mode in ("none", "reactive", "hints")
+        self.instances = instances
+        self.mode = mode
+        self.imbalance_min = imbalance_min
+        self.cooldown = cooldown            # min gap between migrations
+        self.window = window                # of the same session
+        # install-time accounting: the controller charges each routing
+        # decision to the target *before* the metrics can see it, else
+        # every session herds to the same briefly-cold instance
+        self.pending_weight = pending_weight
+        self.pending_horizon = pending_horizon
+        self._pending: dict[str, list[float]] = {i: [] for i in instances}
+        self.homes: dict[str, _SessionHome] = {}
+        self._last_move: dict[str, float] = {}
+        self.migrations = 0
+        self.hints_sent = 0
+
+    # -- helpers ----------------------------------------------------------------
+    def _static_instance(self, session: str) -> str:
+        h = zlib.crc32(session.encode())
+        return self.instances[h % len(self.instances)]
+
+    def _load(self, ctx: ControlContext, inst: str) -> float:
+        q = ctx.metric(f"{inst}.queue_len", "last", default=0.0)
+        r = ctx.metric(f"{inst}.num_running", "last", default=0.0)
+        pend = self._pending.get(inst, [])
+        horizon = ctx.now - self.pending_horizon
+        pend[:] = [t for t in pend if t >= horizon]
+        return q + r + self.pending_weight * len(pend)
+
+    def _pick(self, ctx: ControlContext) -> str:
+        return min(self.instances, key=lambda i: self._load(ctx, i))
+
+    def _charge(self, ctx: ControlContext, inst: str) -> None:
+        self._pending.setdefault(inst, []).append(ctx.now)
+
+    # -- event path (push, between polls) ------------------------------------
+    def on_event(self, ctx: ControlContext, kind: str, **kw) -> None:
+        if kind != "task_start":
+            return
+        session = kw["session"]
+        home = self.homes.get(session)
+        if self.mode == "none":
+            inst = self._static_instance(session)
+            if home is None:
+                self.homes[session] = _SessionHome(inst)
+                ctx.route(session, inst)
+            return
+        # dynamic: choose the least-loaded instance *now*
+        inst = self._pick(ctx)
+        if home is None:
+            self.homes[session] = _SessionHome(inst)
+            self._charge(ctx, inst)
+            ctx.route(session, inst)
+            return
+        if inst == home.instance:
+            self._charge(ctx, inst)
+            ctx.route(session, inst)
+            return
+        # migration is not free (KV moves, the destination warms up) —
+        # move only if the imbalance is material and this session hasn't
+        # just moved (cost-aware throttling, not per-message micromanaging)
+        gap = self._load(ctx, home.instance) - self._load(ctx, inst)
+        recently = ctx.now - self._last_move.get(session, -1e18)
+        if gap < self.imbalance_min or recently < self.cooldown:
+            self._charge(ctx, home.instance)
+            ctx.route(session, home.instance)
+            return
+        self._last_move[session] = ctx.now
+        self._charge(ctx, inst)
+        ctx.route(session, inst)
+        self.migrations += 1
+        if self.mode == "hints":
+            # proactive: start moving state NOW, while the developer is
+            # still generating — the transfer overlaps generation
+            ctx.transfer_kv(session, home.instance, inst, proactive=True)
+            self.hints_sent += 1
+        # reactive: no transfer here — the destination instance pulls the
+        # state only once the request arrives (serialized on the request)
+        home.instance = inst
+
+    def on_tick(self, ctx: ControlContext) -> None:
+        pass                            # all work happens on task_start
+
+
+class SpeculativeGatePolicy(Policy):
+    """Request-level rule from §3.1: block speculative sends while the
+    consumer is loaded; release when pressure clears."""
+
+    name = "speculative-gate"
+
+    def __init__(self, channel: str, consumers: list[str],
+                 gate_above: float = 4.0, window: float = 1.0):
+        self.channel = channel
+        self.consumers = consumers
+        self.gate_above = gate_above
+        self.window = window
+        self.gated = False
+
+    def on_tick(self, ctx: ControlContext) -> None:
+        load = sum(ctx.metric(f"{c}.queue_len", "mean", self.window)
+                   for c in self.consumers)
+        if load >= self.gate_above and not self.gated:
+            ctx.set(self.channel, "gate_speculative", True)
+            self.gated = True
+        elif load < self.gate_above * 0.5 and self.gated:
+            ctx.set(self.channel, "gate_speculative", False)
+            self.gated = False
+
+
+class SLOGuardPolicy(Policy):
+    """Intent example from §3.1: 'ensure p90 latency of interactive
+    requests meets the SLO' — demote background traffic and tighten
+    admission until the SLO holds, then relax."""
+
+    name = "slo-guard"
+
+    def __init__(self, latency_metric: str, slo: float, engine: str,
+                 background_channel: Optional[str] = None,
+                 window: float = 2.0):
+        self.latency_metric = latency_metric
+        self.slo = slo
+        self.engine = engine
+        self.background_channel = background_channel
+        self.window = window
+        self.tightened = False
+        self.violations = 0
+
+    def on_tick(self, ctx: ControlContext) -> None:
+        p90 = ctx.metric(self.latency_metric, "p90", self.window,
+                         default=float("nan"))
+        if p90 != p90:
+            return
+        if p90 > self.slo and not self.tightened:
+            self.violations += 1
+            ctx.set(self.engine, "admit_priority_min", 1)   # drop LOW
+            ctx.set(self.engine, "decode_first", True)
+            if self.background_channel:
+                ctx.granularity(self.background_channel, Granularity.BATCH)
+            self.tightened = True
+        elif p90 <= self.slo * 0.7 and self.tightened:
+            ctx.reset(self.engine, "admit_priority_min")
+            ctx.reset(self.engine, "decode_first")
+            if self.background_channel:
+                ctx.reset(self.background_channel, "granularity")
+            self.tightened = False
+
+
+class AutoscalePolicy(Policy):
+    """Elastic-scaling hook (§4 posture): ask the runtime to add/remove
+    instances when sustained load crosses thresholds.  The actual
+    spawn/drain is the runtime's job (runtime/elastic.py); the policy
+    only decides."""
+
+    name = "autoscale"
+
+    def __init__(self, instances: list[str], scale_up_at: float = 12.0,
+                 scale_down_at: float = 1.0, window: float = 2.0,
+                 cooldown: float = 5.0):
+        self.instances = instances
+        self.scale_up_at = scale_up_at
+        self.scale_down_at = scale_down_at
+        self.window = window
+        self.cooldown = cooldown
+        self._last = -1e18
+        self.decisions: list[tuple[float, str]] = []
+        self.scale_fn = None            # runtime attaches
+
+    def on_tick(self, ctx: ControlContext) -> None:
+        if ctx.now - self._last < self.cooldown:
+            return
+        loads = [ctx.metric(f"i.queue_len".replace("i", i), "mean",
+                            self.window) for i in self.instances]
+        mean_load = sum(loads) / max(len(loads), 1)
+        if mean_load >= self.scale_up_at:
+            self.decisions.append((ctx.now, "up"))
+            ctx.note("autoscale", f"scale up (load={mean_load:.1f})")
+            if self.scale_fn:
+                self.scale_fn(+1)
+            self._last = ctx.now
+        elif mean_load <= self.scale_down_at and len(self.instances) > 1:
+            self.decisions.append((ctx.now, "down"))
+            ctx.note("autoscale", f"scale down (load={mean_load:.1f})")
+            if self.scale_fn:
+                self.scale_fn(-1)
+            self._last = ctx.now

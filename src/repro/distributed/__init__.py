@@ -1,0 +1,9 @@
+from repro.distributed.sharding import (ShardingRules, batch_pspec,
+                                        cache_pspecs, maybe_constrain,
+                                        param_pspecs, param_shardings,
+                                        spec_for)
+
+__all__ = [
+    "ShardingRules", "batch_pspec", "cache_pspecs", "maybe_constrain",
+    "param_pspecs", "param_shardings", "spec_for",
+]

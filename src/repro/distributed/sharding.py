@@ -1,0 +1,244 @@
+"""Sharding rules: logical parameter axes → mesh axes.
+
+The model zoo annotates every parameter with logical axes
+("embed", "heads", "kv_heads", "ff", "vocab", "experts" — see
+models/params.P); this module turns those into ``PartitionSpec``s for a
+concrete mesh:
+
+* **TP** — heads / ff / vocab / experts shard over ``model``;
+* **FSDP** — the embed dim shards over ``data`` (ZeRO-3: weights
+  all-gather per layer inside the scan, grads reduce-scatter back);
+* **EP** — expert tables shard their leading experts dim over ``model``;
+* **DP** — the batch dim of activations shards over ``data`` (and
+  ``pod`` on the multi-pod mesh: pure DP across the DCN link);
+* **SP** — long-context decode shards the KV-cache *sequence* dim.
+
+Every assignment is divisibility-checked with fallback (e.g. GQA with 8
+KV heads on a 16-way model axis leaves KV-head dims replicated — the
+Megatron-style KV replication for TP > n_kv_heads), and a mesh axis is
+used at most once per tensor.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.configs.base import ModelConfig
+from repro.models import params as prm
+from repro.models import transformer
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """Priority-ordered (logical axis → mesh-axis candidates)."""
+
+    # candidates may be single mesh axes or tuples (joint sharding over
+    # several axes — e.g. FSDP over pod×data on the multi-pod mesh cuts
+    # per-device parameter state 2x at the price of DCN all-gathers)
+    rules: tuple[tuple[str, tuple, ...], ...] = (
+        ("experts", ("model",)),
+        ("heads", ("model",)),
+        ("kv_heads", ("model",)),
+        ("ff", ("model",)),
+        ("vocab", ("model",)),
+        ("embed", (("pod", "data"), "data")),
+    )
+    # activation batch axes, outermost first
+    batch_axes: tuple[str, ...] = ("pod", "data")
+    seq_axis: str = "model"          # sequence-parallel activations
+    cache_seq_axis: str = "data"     # long-context KV sequence sharding
+
+    def lookup(self, logical: str) -> tuple[str, ...]:
+        for name, axes in self.rules:
+            if name == logical:
+                return axes
+        return ()
+
+
+DEFAULT_RULES = ShardingRules()
+
+
+def _mesh_axis_sizes(mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)) \
+        if hasattr(mesh, "devices") else dict(mesh.shape)
+
+
+def spec_for(axes: tuple[Optional[str], ...], shape: tuple[int, ...],
+             mesh, rules: ShardingRules = DEFAULT_RULES) -> PartitionSpec:
+    """PartitionSpec for one tensor: logical axes + divisibility + each
+    mesh axis used at most once."""
+    sizes = _mesh_axis_sizes(mesh)
+    used: set[str] = set()
+    out: list = []
+    for logical, dim in zip(axes, shape):
+        chosen = None
+        if logical is not None:
+            for cand in rules.lookup(logical):
+                group = cand if isinstance(cand, tuple) else (cand,)
+                total = 1
+                ok = True
+                for ax in group:
+                    if ax not in sizes or ax in used:
+                        ok = False
+                        break
+                    total *= sizes[ax]
+                if ok and dim % total == 0:
+                    chosen = cand if isinstance(cand, tuple) else cand
+                    used.update(group)
+                    break
+        out.append(chosen)
+    return PartitionSpec(*out)
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def param_pspecs(cfg: ModelConfig, mesh,
+                 rules: ShardingRules = DEFAULT_RULES):
+    defs = transformer.model_defs(cfg)
+
+    def go(p: prm.P):
+        return spec_for(p.axes, p.shape, mesh, rules)
+
+    return jax.tree.map(go, defs, is_leaf=lambda x: isinstance(x, prm.P))
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh,
+                    rules: ShardingRules = DEFAULT_RULES):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_pspecs(cfg, mesh, rules))
+
+
+# ---------------------------------------------------------------------------
+# Activations / batch
+# ---------------------------------------------------------------------------
+
+
+def batch_pspec(mesh, rules: ShardingRules = DEFAULT_RULES,
+                batch_size: Optional[int] = None) -> PartitionSpec:
+    """Leading-axis data-parallel spec: ('pod','data') when both exist."""
+    sizes = _mesh_axis_sizes(mesh)
+    axes = [a for a in rules.batch_axes if a in sizes]
+    if batch_size is not None:
+        total = int(np.prod([sizes[a] for a in axes])) if axes else 1
+        while axes and batch_size % int(np.prod([sizes[a] for a in axes])):
+            axes.pop(0)              # drop outermost until divisible
+    return PartitionSpec(tuple(axes) if len(axes) > 1 else
+                         (axes[0] if axes else None))
+
+
+def maybe_constrain(x: jax.Array, spec: PartitionSpec) -> jax.Array:
+    """with_sharding_constraint that degrades to a no-op when tracing
+    without a mesh (single-device smoke tests)."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or mesh.empty or not mesh.axis_names:
+            return x
+        names = set(mesh.axis_names)
+        cleaned = []
+        for entry in spec:
+            if entry is None:
+                cleaned.append(None)
+            elif isinstance(entry, tuple):
+                kept = tuple(a for a in entry if a in names)
+                cleaned.append(kept if kept else None)
+            else:
+                cleaned.append(entry if entry in names else None)
+        return jax.lax.with_sharding_constraint(x, PartitionSpec(*cleaned))
+    except Exception:
+        return x
+
+
+def activation_pspec(mesh, seq: bool = True,
+                     rules: ShardingRules = DEFAULT_RULES) -> PartitionSpec:
+    """(B, S, D) layer-boundary activations: batch over data axes and —
+    Megatron-style sequence parallelism — S over the model axis (the
+    saved-for-backward residuals shrink by the TP degree)."""
+    sizes = _mesh_axis_sizes(mesh)
+    b_axes = tuple(a for a in rules.batch_axes if a in sizes)
+    b_entry = b_axes if len(b_axes) > 1 else (b_axes[0] if b_axes else None)
+    s_entry = rules.seq_axis if (seq and rules.seq_axis in sizes) else None
+    return PartitionSpec(b_entry, s_entry, None)
+
+
+# ---------------------------------------------------------------------------
+# Decode cache
+# ---------------------------------------------------------------------------
+
+
+def _cache_batch_axes(cfg: ModelConfig, max_context: int, enc_len: int):
+    """Locate the batch axis of every cache leaf by shape-diffing."""
+    c1 = jax.eval_shape(lambda: transformer.init_cache(cfg, 1, max_context,
+                                                       enc_len))
+    c2 = jax.eval_shape(lambda: transformer.init_cache(cfg, 2, max_context,
+                                                       enc_len))
+    l1, treedef = jax.tree.flatten(c1)
+    l2, _ = jax.tree.flatten(c2)
+
+    def axis(a, b):
+        for i, (x, y) in enumerate(zip(a.shape, b.shape)):
+            if x != y:
+                return i
+        raise ValueError(f"no batch axis in cache leaf {a.shape}")
+
+    return treedef, l1, [axis(a, b) for a, b in zip(l1, l2)]
+
+
+def cache_pspecs(cfg: ModelConfig, batch: int, max_context: int, mesh,
+                 enc_len: int = 0, rules: ShardingRules = DEFAULT_RULES,
+                 shard_seq: bool = False):
+    """PartitionSpec pytree for the decode cache.
+
+    * batch over the data axes;
+    * KV-head dim over ``model`` when divisible (TP);
+    * otherwise the ring *sequence* dim over ``model`` — GQA caches with
+      n_kv_heads < TP degree would replicate 16× and simply not fit
+      (e.g. llama3-405B at 32k×128: 2.2 TB of KV); sequence sharding is
+      the mesh-level flash-decoding layout (partial softmax combines);
+    * ``shard_seq`` (long-context, batch=1): sequence over ``data`` too.
+    """
+    sizes = _mesh_axis_sizes(mesh)
+    treedef, leaves, b_axes = _cache_batch_axes(cfg, max_context, enc_len)
+
+    b_mesh = tuple(a for a in rules.batch_axes if a in sizes)
+    while b_mesh and batch % int(np.prod([sizes[a] for a in b_mesh])):
+        b_mesh = b_mesh[1:] if len(b_mesh) > 1 else ()
+    b_entry = b_mesh if len(b_mesh) > 1 else (b_mesh[0] if b_mesh else None)
+
+    specs = []
+    for leaf, b_ax in zip(leaves, b_axes):
+        # NOTE: `leaves` are the batch=1 skeleton, used for layout only —
+        # never compare leaf.shape[b_ax] against the real batch size
+        entries: list = [None] * leaf.ndim
+        used: set[str] = set()
+        if b_entry is not None:
+            entries[b_ax] = b_entry
+            used.update(b_mesh)
+        # ring KV leaves look like (..., B, S_ring, H_kv, d_head)
+        is_kv = (leaf.ndim - b_ax) == 4 and leaf.shape[b_ax + 2] in (
+            cfg.n_kv_heads, cfg.n_heads)
+        if is_kv:
+            s_ax, h_ax = b_ax + 1, b_ax + 2
+            if shard_seq:
+                cand = rules.cache_seq_axis
+                if cand in sizes and cand not in used \
+                        and leaf.shape[s_ax] % sizes[cand] == 0:
+                    entries[s_ax] = cand
+                    used.add(cand)
+            if "model" in sizes and "model" not in used \
+                    and leaf.shape[h_ax] % sizes["model"] == 0:
+                entries[h_ax] = "model"
+                used.add("model")
+            elif "model" in sizes and "model" not in used \
+                    and entries[s_ax] is None \
+                    and leaf.shape[s_ax] % sizes["model"] == 0:
+                entries[s_ax] = "model"       # seq-TP fallback for GQA
+                used.add("model")
+        specs.append(PartitionSpec(*entries))
+    return jax.tree.unflatten(treedef, specs)

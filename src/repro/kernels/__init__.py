@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the serving substrate's compute hot spots.
+
+Each kernel ships as <name>.py (pl.pallas_call + BlockSpec), with the
+jit'd model-layout wrapper in ops.py and the pure-jnp oracle in ref.py.
+Validated on CPU via interpret=True (tests/test_kernels.py sweeps
+shapes/dtypes against the oracles).
+"""
+from repro.kernels import ops, ref
+from repro.kernels.ops import (decode_attention, flash_attention,
+                               grouped_matmul, ssm_scan)
+
+__all__ = ["ops", "ref", "decode_attention", "flash_attention",
+           "grouped_matmul", "ssm_scan"]

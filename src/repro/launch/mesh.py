@@ -1,0 +1,28 @@
+"""Production meshes.
+
+Functions, not module-level constants, so importing this module never
+touches jax device state (the dry-run must set XLA_FLAGS *before* any
+jax initialization)."""
+from __future__ import annotations
+
+import jax
+
+
+def _auto(n: int):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips/pod; ×2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Arbitrary mesh for tests / small-scale runs (e.g. (1,1))."""
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def mesh_chips(mesh) -> int:
+    return mesh.devices.size

@@ -1,0 +1,82 @@
+"""Serving-step factories: one decode step / one prefill over a sharded
+KV cache.  Lowered by the dry-run for the ``prefill_*`` / ``decode_*`` /
+``long_*`` cells and used live by the real-engine serving example (on a
+1-device mesh)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed import sharding as shd
+from repro.launch import specs as specs_mod
+from repro.models import transformer
+
+
+def make_serve_step(cfg: ModelConfig, mesh, shape: ShapeConfig,
+                    rules: shd.ShardingRules = shd.DEFAULT_RULES):
+    """One batched decode step: (params, tokens (B,1), cache) ->
+    (logits (B,V), cache)."""
+    assert shape.kind == "decode"
+    b = shape.global_batch
+    ctx = specs_mod.decode_context(shape)
+    enc = specs_mod._n_frames(shape.seq_len) if cfg.is_encdec else 0
+
+    p_spec = shd.param_pspecs(cfg, mesh, rules)
+    c_spec = shd.cache_pspecs(cfg, b, ctx, mesh, enc_len=enc, rules=rules,
+                              shard_seq=shape.name.startswith("long"))
+    b_spec = shd.batch_pspec(mesh, rules, batch_size=b)
+
+    def serve_step(params, tokens, cache):
+        logits, new_cache = transformer.decode_step(params, cfg, tokens,
+                                                    cache)
+        return logits, new_cache
+
+    named = lambda tree: jax.tree.map(lambda s: NamedSharding(mesh, s), tree)
+    jitted = jax.jit(
+        serve_step,
+        in_shardings=(named(p_spec), NamedSharding(mesh, b_spec),
+                      named(c_spec)),
+        out_shardings=(NamedSharding(mesh, b_spec), named(c_spec)),
+        donate_argnums=(2,))
+    return jitted, {"params": p_spec, "cache": c_spec, "batch": b_spec}
+
+
+def make_prefill_step(cfg: ModelConfig, mesh, shape: ShapeConfig,
+                      rules: shd.ShardingRules = shd.DEFAULT_RULES):
+    """One-shot prefill: (params, tokens (B,S), cache[, frontend]) ->
+    (last-token logits (B,V), cache)."""
+    assert shape.kind == "prefill"
+    b, s = shape.global_batch, shape.seq_len
+    enc = specs_mod._n_frames(shape.seq_len) if cfg.is_encdec else 0
+
+    p_spec = shd.param_pspecs(cfg, mesh, rules)
+    c_spec = shd.cache_pspecs(cfg, b, s, mesh, enc_len=enc, rules=rules)
+    b_spec = shd.batch_pspec(mesh, rules, batch_size=b)
+
+    named = lambda tree: jax.tree.map(lambda s: NamedSharding(mesh, s), tree)
+    extra = []
+    if cfg.frontend == "patch":
+        def prefill_step(params, tokens, cache, vision_embeds):
+            return transformer.prefill(params, cfg, tokens, cache,
+                                       vision_embeds=vision_embeds)
+        extra.append(NamedSharding(mesh, b_spec))
+    elif cfg.is_encdec:
+        def prefill_step(params, tokens, cache, frames):
+            return transformer.prefill(params, cfg, tokens, cache,
+                                       frames=frames)
+        extra.append(NamedSharding(mesh, b_spec))
+    else:
+        def prefill_step(params, tokens, cache):
+            return transformer.prefill(params, cfg, tokens, cache)
+
+    jitted = jax.jit(
+        prefill_step,
+        in_shardings=(named(p_spec), NamedSharding(mesh, b_spec),
+                      named(c_spec), *extra),
+        out_shardings=(NamedSharding(mesh, b_spec), named(c_spec)),
+        donate_argnums=(2,))
+    return jitted, {"params": p_spec, "cache": c_spec, "batch": b_spec}

@@ -1,0 +1,112 @@
+"""Abstract input specs for AOT lowering (the dry-run's currency).
+
+``input_specs(cfg, shape)`` returns ``ShapeDtypeStruct`` stand-ins for
+every model input of that (architecture × input-shape) cell — weak-type
+correct, shardable, zero allocation.  ``input_pspecs`` returns the
+matching PartitionSpec tree for a mesh.
+
+Modality frontends are stubs per the assignment: the VLM cell receives
+precomputed patch embeddings (``vision_embeds``), the audio cell
+precomputed frame embeddings (``frames``).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed import sharding as shd
+from repro.models import transformer
+
+VLM_PATCHES = 256          # stub patch-embedding count (qwen2-vl)
+AUDIO_FRAMES = 1024        # stub speech-frame count (seamless)
+DECODE_CACHE_PAD = 128     # ring slack so one decode step never wraps
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def _n_patches(seq_len: int) -> int:
+    return min(VLM_PATCHES, seq_len // 2)
+
+
+def _n_frames(seq_len: int) -> int:
+    return min(AUDIO_FRAMES, max(seq_len // 4, 8))
+
+
+def decode_context(shape: ShapeConfig) -> int:
+    return shape.seq_len + DECODE_CACHE_PAD
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, Any]:
+    """Abstract inputs for the step this cell lowers."""
+    b, s = shape.global_batch, shape.seq_len
+    dt = cfg.dtype
+    enc = _n_frames(s) if cfg.is_encdec else 0
+
+    if shape.kind == "train":
+        batch: dict[str, Any] = {"tokens": _sds((b, s), jnp.int32),
+                                 "labels": _sds((b, s), jnp.int32)}
+        if cfg.frontend == "patch":
+            batch["vision_embeds"] = _sds((b, _n_patches(s), cfg.d_model), dt)
+        if cfg.is_encdec:
+            batch["frames"] = _sds((b, enc, cfg.d_model), dt)
+        return {"batch": batch}
+
+    if shape.kind == "prefill":
+        cache = jax.eval_shape(
+            lambda: transformer.init_cache(cfg, b, s, enc))
+        out = {"tokens": _sds((b, s), jnp.int32), "cache": cache}
+        if cfg.frontend == "patch":
+            out["vision_embeds"] = _sds((b, _n_patches(s), cfg.d_model), dt)
+        if cfg.is_encdec:
+            out["frames"] = _sds((b, enc, cfg.d_model), dt)
+        return out
+
+    assert shape.kind == "decode"
+    ctx = decode_context(shape)
+    cache = jax.eval_shape(
+        lambda: transformer.init_cache(cfg, b, ctx, enc))
+    return {"tokens": _sds((b, 1), jnp.int32), "cache": cache}
+
+
+def input_pspecs(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                 rules: shd.ShardingRules = shd.DEFAULT_RULES):
+    """PartitionSpec tree matching ``input_specs``."""
+    b = shape.global_batch
+    bspec = shd.batch_pspec(mesh, rules, batch_size=b)
+    b_entry = bspec[0] if len(bspec) else None
+    enc = _n_frames(shape.seq_len) if cfg.is_encdec else 0
+
+    def bleading(ndim):
+        return PartitionSpec(b_entry, *([None] * (ndim - 1)))
+
+    if shape.kind == "train":
+        batch = {"tokens": bleading(2), "labels": bleading(2)}
+        if cfg.frontend == "patch":
+            batch["vision_embeds"] = bleading(3)
+        if cfg.is_encdec:
+            batch["frames"] = bleading(3)
+        return {"batch": batch}
+
+    if shape.kind == "prefill":
+        cache = shd.cache_pspecs(cfg, b, shape.seq_len, mesh, enc_len=enc,
+                                 rules=rules)
+        out = {"tokens": bleading(2), "cache": cache}
+        if cfg.frontend == "patch":
+            out["vision_embeds"] = bleading(3)
+        if cfg.is_encdec:
+            out["frames"] = bleading(3)
+        return out
+
+    ctx = decode_context(shape)
+    # long-context decode (batch too small to shard): sequence-shard the
+    # KV cache instead — mesh-level flash decoding
+    shard_seq = shape.name.startswith("long")
+    cache = shd.cache_pspecs(cfg, b, ctx, mesh, enc_len=enc, rules=rules,
+                             shard_seq=shard_seq)
+    return {"tokens": bleading(2), "cache": cache}

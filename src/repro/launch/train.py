@@ -1,0 +1,213 @@
+"""Training-step factory + CLI trainer.
+
+``make_train_step`` builds the jitted (params, opt_state, batch) →
+(params, opt_state, metrics) update for a (config, mesh):
+
+* grads via ``jax.value_and_grad`` over the model's loss;
+* optional **microbatch gradient accumulation** (``lax.scan`` over
+  global-batch slices — the activation-memory knob for the 100B+ cells);
+* optional **int8 cross-pod gradient compression with error feedback**
+  (shard_map over the ``pod`` axis; intra-pod reduction stays bf16);
+* sharded AdamW (optionally int8 moments) from repro.optim;
+* in/out shardings from the logical-axis rules, donated buffers.
+
+The same factory serves the real CPU training example (1-device mesh)
+and the 256/512-chip dry-run (abstract lowering only).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed import sharding as shd
+from repro.distributed.collectives import compressed_psum
+from repro.models import transformer
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+
+@dataclass(frozen=True)
+class TrainPlan:
+    microbatch: int = 1              # gradient-accumulation steps
+    accum_dtype: str = "float32"     # grad accumulator dtype
+    compress_grads: bool = False     # int8+EF psum over 'pod'
+    int8_moments: bool = False
+    donate: bool = True
+
+
+def default_plan(cfg: ModelConfig, shape: ShapeConfig,
+                 n_chips: int = 256) -> TrainPlan:
+    """Memory-fitting heuristics (validated by compiled memory_analysis;
+    overridden per-cell during hillclimbing)."""
+    n = transformer.param_count(cfg)
+    if n > 100e9:
+        return TrainPlan(microbatch=16, accum_dtype="bfloat16",
+                         int8_moments=True)
+    if n > 20e9:
+        return TrainPlan(microbatch=4, int8_moments=True)
+    return TrainPlan(microbatch=1)
+
+
+# ---------------------------------------------------------------------------
+# Sharding trees
+# ---------------------------------------------------------------------------
+
+
+def opt_pspecs(cfg: ModelConfig, mesh, acfg: AdamWConfig,
+               rules: shd.ShardingRules = shd.DEFAULT_RULES):
+    """Moments shard exactly like their parameters; int8 block scales
+    inherit the param spec minus the (re-blocked) last dim."""
+    p_specs = shd.param_pspecs(cfg, mesh, rules)
+    flat_p, p_treedef = jax.tree.flatten(p_specs)
+    sizes = dict(zip(mesh.axis_names, np.shape(mesh.devices)))
+
+    pshapes = transformer.model_defs(cfg)
+    from repro.models import params as prm
+    pshape_tree = prm.param_shapes(pshapes, jnp.dtype(cfg.dtype))
+    opt_shapes = jax.eval_shape(lambda p: adamw_init(p, acfg), pshape_tree)
+
+    def _axes_size(entry) -> int:
+        group = entry if isinstance(entry, tuple) else (entry,)
+        total = 1
+        for ax in group:
+            total *= sizes.get(ax, 1)
+        return total
+
+    if acfg.int8_moments:
+        # flatten order per param leaf: q then scale — handle pairwise
+        def map_q8(tree):
+            leaves, treedef = jax.tree.flatten(tree)
+            out = []
+            pi = 0
+            k = 0
+            while k < len(leaves):
+                q, scale = leaves[k], leaves[k + 1]
+                pspec = flat_p[pi]
+                out.append(pspec)
+                entries = list(pspec)[:scale.ndim]
+                entries += [None] * (scale.ndim - len(entries))
+                if entries and entries[-1] is not None \
+                        and scale.shape[-1] % _axes_size(entries[-1]):
+                    entries[-1] = None
+                out.append(PartitionSpec(*entries))
+                pi += 1
+                k += 2
+            return jax.tree.unflatten(treedef, out)
+        m_spec = map_q8(opt_shapes.m)
+        v_spec = map_q8(opt_shapes.v)
+    else:
+        m_spec = jax.tree.unflatten(p_treedef, flat_p)
+        v_spec = jax.tree.unflatten(p_treedef, flat_p)
+
+    return type(opt_shapes)(step=PartitionSpec(), m=m_spec, v=v_spec)
+
+
+# ---------------------------------------------------------------------------
+# The step
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, mesh, plan: Optional[TrainPlan] = None,
+                    acfg: Optional[AdamWConfig] = None,
+                    rules: shd.ShardingRules = shd.DEFAULT_RULES,
+                    shape: Optional[ShapeConfig] = None):
+    """Returns (jitted_step, shardings dict)."""
+    plan = plan or TrainPlan()
+    acfg = acfg or AdamWConfig(int8_moments=plan.int8_moments)
+    accum_dt = jnp.dtype(plan.accum_dtype)
+
+    p_spec = shd.param_pspecs(cfg, mesh, rules)
+    o_spec = opt_pspecs(cfg, mesh, acfg, rules)
+    bsz = shape.global_batch if shape is not None else None
+    b_spec = shd.batch_pspec(mesh, rules, batch_size=bsz)
+
+    def grads_of(params, mb):
+        (loss, metrics), grads = jax.value_and_grad(
+            transformer.loss_fn, has_aux=True)(params, cfg, mb)
+        return loss, metrics, grads
+
+    def step(params, opt_state, batch):
+        k = plan.microbatch
+        if k <= 1:
+            loss, metrics, grads = grads_of(params, batch)
+        else:
+            def slice_mb(x, i):
+                b = x.shape[0] // k
+                return jax.lax.dynamic_slice_in_dim(x, i * b, b, axis=0)
+
+            def body(acc, i):
+                mb = jax.tree.map(lambda x: slice_mb(x, i), batch)
+                loss, metrics, grads = grads_of(params, mb)
+                acc_g, acc_l = acc
+                acc_g = jax.tree.map(
+                    lambda a, g: a + g.astype(accum_dt) / k, acc_g, grads)
+                return (acc_g, acc_l + loss / k), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dt), params)
+            (grads, loss), _ = jax.lax.scan(
+                body, (zeros, jnp.zeros((), jnp.float32)),
+                jnp.arange(k))
+            metrics = {"loss": loss}
+
+        new_params, new_opt, opt_metrics = adamw_update(
+            grads, opt_state, params, acfg)
+        metrics = {**metrics, **opt_metrics}
+        return new_params, new_opt, metrics
+
+    dev_kw = {}
+    if plan.donate:
+        dev_kw["donate_argnums"] = (0, 1)
+    named = lambda tree: jax.tree.map(lambda s: NamedSharding(mesh, s), tree)
+    jitted = jax.jit(
+        step,
+        in_shardings=(named(p_spec), named(o_spec),
+                      # prefix-broadcast over the batch dict: every input
+                      # shards its leading (batch) dim only
+                      NamedSharding(mesh, b_spec)),
+        out_shardings=(named(p_spec), named(o_spec), None),
+        **dev_kw)
+    shardings = {"params": p_spec, "opt": o_spec, "batch": b_spec}
+    return jitted, shardings
+
+
+def abstract_state(cfg: ModelConfig, acfg: AdamWConfig):
+    """(params, opt_state) as ShapeDtypeStructs — dry-run currency."""
+    from repro.models import params as prm
+    p = prm.param_shapes(transformer.model_defs(cfg), jnp.dtype(cfg.dtype))
+    o = jax.eval_shape(lambda pp: adamw_init(pp, acfg), p)
+    return p, o
+
+
+# ---------------------------------------------------------------------------
+# Compressed-gradient variant (pod-axis int8 + error feedback)
+# ---------------------------------------------------------------------------
+
+
+def make_compressed_grad_fn(cfg: ModelConfig, mesh):
+    """Grad all-reduce across pods in int8 with error feedback, inside
+    shard_map; everything else stays GSPMD.  Only built when the mesh has
+    a 'pod' axis."""
+    assert "pod" in mesh.axis_names
+    from jax.experimental.shard_map import shard_map
+
+    def xpod_mean(grads, ef):
+        fn = lambda g, e: compressed_psum(g, e, "pod")
+        spec = PartitionSpec()        # per-pod replicated view of grads
+
+        def inner(g, e):
+            return compressed_psum(g, e, "pod")
+
+        return shard_map(
+            inner, mesh=mesh,
+            in_specs=(PartitionSpec("pod"), PartitionSpec("pod")),
+            out_specs=(PartitionSpec("pod"), PartitionSpec("pod")),
+            check_rep=False)(grads, ef)
+
+    return xpod_mean

@@ -1,0 +1,15 @@
+"""Model zoo public API.
+
+>>> from repro import models
+>>> cfg = get_smoke("llama3-405b")
+>>> params = models.init(cfg, jax.random.key(0))
+>>> logits, aux = models.forward(params, cfg, tokens)
+"""
+from repro.models.transformer import (decode_step, default_positions, encode,
+                                      forward, init, init_cache, loss_fn,
+                                      model_defs, param_count, prefill)
+
+__all__ = [
+    "decode_step", "default_positions", "encode", "forward", "init",
+    "init_cache", "loss_fn", "model_defs", "param_count", "prefill",
+]

@@ -1,0 +1,195 @@
+"""Block-level assembly: one (defs, apply, cache) triple per BlockSpec kind.
+
+``block_apply`` has three modes sharing parameters:
+  'train'   — full sequence, no cache IO (losses / aux returned)
+  'prefill' — full sequence, writes decode state (KV tail / final SSM state)
+  'step'    — incremental: write-then-attend KV, O(1) recurrent updates
+
+Cache pytrees are built by ``init_block_cache`` and mirrored as
+ShapeDtypeStructs by the dry-run via ``jax.eval_shape``.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import BlockSpec, ModelConfig
+from repro.models import ssm
+from repro.models.attention import (CrossKV, KVCache, attn_defs,
+                                    cross_attention, cross_attention_cached,
+                                    cross_kv_precompute, init_kv_cache,
+                                    kv_cache_size, self_attention,
+                                    self_attention_cached,
+                                    self_attention_prefill)
+from repro.models.layers import mlp, mlp_defs, rmsnorm, rmsnorm_defs
+from repro.models.moe import MoEStats, moe_defs, moe_ffn
+
+
+# ---------------------------------------------------------------------------
+# Defs
+# ---------------------------------------------------------------------------
+
+
+def block_defs(cfg: ModelConfig, spec: BlockSpec) -> dict:
+    if spec.kind == "mlstm":
+        return ssm.mlstm_defs(cfg)
+    if spec.kind == "slstm":
+        return ssm.slstm_defs(cfg)
+    if spec.kind == "hymba":
+        return {
+            "norm1": rmsnorm_defs(cfg.d_model),
+            "attn": attn_defs(cfg),
+            "mamba": ssm.mamba_defs(cfg),
+            "norm2": rmsnorm_defs(cfg.d_model),
+            "mlp": mlp_defs(cfg.d_model, cfg.d_ff),
+        }
+    # attn / enc / dec
+    defs: dict[str, Any] = {
+        "norm1": rmsnorm_defs(cfg.d_model),
+        "attn": attn_defs(cfg),
+    }
+    if spec.cross_attention:
+        defs["norm_x"] = rmsnorm_defs(cfg.d_model)
+        defs["cross"] = attn_defs(cfg, cross=True)
+    if not spec.parallel_block:
+        defs["norm2"] = rmsnorm_defs(cfg.d_model)
+    if spec.moe:
+        defs["moe"] = moe_defs(cfg)
+        if spec.dense_residual:
+            defs["mlp"] = mlp_defs(cfg.d_model, cfg.d_ff)
+    else:
+        defs["mlp"] = mlp_defs(cfg.d_model, cfg.d_ff)
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# Cache init
+# ---------------------------------------------------------------------------
+
+
+def init_block_cache(cfg: ModelConfig, spec: BlockSpec, batch: int,
+                     max_context: int, dtype,
+                     enc_len: int = 0):
+    """Decode-state pytree for one layer of this block kind."""
+    if spec.kind == "mlstm":
+        return {"h": ssm.init_mlstm_state(batch, cfg)}
+    if spec.kind == "slstm":
+        return {"s": ssm.init_slstm_state(batch, cfg)}
+    kvsize = kv_cache_size(spec, max_context, cfg.attn_chunk)
+    kv = init_kv_cache(batch, kvsize, cfg.n_kv_heads, cfg.d_head, dtype)
+    if spec.kind == "hymba":
+        return {"kv": kv, "ssm": ssm.init_ssm_state(batch, cfg, dtype)}
+    cache: dict[str, Any] = {"kv": kv}
+    if spec.cross_attention:
+        cache["cross"] = CrossKV(
+            k=jnp.zeros((batch, enc_len, cfg.n_kv_heads, cfg.d_head), dtype),
+            v=jnp.zeros((batch, enc_len, cfg.n_kv_heads, cfg.d_head), dtype))
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Apply
+# ---------------------------------------------------------------------------
+
+
+class BlockOut(NamedTuple):
+    x: jax.Array
+    cache: Any                 # updated cache (or None in train mode)
+    aux: jax.Array             # scalar aux loss (MoE load balance)
+
+
+def _ffn(params: dict, x: jax.Array, cfg: ModelConfig,
+         spec: BlockSpec) -> tuple[jax.Array, jax.Array]:
+    aux = jnp.zeros((), jnp.float32)
+    if spec.moe:
+        y, stats = moe_ffn(params["moe"], x, cfg, spec)
+        aux = stats.aux_loss
+        if spec.dense_residual:
+            y = y + mlp(params["mlp"], x)
+        return y, aux
+    return mlp(params["mlp"], x), aux
+
+
+def block_apply(params: dict, x: jax.Array, cfg: ModelConfig,
+                spec: BlockSpec, positions: jax.Array, mode: str,
+                cache=None, memory: Optional[jax.Array] = None) -> BlockOut:
+    """x: (B,S,d); positions: (B,S) or (B,S,3)."""
+    zero = jnp.zeros((), jnp.float32)
+
+    if spec.kind == "mlstm":
+        if mode == "step":
+            y, h = ssm.mlstm_block_step(params, x, cache["h"], cfg)
+            return BlockOut(y, {"h": h}, zero)
+        y, h = ssm.mlstm_block(params, x, cfg)
+        return BlockOut(y, {"h": h} if mode == "prefill" else None, zero)
+
+    if spec.kind == "slstm":
+        if mode == "step":
+            y, s = ssm.slstm_block_step(params, x, cache["s"], cfg)
+            return BlockOut(y, {"s": s}, zero)
+        y, s = ssm.slstm_block(params, x, cfg)
+        return BlockOut(y, {"s": s} if mode == "prefill" else None, zero)
+
+    if spec.kind == "hymba":
+        xr = rmsnorm(params["norm1"], x, cfg.norm_eps)
+        if mode == "train":
+            a = self_attention(params["attn"], xr, cfg, spec, positions)
+            m, _ = ssm.mamba_branch(params["mamba"], xr, cfg)
+            new_cache = None
+        elif mode == "prefill":
+            a, kv = self_attention_prefill(params["attn"], xr, cache["kv"],
+                                           cfg, spec, positions)
+            m, st = ssm.mamba_branch(params["mamba"], xr, cfg)
+            new_cache = {"kv": kv, "ssm": st}
+        else:
+            a, kv = self_attention_cached(params["attn"], xr, cache["kv"],
+                                          cfg, spec, positions)
+            m, st = ssm.mamba_branch_step(params["mamba"], xr,
+                                          cache["ssm"], cfg)
+            new_cache = {"kv": kv, "ssm": st}
+        x = x + 0.5 * (a + m)
+        xr2 = rmsnorm(params["norm2"], x, cfg.norm_eps)
+        y, aux = _ffn(params, xr2, cfg, spec)
+        return BlockOut(x + y, new_cache, aux)
+
+    # --- attn / enc / dec -----------------------------------------------
+    causal = spec.kind != "enc"
+    xr = rmsnorm(params["norm1"], x, cfg.norm_eps)
+    new_cache = dict(cache) if cache is not None else None
+
+    if mode == "train":
+        a = self_attention(params["attn"], xr, cfg, spec, positions,
+                           causal=causal)
+    elif mode == "prefill":
+        a, kv = self_attention_prefill(params["attn"], xr, cache["kv"], cfg,
+                                       spec, positions)
+        new_cache["kv"] = kv
+    else:
+        a, kv = self_attention_cached(params["attn"], xr, cache["kv"], cfg,
+                                      spec, positions)
+        new_cache["kv"] = kv
+
+    if spec.parallel_block:
+        # cohere: attention and FFN read the same normed input, summed
+        y, aux = _ffn(params, xr, cfg, spec)
+        return BlockOut(x + a + y, new_cache, aux)
+
+    x = x + a
+
+    if spec.cross_attention:
+        xq = rmsnorm(params["norm_x"], x, cfg.norm_eps)
+        if mode == "train":
+            c = cross_attention(params["cross"], xq, memory, cfg)
+        elif mode == "prefill":
+            ckv = cross_kv_precompute(params["cross"], memory)
+            c = cross_attention_cached(params["cross"], xq, ckv)
+            new_cache["cross"] = ckv
+        else:
+            c = cross_attention_cached(params["cross"], xq, cache["cross"])
+        x = x + c
+
+    xr2 = rmsnorm(params["norm2"], x, cfg.norm_eps)
+    y, aux = _ffn(params, xr2, cfg, spec)
+    return BlockOut(x + y, new_cache, aux)

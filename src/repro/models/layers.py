@@ -1,0 +1,178 @@
+"""Shared neural building blocks: norms, rotary embeddings (incl. M-RoPE),
+dense MLPs, embeddings.  Pure functions over parameter pytrees."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import P, tp
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_defs(d: int) -> dict:
+    return {"scale": P((d,), (None,), init="ones", dtype="float32")}
+
+
+def rmsnorm(params: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"]).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(d_head: int, theta: float) -> jax.Array:
+    half = d_head // 2
+    return theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               mrope_sections: tuple[int, ...] = ()) -> jax.Array:
+    """x: (B, S, H, dh).  positions: (B, S) int32, or (B, S, 3) for M-RoPE.
+
+    M-RoPE (qwen2-vl): the dh/2 frequency channels are partitioned into
+    ``mrope_sections`` groups, each driven by one of the (t, h, w) position
+    streams.
+    """
+    b, s, h, dh = x.shape
+    half = dh // 2
+    freqs = rope_freqs(dh, theta)                     # (half,)
+    if mrope_sections:
+        assert sum(mrope_sections) == half, (mrope_sections, half)
+        assert positions.ndim == 3 and positions.shape[-1] == len(mrope_sections)
+        sec_ids = jnp.repeat(
+            jnp.arange(len(mrope_sections)),
+            jnp.array(mrope_sections),
+            total_repeat_length=half)                  # (half,)
+        pos = jnp.take_along_axis(
+            positions.astype(jnp.float32),             # (B, S, 3)
+            jnp.broadcast_to(sec_ids[None, None, :], (b, s, half)),
+            axis=-1)                                   # (B, S, half)
+    else:
+        if positions.ndim == 3:
+            positions = positions[..., 0]
+        pos = positions.astype(jnp.float32)[..., None]  # (B, S, 1)
+    angles = pos * freqs                               # (B, S, half)
+    sin = jnp.sin(angles)[:, :, None, :]
+    cos = jnp.cos(angles)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+
+def mlp_defs(d: int, ff: int) -> dict:
+    return {
+        "w_in": P((d, ff), ("embed", "ff")),
+        "w_gate": P((d, ff), ("embed", "ff")),
+        "w_out": P((ff, d), ("ff", "embed")),
+    }
+
+
+def mlp(params: dict, x: jax.Array) -> jax.Array:
+    h = jnp.einsum("...d,df->...f", x, tp(params["w_in"], None, "model"))
+    g = jnp.einsum("...d,df->...f", x, tp(params["w_gate"], None, "model"))
+    h = h * jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype)
+    return jnp.einsum("...f,fd->...d", h, tp(params["w_out"], "model", None))
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embed_defs(vocab: int, d: int) -> dict:
+    return {"table": P((vocab, d), ("vocab", "embed"), scale=1.0)}
+
+
+def embed(params: dict, tokens: jax.Array) -> jax.Array:
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed_defs(d: int, vocab: int) -> dict:
+    return {"w": P((d, vocab), ("embed", "vocab"))}
+
+
+def unembed(params: dict, x: jax.Array, softcap: float = 0.0) -> jax.Array:
+    logits = jnp.einsum("...d,dv->...v", x, tp(params["w"], None, "model"))
+    if softcap > 0.0:
+        logits = (jnp.tanh(logits.astype(jnp.float32) / softcap)
+                  * softcap).astype(logits.dtype)
+    return logits
+
+
+def unembed_tied(embed_params: dict, x: jax.Array,
+                 softcap: float = 0.0) -> jax.Array:
+    logits = jnp.einsum("...d,vd->...v", x, embed_params["table"])
+    if softcap > 0.0:
+        logits = (jnp.tanh(logits.astype(jnp.float32) / softcap)
+                  * softcap).astype(logits.dtype)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array,
+                 mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean next-token cross entropy.  logits (..., V) f32-upcast."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def chunked_unembed_xent(logits_fn, x: jax.Array, labels: jax.Array,
+                         mask: jax.Array, chunk: int) -> jax.Array:
+    """Cross entropy without materializing the full (B, S, V) logits.
+
+    Scans the sequence in ``chunk``-token slices; each slice computes its
+    own logits (``logits_fn`` = unembed closure) and reduces to scalars
+    (sum-nll, sum-mask) immediately.  For a 128k-vocab 4k-seq train step
+    this is the difference between ~TB and ~GB of live activations — the
+    standard big-vocab loss treatment.  Exact, not an approximation.
+    """
+    b, s = labels.shape
+    if chunk <= 0 or s <= chunk:
+        return softmax_xent(logits_fn(x), labels, mask)
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    n = x.shape[1] // chunk
+    xs = (x.reshape(b, n, chunk, -1).swapaxes(0, 1),
+          labels.reshape(b, n, chunk).swapaxes(0, 1),
+          mask.reshape(b, n, chunk).swapaxes(0, 1))
+
+    def body(acc, slc):
+        xc, lc, mc = slc
+        logits = logits_fn(xc).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        nll_sum, m_sum = acc
+        return (nll_sum + jnp.sum((logz - gold) * mc),
+                m_sum + jnp.sum(mc)), None
+
+    (nll_sum, m_sum), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), xs)
+    return nll_sum / jnp.maximum(m_sum, 1.0)

@@ -1,0 +1,152 @@
+"""Mixture-of-Experts FFN with sort-based (dropping) dispatch.
+
+Dispatch is gather/scatter-based rather than one-hot-einsum-based, so the
+compiled FLOPs stay proportional to *active* parameters (top_k / E of the
+dense-equivalent) — this keeps the roofline's MODEL_FLOPS / HLO_FLOPs
+ratio honest and is the layout the ``grouped_matmul`` Pallas kernel
+consumes on TPU (experts × capacity × d tiles).
+
+Expert weights carry the ``experts`` logical axis → sharded over the
+``model`` mesh axis (expert parallelism); the (E, C, d) dispatch buffer is
+sharded the same way, so GSPMD materializes the dispatch/return as
+all-to-alls over ``model``.
+
+Supports: top-k routing with capacity dropping, shared experts (kimi),
+dense residual branch (arctic), and a load-balancing auxiliary loss.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import BlockSpec, ModelConfig
+from repro.models.layers import mlp, mlp_defs
+from repro.models.params import P, tp
+
+
+def moe_defs(cfg: ModelConfig) -> dict:
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.d_ff_expert
+    defs = {
+        "router": P((d, e), ("embed", None), dtype="float32"),
+        "w_in": P((e, d, f), ("experts", "embed", "ff")),
+        "w_gate": P((e, d, f), ("experts", "embed", "ff")),
+        "w_out": P((e, f, d), ("experts", "ff", "embed")),
+    }
+    if cfg.n_shared_experts > 0:
+        defs["shared"] = mlp_defs(d, f * cfg.n_shared_experts)
+    return defs
+
+
+def capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    c = -(-n_tokens * cfg.top_k // cfg.n_experts)        # ceil
+    c = int(c * cfg.capacity_factor) + 1
+    return -(-c // 8) * 8                                # round up to 8
+
+
+class MoEStats(NamedTuple):
+    aux_loss: jax.Array        # load-balance loss (Switch-style)
+    dropped_frac: jax.Array    # fraction of (token, expert) slots dropped
+
+
+def _moe_tokens(params: dict, xt: jax.Array,
+                cfg: ModelConfig) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Token-level MoE core: xt (T, d) -> (y (T, d), aux, dropped)."""
+    t, d = xt.shape
+    e, k = cfg.n_experts, cfg.top_k
+
+    # --- routing (f32) -----------------------------------------------------
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                        params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                     # (T, E)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)             # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # --- load-balance aux loss ---------------------------------------------
+    density = jnp.mean(jax.nn.one_hot(expert_ids, e, dtype=jnp.float32),
+                       axis=(0, 1))                             # (E,)
+    prop = jnp.mean(probs, axis=0)                              # (E,)
+    aux = jnp.sum(density * prop) * e
+
+    # --- sort-based dispatch ------------------------------------------------
+    c = capacity(t, cfg)
+    flat_expert = expert_ids.reshape(-1)                        # (T*k,)
+    order = jnp.argsort(flat_expert, stable=True)               # group by expert
+    sorted_expert = flat_expert[order]
+    first = jnp.searchsorted(sorted_expert, sorted_expert, side="left")
+    pos_in_e = jnp.arange(t * k) - first                        # rank in group
+    keep = pos_in_e < c
+    dest = jnp.where(keep, sorted_expert * c + pos_in_e, e * c) # OOB -> drop
+
+    token_of = order // k                                       # source token
+    x_sorted = xt[token_of]                                     # (T*k, d)
+    buf = jnp.zeros((e * c, d), xt.dtype).at[dest].set(
+        x_sorted, mode="drop")
+    # EP: the capacity buffer shards over the expert dim like the expert
+    # weights (under vmap the group dim stays data-sharded → the expert
+    # matmuls are 2-D sharded data×model); this reshard IS the all-to-all
+    buf = tp(buf.reshape(e, c, d), "model", None, None)
+
+    # --- expert computation (grouped matmul layout) -------------------------
+    h = jnp.einsum("ecd,edf->ecf", buf, tp(params["w_in"], "model", None, None))
+    g = jnp.einsum("ecd,edf->ecf", buf, tp(params["w_gate"], "model", None, None))
+    h = h * jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, tp(params["w_out"], "model", None, None))    # (E, C, d)
+
+    # --- return + combine ----------------------------------------------------
+    safe_dest = jnp.where(keep, dest, 0)
+    y_sorted = out_buf.reshape(e * c, d)[safe_dest]
+    y_sorted = jnp.where(keep[:, None], y_sorted, 0)
+    y_flat = jnp.zeros((t * k, d), xt.dtype).at[order].set(y_sorted)
+    gates = gate_vals.reshape(t * k).astype(jnp.float32)
+    y = (y_flat.reshape(t, k, d).astype(jnp.float32)
+         * gates.reshape(t, k, 1)).sum(axis=1)
+    return y.astype(xt.dtype), aux, 1.0 - jnp.mean(keep.astype(jnp.float32))
+
+
+GROUPWISE_MIN_TOKENS = 256
+
+
+def moe_ffn(params: dict, x: jax.Array, cfg: ModelConfig,
+            spec: BlockSpec) -> tuple[jax.Array, MoEStats]:
+    """x: (B, S, d) -> (B, S, d).
+
+    Long sequences dispatch **group-wise** (GShard-style, one group per
+    batch row, vmapped): a single global argsort over all B·S tokens is
+    unshardable, so GSPMD all-gathers the token set over the ``data``
+    axis and every device routes the whole batch — measured 16×
+    per-device FLOP inflation on kimi-k2 (see EXPERIMENTS.md §Perf).
+    Per-row dispatch keeps the batch dim sharded; capacity is per group.
+    Short inputs (decode steps) keep the global path — per-group padding
+    would dominate there.
+    """
+    b, s, d = x.shape
+    if s >= GROUPWISE_MIN_TOKENS and b > 1:
+        # spmd_axis_name pins the vmapped group dim to the data axis —
+        # without it GSPMD folds the groups into the expert matmul's
+        # capacity dim *replicated* (measured: full-batch expert compute
+        # on every device)
+        kw = {}
+        try:
+            mesh = jax.sharding.get_abstract_mesh()
+            if mesh is not None and not mesh.empty \
+                    and "data" in mesh.axis_names and b % mesh.shape["data"] == 0:
+                kw["spmd_axis_name"] = "data"
+        except Exception:
+            pass
+        y, aux, dropped = jax.vmap(
+            lambda xg: _moe_tokens(params, xg, cfg), **kw)(x)
+        y = y.reshape(b, s, d)
+        aux, dropped = jnp.mean(aux), jnp.mean(dropped)
+    else:
+        yt, aux, dropped = _moe_tokens(params, x.reshape(b * s, d), cfg)
+        y = yt.reshape(b, s, d)
+
+    # --- shared experts (always-on) ------------------------------------------
+    if "shared" in params:
+        y = y + mlp(params["shared"], x.reshape(b, s, d))
+
+    stats = MoEStats(aux_loss=aux, dropped_frac=dropped)
+    return y, stats

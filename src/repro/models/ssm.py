@@ -1,0 +1,383 @@
+"""State-space / linear-recurrence blocks: mamba-2 (SSD) for hymba and
+mLSTM / sLSTM for xLSTM.
+
+All matrix-state recurrences reduce to ONE primitive (TPU adaptation —
+see DESIGN.md §3: mamba-1's per-channel selective scan is restructured
+into the mamba-2/SSD *chunked decayed linear attention* form so the inner
+loops are MXU matmuls instead of elementwise scans):
+
+    h_t = a_t * h_{t-1} + k_t ⊗ v_t          (state: (dk, dv) per head)
+    y_t = q_t · h_t
+
+``chunked_linear_attention`` evaluates it chunk-parallel (intra-chunk
+masked matmuls + inter-chunk carry) — the same algorithm the
+``ssm_scan`` Pallas kernel implements on TPU; ``recurrent_step`` is the
+O(1) decode update.
+
+Numerics adaptation (documented in DESIGN.md §8): xLSTM's exponential
+gating is replaced with sigmoid gates + the normalizer column, keeping
+the matrix-memory structure while avoiding the max-stabilizer state.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import rmsnorm, rmsnorm_defs
+from repro.models.params import P
+
+# ---------------------------------------------------------------------------
+# Core primitive
+# ---------------------------------------------------------------------------
+
+
+def chunked_linear_attention(q, k, v, log_a, h0, chunk: int = 128,
+                             unroll: bool = False):
+    """q,k: (B,T,H,dk); v: (B,T,H,dv); log_a: (B,T,H) (<=0);
+    h0: (B,H,dk,dv) f32.  Returns (y: (B,T,H,dv), hT)."""
+    b, t, h, dk = q.shape
+    dv = v.shape[-1]
+    chunk = min(chunk, t)
+    assert t % chunk == 0, (t, chunk)
+    nc = t // chunk
+
+    qf = q.astype(jnp.float32).reshape(b, nc, chunk, h, dk)
+    kf = k.astype(jnp.float32).reshape(b, nc, chunk, h, dk)
+    vf = v.astype(jnp.float32).reshape(b, nc, chunk, h, dv)
+    la = log_a.astype(jnp.float32).reshape(b, nc, chunk, h)
+
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def body(h_prev, xs):
+        qc, kc, vc, lac = xs                       # (B,C,H,*)
+        L = jnp.cumsum(lac, axis=1)                # inclusive, (B,C,H)
+        Lh = jnp.moveaxis(L, -1, 1)                # (B,H,C)
+        # intra-chunk: S_ij = (q_i.k_j) * exp(L_i - L_j), j<=i
+        scores = jnp.einsum("bihd,bjhd->bhij", qc, kc)
+        ldiff = Lh[:, :, :, None] - Lh[:, :, None, :]
+        decay = jnp.exp(jnp.where(causal[None, None], ldiff, -jnp.inf))
+        y_intra = jnp.einsum("bhij,bjhd->bihd", scores * decay, vc)
+        # inter-chunk: y_i += exp(L_i) q_i . h_prev
+        q_scaled = qc * jnp.exp(L)[..., None]
+        y_inter = jnp.einsum("bihd,bhde->bihe", q_scaled, h_prev)
+        # carry: h_new = exp(L_last) h_prev + sum_j exp(L_last - L_j) k_j v_j^T
+        l_last = Lh[:, :, -1]                      # (B,H)
+        rem = jnp.exp(l_last[:, None, :] - L)      # (B,C,H)
+        kv = jnp.einsum("bjhd,bjhe->bhde", kc * rem[..., None], vc)
+        h_new = jnp.exp(l_last)[..., None, None] * h_prev + kv
+        return h_new, y_intra + y_inter
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (qf, kf, vf, la))
+    # unroll=True: the dry-run's cost pass — XLA counts a while body
+    # once, so honest FLOP totals need the chunk loop flattened
+    h_t, ys = jax.lax.scan(body, h0.astype(jnp.float32), xs,
+                           unroll=True if unroll else 1)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, t, h, dv)
+    return y.astype(v.dtype), h_t
+
+
+def recurrent_step(q, k, v, log_a, h):
+    """Single-token update.  q,k: (B,1,H,dk); v: (B,1,H,dv); log_a (B,1,H);
+    h: (B,H,dk,dv).  Returns (y (B,1,H,dv), h_new)."""
+    a = jnp.exp(log_a.astype(jnp.float32))[:, 0, :, None, None]
+    kv = jnp.einsum("bhd,bhe->bhde", k[:, 0].astype(jnp.float32),
+                    v[:, 0].astype(jnp.float32))
+    h_new = a * h + kv
+    y = jnp.einsum("bhd,bhde->bhe", q[:, 0].astype(jnp.float32), h_new)
+    return y[:, None].astype(v.dtype), h_new
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv (mamba front)
+# ---------------------------------------------------------------------------
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: (B,T,D), w: (K,D) depthwise.  Causal (pads left)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    return out
+
+
+def conv_step(x_t: jax.Array, w: jax.Array, state: jax.Array):
+    """x_t: (B,1,D); state: (B,K-1,D) last inputs.  Returns (y,(B,1,D), new_state)."""
+    hist = jnp.concatenate([state, x_t], axis=1)        # (B,K,D)
+    y = jnp.einsum("bkd,kd->bd", hist, w)[:, None]
+    return y, hist[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD) branch — used inside hymba blocks
+# ---------------------------------------------------------------------------
+
+SSM_HEAD_DIM = 64
+
+
+def mamba_dims(cfg: ModelConfig) -> tuple[int, int, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = max(1, d_inner // SSM_HEAD_DIM)
+    d_inner = n_heads * SSM_HEAD_DIM
+    return d_inner, n_heads, cfg.ssm_state
+
+
+def mamba_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    d_inner, nh, ds = mamba_dims(cfg)
+    return {
+        "in_proj": P((d, 2 * d_inner), ("embed", "ff")),       # x, z
+        "bc_proj": P((d, 2 * ds), ("embed", None)),            # B, C (1 group)
+        "dt_proj": P((d, nh), ("embed", None)),
+        "dt_bias": P((nh,), (None,), init="zeros", dtype="float32"),
+        "a_log": P((nh,), (None,), init="zeros", dtype="float32"),
+        "d_skip": P((nh,), (None,), init="ones", dtype="float32"),
+        "conv_w": P((4, d_inner), (None, None)),
+        "out_proj": P((d_inner, d), ("ff", "embed")),
+    }
+
+
+def _mamba_qkv(params, x, cfg):
+    """Shared projections.  x: (B,T,d) -> (q,k,v,log_a,z) in SSD layout."""
+    b, t, _ = x.shape
+    d_inner, nh, ds = mamba_dims(cfg)
+    xz = jnp.einsum("btd,de->bte", x, params["in_proj"])
+    xs, z = jnp.split(xz, 2, axis=-1)
+    bc = jnp.einsum("btd,de->bte", x, params["bc_proj"]).astype(jnp.float32)
+    b_in, c_out = jnp.split(bc, 2, axis=-1)                    # (B,T,ds)
+    dt = jnp.einsum("btd,dh->bth", x.astype(jnp.float32), params["dt_proj"])
+    dt = jax.nn.softplus(dt + params["dt_bias"])               # (B,T,nh)
+    log_a = -dt * jnp.exp(params["a_log"])                     # <= 0
+    return xs, z, b_in, c_out, dt, log_a
+
+
+class SSMState(NamedTuple):
+    h: jax.Array      # (B, nh, ds, head_dim) f32
+    conv: jax.Array   # (B, K-1, d_inner)
+
+
+def mamba_branch(params: dict, x: jax.Array,
+                 cfg: ModelConfig) -> tuple[jax.Array, "SSMState"]:
+    """Full-sequence mamba branch: (B,T,d) -> ((B,T,d), final state)."""
+    b, t, _ = x.shape
+    d_inner, nh, ds = mamba_dims(cfg)
+    xs_pre, z, b_in, c_out, dt, log_a = _mamba_qkv(params, x, cfg)
+    xs = causal_conv1d(xs_pre, params["conv_w"])
+    xs = jax.nn.silu(xs.astype(jnp.float32)).astype(x.dtype)
+    xh = xs.reshape(b, t, nh, SSM_HEAD_DIM)
+    v = xh * dt[..., None].astype(xh.dtype)                    # fold dt in
+    q = jnp.broadcast_to(c_out[:, :, None, :], (b, t, nh, ds)).astype(x.dtype)
+    k = jnp.broadcast_to(b_in[:, :, None, :], (b, t, nh, ds)).astype(x.dtype)
+    h0 = jnp.zeros((b, nh, ds, SSM_HEAD_DIM), jnp.float32)
+    y, h_t = chunked_linear_attention(q, k, v, log_a, h0,
+                                      unroll=cfg.unroll_ssm)
+    y = y + xh * params["d_skip"][None, None, :, None].astype(xh.dtype)
+    y = y.reshape(b, t, d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    out = jnp.einsum("bte,ed->btd", y, params["out_proj"])
+    conv_k = params["conv_w"].shape[0]
+    if t >= conv_k - 1:
+        conv_state = xs_pre[:, t - (conv_k - 1):]
+    else:
+        conv_state = jnp.pad(xs_pre, ((0, 0), (conv_k - 1 - t, 0), (0, 0)))
+    return out, SSMState(h=h_t, conv=conv_state)
+
+
+def init_ssm_state(batch: int, cfg: ModelConfig, dtype) -> SSMState:
+    d_inner, nh, ds = mamba_dims(cfg)
+    return SSMState(h=jnp.zeros((batch, nh, ds, SSM_HEAD_DIM), jnp.float32),
+                    conv=jnp.zeros((batch, 3, d_inner), dtype))
+
+
+def mamba_branch_step(params: dict, x: jax.Array, state: SSMState,
+                      cfg: ModelConfig) -> tuple[jax.Array, SSMState]:
+    """Decode: x (B,1,d)."""
+    b = x.shape[0]
+    d_inner, nh, ds = mamba_dims(cfg)
+    xs, z, b_in, c_out, dt, log_a = _mamba_qkv(params, x, cfg)
+    xs, conv_state = conv_step(xs, params["conv_w"], state.conv)
+    xs = jax.nn.silu(xs.astype(jnp.float32)).astype(x.dtype)
+    xh = xs.reshape(b, 1, nh, SSM_HEAD_DIM)
+    v = xh * dt[..., None].astype(xh.dtype)
+    q = jnp.broadcast_to(c_out[:, :, None, :], (b, 1, nh, ds)).astype(x.dtype)
+    k = jnp.broadcast_to(b_in[:, :, None, :], (b, 1, nh, ds)).astype(x.dtype)
+    y, h_new = recurrent_step(q, k, v, log_a, state.h)
+    y = y + xh * params["d_skip"][None, None, :, None].astype(xh.dtype)
+    y = y.reshape(b, 1, d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    out = jnp.einsum("bte,ed->btd", y, params["out_proj"])
+    return out, SSMState(h=h_new, conv=conv_state)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (xLSTM)
+# ---------------------------------------------------------------------------
+
+
+def mlstm_dims(cfg: ModelConfig) -> tuple[int, int, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nh = cfg.n_heads
+    dh = d_inner // nh
+    return d_inner, nh, dh
+
+
+def mlstm_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    d_inner, nh, dh = mlstm_dims(cfg)
+    return {
+        "norm": rmsnorm_defs(d),
+        "up_proj": P((d, 2 * d_inner), ("embed", "ff")),       # x, z
+        "wq": P((d_inner, nh, dh), ("ff", "heads", None)),
+        "wk": P((d_inner, nh, dh), ("ff", "heads", None)),
+        "wv": P((d_inner, nh, dh), ("ff", "heads", None)),
+        "w_if": P((d_inner, 2 * nh), ("ff", None)),            # i, f gates
+        "gn": P((nh, dh), (None, None), init="ones", dtype="float32"),
+        "down_proj": P((d_inner, d), ("ff", "embed")),
+    }
+
+
+def _mlstm_proj(params, xr, cfg):
+    b, t, _ = xr.shape
+    d_inner, nh, dh = mlstm_dims(cfg)
+    xz = jnp.einsum("btd,de->bte", xr, params["up_proj"])
+    xs, z = jnp.split(xz, 2, axis=-1)
+    q = jnp.einsum("bte,ehd->bthd", xs, params["wq"]) / jnp.sqrt(float(dh))
+    k = jnp.einsum("bte,ehd->bthd", xs, params["wk"]) / jnp.sqrt(float(dh))
+    v = jnp.einsum("bte,ehd->bthd", xs, params["wv"])
+    gates = jnp.einsum("bte,eh->bth", xs.astype(jnp.float32), params["w_if"])
+    i_g, f_g = jnp.split(gates, 2, axis=-1)                    # (B,T,nh)
+    log_a = jax.nn.log_sigmoid(f_g)                            # <= 0
+    i_t = jax.nn.sigmoid(i_g)
+    # fold input gate into k; append normalizer ones-column to v
+    k = k * i_t[..., None].astype(k.dtype)
+    v_aug = jnp.concatenate([v, jnp.ones_like(v[..., :1])], axis=-1)
+    return q, k, v_aug, log_a, z
+
+
+def _mlstm_out(params, y_aug, z, cfg):
+    b, t = y_aug.shape[:2]
+    d_inner, nh, dh = mlstm_dims(cfg)
+    y, n = y_aug[..., :-1], y_aug[..., -1:]
+    y = y / jnp.maximum(jnp.abs(n), 1.0).astype(y.dtype)
+    # per-head group norm
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    yf = yf * jax.lax.rsqrt(var + 1e-6) * params["gn"]
+    y = yf.astype(z.dtype).reshape(b, t, d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    return jnp.einsum("bte,ed->btd", y, params["down_proj"])
+
+
+def mlstm_block(params: dict, x: jax.Array,
+                cfg: ModelConfig) -> tuple[jax.Array, jax.Array]:
+    xr = rmsnorm(params["norm"], x, cfg.norm_eps)
+    q, k, v_aug, log_a, z = _mlstm_proj(params, xr, cfg)
+    b = x.shape[0]
+    _, nh, dh = mlstm_dims(cfg)
+    h0 = jnp.zeros((b, nh, dh, dh + 1), jnp.float32)
+    y_aug, h_t = chunked_linear_attention(q, k, v_aug, log_a, h0,
+                                          unroll=cfg.unroll_ssm)
+    return x + _mlstm_out(params, y_aug, z, cfg), h_t
+
+
+def init_mlstm_state(batch: int, cfg: ModelConfig) -> jax.Array:
+    _, nh, dh = mlstm_dims(cfg)
+    return jnp.zeros((batch, nh, dh, dh + 1), jnp.float32)
+
+
+def mlstm_block_step(params: dict, x: jax.Array, h: jax.Array,
+                     cfg: ModelConfig) -> tuple[jax.Array, jax.Array]:
+    xr = rmsnorm(params["norm"], x, cfg.norm_eps)
+    q, k, v_aug, log_a, z = _mlstm_proj(params, xr, cfg)
+    y_aug, h_new = recurrent_step(q, k, v_aug, log_a, h)
+    return x + _mlstm_out(params, y_aug, z, cfg), h_new
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (xLSTM) — sequential scalar-memory recurrence
+# ---------------------------------------------------------------------------
+
+
+def slstm_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    nh, dh = cfg.n_heads, cfg.d_model // cfg.n_heads
+    ff = -(-4 * d // 3 // 64) * 64                  # gated FFN, ~4d/3
+    return {
+        "norm": rmsnorm_defs(d),
+        "w_gates": P((d, 4 * d), ("embed", "ff")),
+        "r_gates": P((nh, dh, 4 * dh), (None, None, None)),  # per-head recur.
+        "ffn_norm": rmsnorm_defs(d),
+        "ffn_in": P((d, ff), ("embed", "ff")),
+        "ffn_gate": P((d, ff), ("embed", "ff")),
+        "ffn_out": P((ff, d), ("ff", "embed")),
+    }
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array   # (B, d) f32
+    n: jax.Array   # (B, d) f32
+    h: jax.Array   # (B, d) f32
+
+
+def init_slstm_state(batch: int, cfg: ModelConfig) -> SLSTMState:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return SLSTMState(c=z, n=z, h=z)
+
+
+def _slstm_cell(params, wx_t, state: SLSTMState, nh: int, dh: int):
+    """wx_t: (B, 4d) input contribution at time t."""
+    b = wx_t.shape[0]
+    hr = state.h.reshape(b, nh, dh)
+    rec = jnp.einsum("bhd,hde->bhe", hr, params["r_gates"]).reshape(b, 4 * nh * dh)
+    pre = (wx_t + rec).reshape(b, 4, nh * dh)
+    z_t = jnp.tanh(pre[:, 0])
+    i_t = jax.nn.sigmoid(pre[:, 1])
+    f_t = jax.nn.sigmoid(pre[:, 2])
+    o_t = jax.nn.sigmoid(pre[:, 3])
+    c = f_t * state.c + i_t * z_t
+    n = f_t * state.n + i_t
+    h = o_t * c / jnp.maximum(n, 1.0)
+    return SLSTMState(c=c, n=n, h=h)
+
+
+def _slstm_ffn(params, x, cfg):
+    xr = rmsnorm(params["ffn_norm"], x, cfg.norm_eps)
+    h = jnp.einsum("btd,df->btf", xr, params["ffn_in"])
+    g = jnp.einsum("btd,df->btf", xr, params["ffn_gate"])
+    h = h * jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype)
+    return x + jnp.einsum("btf,fd->btd", h, params["ffn_out"])
+
+
+def slstm_block(params: dict, x: jax.Array,
+                cfg: ModelConfig) -> tuple[jax.Array, SLSTMState]:
+    b, t, d = x.shape
+    nh, dh = cfg.n_heads, d // cfg.n_heads
+    xr = rmsnorm(params["norm"], x, cfg.norm_eps)
+    wx = jnp.einsum("btd,de->bte", xr.astype(jnp.float32),
+                    params["w_gates"].astype(jnp.float32))
+    # gate blocks laid out as (4, nh*dh) — see _slstm_cell
+    state0 = init_slstm_state(b, cfg)
+
+    def body(state, wx_t):
+        new = _slstm_cell(params, wx_t, state, nh, dh)
+        return new, new.h
+
+    final, hs = jax.lax.scan(body, state0, jnp.moveaxis(wx, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+    x = x + y
+    return _slstm_ffn(params, x, cfg), final
+
+
+def slstm_block_step(params: dict, x: jax.Array, state: SLSTMState,
+                     cfg: ModelConfig) -> tuple[jax.Array, SLSTMState]:
+    b, _, d = x.shape
+    nh, dh = cfg.n_heads, d // cfg.n_heads
+    xr = rmsnorm(params["norm"], x, cfg.norm_eps)
+    wx = jnp.einsum("btd,de->bte", xr.astype(jnp.float32),
+                    params["w_gates"].astype(jnp.float32))
+    new = _slstm_cell(params, wx[:, 0], state, nh, dh)
+    x = x + new.h[:, None].astype(x.dtype)
+    return _slstm_ffn(params, x, cfg), new

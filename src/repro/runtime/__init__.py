@@ -1,0 +1,7 @@
+from repro.runtime.heartbeat import HeartbeatMonitor
+from repro.runtime.straggler import StragglerPolicy
+from repro.runtime.elastic import ElasticGroup
+from repro.runtime.supervisor import TrainSupervisor, SimulatedFailure
+
+__all__ = ["ElasticGroup", "HeartbeatMonitor", "SimulatedFailure",
+           "StragglerPolicy", "TrainSupervisor"]

@@ -1,0 +1,115 @@
+"""Elastic scaling of a serving instance group.
+
+``ElasticGroup`` owns the tester fleet: it can spawn a new instance
+(engine + agent, registered with the registry, watched by the heartbeat
+monitor, added to the router) or drain one (stop admissions, migrate its
+sessions out over the KV fabric, then remove it).  AutoscalePolicy
+(core/policies.py) decides *when*; this module knows *how* — the
+separation of concerns the paper's control plane prescribes."""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+from repro.agents.agent import TesterAgent
+from repro.core.rules import RequestRule
+from repro.core.types import RequestState
+from repro.serving.engine_sim import SimEngine
+from repro.serving.scheduler import SchedulerConfig
+
+
+class ElasticGroup:
+    def __init__(self, pipeline, monitor=None):
+        self.p = pipeline
+        self.monitor = monitor
+        self.spawned = 0
+        self.drained: list[str] = []
+
+    # -- scale up -----------------------------------------------------------
+    def scale_up(self) -> str:
+        cfg = self.p.cfg
+        taken = set(self.p.registry.names()) | {t.name
+                                                for t in self.p.testers}
+        i = 0
+        while f"tester-{i}" in taken:
+            i += 1
+        name = f"tester-{i}"
+        sched = SchedulerConfig(max_slots=cfg.tester_slots,
+                                num_pages=cfg.num_pages,
+                                max_context=cfg.max_context)
+        eng = SimEngine(self.p.loop, self.p.costmodel, sched, name=name,
+                        collector=self.p.collector)
+        agent = TesterAgent(name, eng, self.p.loop,
+                            directory=self.p.directory, kvx=self.p.kvx,
+                            header_tokens=cfg.header_tokens,
+                            on_task_done=self.p._task_done)
+        self.p.testers.append(agent)
+        self.p.router.add_instance(agent)
+        self.p.registry.register(eng)
+        if self.monitor is not None:
+            from repro.runtime.heartbeat import attach_engine
+            attach_engine(self.monitor, eng)
+        self.spawned += 1
+        return name
+
+    # -- scale down ----------------------------------------------------------
+    def drain(self, name: str) -> None:
+        """Graceful: stop new sessions, migrate homed sessions away,
+        remove once idle."""
+        agent = next(t for t in self.p.testers if t.name == name)
+        others = [t.name for t in self.p.testers if t.name != name]
+        assert others, "cannot drain the last instance"
+        # stop new admissions at the engine
+        self.p.registry.set(name, "admit_priority_min", 99)
+        # re-home sessions
+        for sess, rec in list(self.p.directory.records.items()):
+            if rec.instance == name:
+                dst = others[len(self.drained) % len(others)]
+                self.p.kvx.transfer(sess, name, dst)
+                self.p.controller.rules.install(
+                    RequestRule(session=sess, route_to=dst))
+
+        def _finalize():
+            if agent.engine.busy:
+                self.p.loop.call_after(0.2, _finalize)
+                return
+            self.p.router.remove_instance(name)
+            self.p.registry.deregister(name)
+            if self.monitor is not None:
+                self.monitor.unwatch(name)
+            self.drained.append(name)
+
+        _finalize()
+
+    # -- failure path ---------------------------------------------------------
+    def fail_over(self, name: str) -> int:
+        """Hard failure: instance is gone.  Re-route its sessions (KV is
+        lost → destination re-prefills) and re-submit its queued work."""
+        agent = next((t for t in self.p.testers if t.name == name), None)
+        if agent is None:
+            return 0
+        others = [t for t in self.p.testers if t.name != name]
+        assert others, "no surviving instances"
+        moved = 0
+        for sess, rec in self.p.directory.records.items():
+            if rec.instance == name:
+                dst = others[moved % len(others)]
+                rec.instance = dst.name       # KV lost; recompute on arrival
+                rec.context_len = 0           # nothing left to transfer
+                self.p.controller.rules.install(
+                    RequestRule(session=sess, route_to=dst.name))
+                moved += 1
+        # re-queue in-flight requests on survivors (they re-prefill)
+        sched = agent.engine.scheduler
+        for req in list(sched.running) + list(sched.waiting):
+            req.prefilled = 0
+            req.generated = 0
+            req.available = req.prompt_len
+            req.state = RequestState.QUEUED
+            others[moved % len(others)].engine.submit(req)
+            moved += 1
+        self.p.router.remove_instance(name)
+        self.p.registry.deregister(name)
+        if self.monitor is not None:
+            self.monitor.unwatch(name)
+        self.p.testers = [t for t in self.p.testers if t.name != name]
+        return moved

@@ -1,0 +1,66 @@
+"""Slot-level cache surgery: extract/insert one sequence's decode state
+from/into the engine's batched cache pytree.
+
+The batch axis position differs per leaf (ring KV is (layers, B, S, H, d),
+``pos`` is (B,), nested segments add leading stack dims), so we locate it
+once per model config by diffing the shapes of batch=1 vs batch=2 cache
+skeletons.  These two functions are the entire mechanical basis of
+KV-cache migration (serving/kv_transfer.py) — the paper's "transfer state
+during hand-off" control-surface example.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro import models
+from repro.configs.base import ModelConfig
+
+
+@functools.lru_cache(maxsize=32)
+def _batch_axes_cached(cfg: ModelConfig, max_context: int, enc_len: int):
+    c1 = jax.eval_shape(lambda: models.init_cache(cfg, 1, max_context,
+                                                  enc_len))
+    c2 = jax.eval_shape(lambda: models.init_cache(cfg, 2, max_context,
+                                                  enc_len))
+
+    def axis(a, b):
+        for i, (x, y) in enumerate(zip(a.shape, b.shape)):
+            if x != y:
+                return i
+        raise ValueError(f"no batch axis: {a.shape}")
+
+    l1, treedef = jax.tree.flatten(c1)
+    l2, _ = jax.tree.flatten(c2)
+    return treedef, tuple(axis(a, b) for a, b in zip(l1, l2))
+
+
+def batch_axes(cfg: ModelConfig, max_context: int, enc_len: int = 0):
+    return _batch_axes_cached(cfg, max_context, enc_len)
+
+
+def cache_extract(cache, slot, axes_info):
+    """Pull slot ``slot`` out as a batch=1 cache pytree."""
+    treedef, axes = axes_info
+    leaves = treedef.flatten_up_to(cache)
+    out = [jax.lax.dynamic_slice_in_dim(leaf, slot, 1, axis=ax)
+           for leaf, ax in zip(leaves, axes)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def cache_insert(cache, sub, slot, axes_info):
+    """Write a batch=1 cache pytree into slot ``slot``."""
+    treedef, axes = axes_info
+    leaves = treedef.flatten_up_to(cache)
+    subs = treedef.flatten_up_to(sub)
+    out = [jax.lax.dynamic_update_slice_in_dim(leaf, s.astype(leaf.dtype),
+                                               slot, axis=ax)
+           for leaf, s, ax in zip(leaves, subs, axes)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def cache_nbytes(cache) -> int:
+    return int(sum(leaf.size * leaf.dtype.itemsize
+                   for leaf in jax.tree.leaves(cache)))

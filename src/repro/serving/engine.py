@@ -1,0 +1,140 @@
+"""Real JAX engine: actual forward passes with slot-batched ring caches.
+
+The decode hot path is ONE fixed-shape jitted step over all slots
+(continuous batching, TPU-style: inactive slots ride along as padding so
+the compiled executable never changes shape).  Prefill runs per request
+at its exact prompt length (CPU container: a handful of lengths per
+test/example; on TPU you'd bucket).  Slot state surgery uses
+serving/cache_utils; KV migration uses serving/kv_transfer.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import models
+from repro.configs.base import ModelConfig
+from repro.core.types import Request, RequestState
+from repro.serving import cache_utils, sampler
+from repro.serving.engine_base import EngineCore
+from repro.serving.scheduler import SchedulerConfig, StepKind
+
+
+class Engine(EngineCore):
+    def __init__(self, cfg: ModelConfig, params, sched_cfg: SchedulerConfig,
+                 name: str = "engine", collector=None, seed: int = 0):
+        sched_cfg.require_complete_prompt = True   # one-shot real prefill
+        super().__init__(name, cfg.name, sched_cfg, collector)
+        self.cfg = cfg
+        self.params = params
+        self._t0 = time.monotonic()
+        self._key = jax.random.key(seed)
+        self._axes = cache_utils.batch_axes(cfg, sched_cfg.max_context)
+        self.cache = models.init_cache(cfg, sched_cfg.max_slots,
+                                       sched_cfg.max_context)
+        self._last_token = np.zeros((sched_cfg.max_slots,), np.int32)
+
+        @jax.jit
+        def _prefill(params, tokens, cache):
+            return models.prefill(params, cfg, tokens, cache)
+
+        @jax.jit
+        def _decode(params, tokens, cache):
+            return models.decode_step(params, cfg, tokens, cache)
+
+        @jax.jit
+        def _insert(cache, sub, slot):
+            return cache_utils.cache_insert(cache, sub, slot, self._axes)
+
+        @jax.jit
+        def _extract(cache, slot):
+            return cache_utils.cache_extract(cache, slot, self._axes)
+
+        self._prefill_fn = _prefill
+        self._decode_fn = _decode
+        self._insert_fn = _insert
+        self._extract_fn = _extract
+
+    # ------------------------------------------------------------------ time
+    def now(self) -> float:
+        return time.monotonic() - self._t0
+
+    def _next_key(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    # ------------------------------------------------------------------ step
+    def step(self) -> StepKind:
+        """Run one scheduler plan synchronously.  Returns the plan kind."""
+        if self.paused:
+            return StepKind.IDLE
+        t_start = time.monotonic()
+        plan = self.scheduler.plan_step()
+        if plan.kind == StepKind.PREFILL:
+            firsts = []
+            for work in plan.prefills:
+                firsts.append(self._run_prefill(work.req))
+                work.chunk = work.req.prompt_len       # real engine: one shot
+            self.apply_prefill(plan.prefills, firsts, self.now())
+        elif plan.kind == StepKind.DECODE:
+            live = [r for r in plan.decodes
+                    if self.scheduler.ensure_decode_capacity(r)]
+            if live:
+                toks = self._run_decode(live)
+                self.apply_decode(live, toks, self.now())
+        self.steps += 1
+        self._step_metrics(time.monotonic() - t_start)
+        return plan.kind
+
+    def run_until_idle(self, max_steps: int = 100_000) -> None:
+        for _ in range(max_steps):
+            if not self.busy:
+                break
+            self.step()
+
+    # ---------------------------------------------------------------- prefill
+    def _run_prefill(self, req: Request) -> int:
+        tokens = jnp.asarray(req.prompt_tokens, jnp.int32)[None, :]
+        sub_cache = models.init_cache(self.cfg, 1,
+                                      self.scheduler.cfg.max_context)
+        logits, sub_cache = self._prefill_fn(self.params, tokens, sub_cache)
+        self.cache = self._insert_fn(self.cache, sub_cache,
+                                     jnp.int32(req.slot))
+        tok = sampler.sample(logits, self._next_key(), self.temperature)
+        self._last_token[req.slot] = int(tok[0])
+        return int(tok[0])
+
+    # ----------------------------------------------------------------- decode
+    def _run_decode(self, reqs: list[Request]) -> list[int]:
+        tokens = jnp.asarray(self._last_token[:, None])
+        logits, self.cache = self._decode_fn(self.params, tokens, self.cache)
+        toks = sampler.sample(logits, self._next_key(), self.temperature)
+        toks = np.asarray(toks)
+        out = []
+        for r in reqs:
+            t = int(toks[r.slot])
+            self._last_token[r.slot] = t
+            out.append(t)
+        return out
+
+    # ------------------------------------------------------------ kv transfer
+    def extract_state(self, req: Request):
+        """(cache-slice pytree, last_token, nbytes) for migration."""
+        sub = self._extract_fn(self.cache, jnp.int32(req.slot))
+        return {"cache": jax.device_get(sub),
+                "last_token": int(self._last_token[req.slot]),
+                "nbytes": cache_utils.cache_nbytes(sub)}
+
+    def inject_state(self, req: Request, state: dict) -> None:
+        """Install a migrated request into a fresh slot (already admitted:
+        req.slot assigned, scheduler pages reserved)."""
+        self.cache = self._insert_fn(self.cache, state["cache"],
+                                     jnp.int32(req.slot))
+        self._last_token[req.slot] = state["last_token"]
+        req.state = RequestState.RUNNING
+        req.prefilled = req.prompt_len

@@ -1,0 +1,163 @@
+"""Engine core: request lifecycle + scheduler interplay shared by the
+real-JAX engine and the virtual-clock sim engine.
+
+Subclasses implement ``_exec_prefill`` / ``_exec_decode`` (returning step
+duration and sampled tokens) and drive ``apply_*`` bookkeeping.  The
+controller talks to every engine through the paper's two-function
+``set()/reset()`` surface (Table 1) — ``knob_names`` is what the engine
+advertises at registration.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+from repro.core.types import (AgentCard, Priority, Request, RequestState,
+                              fresh_id)
+from repro.serving.scheduler import (PrefillWork, Scheduler, SchedulerConfig,
+                                     StepKind, StepPlan)
+
+
+class EngineCore:
+    """Lifecycle + metrics + knobs; time/token mechanics in subclasses."""
+
+    def __init__(self, name: str, model_name: str, sched_cfg: SchedulerConfig,
+                 collector=None):
+        self.name = name
+        self.model_name = model_name
+        self._physical_slots = sched_cfg.max_slots   # hardware capacity
+        self.scheduler = Scheduler(sched_cfg)
+        self.collector = collector
+        self.temperature = 0.0
+        self.paused = False
+        self.steps = 0
+        self.tokens_generated = 0
+        self.finished: list[Request] = []
+        self._defaults: dict[str, object] = {}
+        self.on_finish: Optional[Callable[[Request, float], None]] = None
+        self.on_token: Optional[Callable[[Request, int, float], None]] = None
+
+    # ------------------------------------------------------------------ knobs
+    KNOBS = Scheduler.KNOBS + ("temperature", "paused")
+
+    def knob_names(self) -> tuple[str, ...]:
+        return self.KNOBS
+
+    def card(self) -> AgentCard:
+        return AgentCard(
+            name=self.name, kind="llm",
+            knobs={k: self.get_param(k) for k in self.knob_names()},
+            metrics=("queue_len", "num_running", "page_util", "step_time",
+                     "ttft", "latency", "tpt", "throughput"),
+            capabilities=("kv_transfer", "pause", "priority"))
+
+    def get_param(self, name: str):
+        if name == "temperature":
+            return self.temperature
+        if name == "paused":
+            return self.paused
+        if name == "max_num_seqs":
+            return self.scheduler.cfg.max_slots
+        return getattr(self.scheduler.cfg, name)
+
+    def set_param(self, name: str, value) -> None:
+        """The paper's ``set()`` — map the uniform knob name onto the
+        engine-internal API (this method IS the per-agent shim layer)."""
+        if name not in self.KNOBS:
+            raise KeyError(f"{self.name}: unknown knob {name!r}")
+        self._defaults.setdefault(name, self.get_param(name))
+        if name == "temperature":
+            self.temperature = float(value)
+        elif name == "paused":
+            self.paused = bool(value)
+            if not self.paused:
+                self.kick()
+        else:
+            if name == "max_num_seqs":
+                value = min(int(value), self.physical_slots())
+            self.scheduler.set_knob(name, value)
+        self.kick()
+
+    def reset_param(self, name: str) -> None:
+        """The paper's ``reset()`` — restore the registered default."""
+        if name in self._defaults:
+            self.set_param(name, self._defaults[name])
+
+    def physical_slots(self) -> int:
+        return self._physical_slots
+
+    # ---------------------------------------------------------------- queue
+    def submit(self, req: Request) -> None:
+        req.arrival_time = self.now()
+        self.scheduler.submit(req)
+        self._gauge("queue_len", self.scheduler.queue_len)
+        self.kick()
+
+    # -------------------------------------------------------------- metrics
+    def _gauge(self, name: str, value: float) -> None:
+        if self.collector is not None:
+            self.collector.gauge(f"{self.name}.{name}", value, self.now())
+
+    def _observe(self, name: str, value: float) -> None:
+        if self.collector is not None:
+            self.collector.observe(f"{self.name}.{name}", value, self.now())
+
+    def _step_metrics(self, duration: float) -> None:
+        s = self.scheduler
+        self._gauge("queue_len", s.queue_len)
+        self._gauge("num_running", s.num_running)
+        self._gauge("page_util", s.alloc.utilization)
+        self._observe("step_time", duration)
+        self._gauge("tokens_total", self.tokens_generated)
+
+    # ------------------------------------------------------ plan bookkeeping
+    def apply_prefill(self, works: list[PrefillWork], first_tokens,
+                      t: float) -> None:
+        """first_tokens: per-work sampled token or None (chunk not final)."""
+        for work, tok in zip(works, first_tokens):
+            r = work.req
+            r.prefilled += work.chunk
+            if r.prefilled >= r.prompt_len:
+                r.state = RequestState.RUNNING
+                if tok is not None:
+                    self._emit_token(r, int(tok), t)
+                    if r.first_token_time is None:
+                        r.first_token_time = t
+                        self._observe("ttft", t - r.arrival_time)
+
+    def apply_decode(self, reqs: list[Request], tokens, t: float) -> None:
+        for r, tok in zip(reqs, tokens):
+            if r.state != RequestState.RUNNING:
+                continue          # preempted mid-flight
+            self._emit_token(r, int(tok), t)
+
+    def _emit_token(self, r: Request, tok: int, t: float) -> None:
+        r.generated += 1
+        r.output_tokens.append(tok)
+        self.tokens_generated += 1
+        if self.on_token is not None:
+            self.on_token(r, tok, t)
+        if r.done:
+            self.scheduler.finish(r, t)
+            self.finished.append(r)
+            self._observe("latency", t - r.arrival_time)
+            if r.generated > 1 and r.first_token_time is not None:
+                tpt = (t - r.first_token_time) / max(r.generated - 1, 1)
+                self._observe("tpt", tpt)
+            if self.on_finish is not None:
+                self.on_finish(r, t)
+
+    # ----------------------------------------------------------- abstract
+    def now(self) -> float:
+        raise NotImplementedError
+
+    def kick(self) -> None:
+        """Called when new work may be available."""
+
+    @property
+    def busy(self) -> bool:
+        return (self.scheduler.queue_len > 0
+                or self.scheduler.num_running > 0)
+
+    # current load signal used by routing policies
+    def load(self) -> float:
+        return self.scheduler.queue_len + self.scheduler.num_running

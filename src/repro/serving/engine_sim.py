@@ -1,0 +1,86 @@
+"""Sim engine: identical scheduler/lifecycle semantics, virtual-clock
+timing from the roofline cost model.
+
+Every Fig-3/6/7 benchmark runs on this substrate: step durations are the
+CostModel's three-term roofline for the *paper-scale* agent (7B-class by
+default), so load sweeps are deterministic, hardware-honest, and fast on
+the CPU container.  The controller cannot tell sim and real engines apart
+— both expose the same knobs/metrics/transfer surface.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core.types import Request, RequestState
+from repro.serving.engine_base import EngineCore
+from repro.serving.scheduler import SchedulerConfig, StepKind
+from repro.sim.clock import EventLoop
+from repro.sim.costmodel import CostModel
+
+
+class SimEngine(EngineCore):
+    def __init__(self, loop: EventLoop, costmodel: CostModel,
+                 sched_cfg: SchedulerConfig, name: str = "sim-engine",
+                 collector=None):
+        super().__init__(name, costmodel.cfg.name, sched_cfg, collector)
+        self.loop = loop
+        self.cm = costmodel
+        self._stepping = False
+        self.busy_time = 0.0
+
+    def now(self) -> float:
+        return self.loop.now()
+
+    # ------------------------------------------------------------------ drive
+    def kick(self) -> None:
+        if not self._stepping and not self.paused:
+            self._begin_step()
+
+    def _begin_step(self) -> None:
+        plan = self.scheduler.plan_step()
+        if plan.kind == StepKind.IDLE:
+            return
+        self._stepping = True
+        if plan.kind == StepKind.PREFILL:
+            dur = sum(self.cm.prefill_time(w.chunk) for w in plan.prefills)
+            self.loop.call_after(dur, lambda: self._finish_prefill(plan, dur))
+        else:
+            live = [r for r in plan.decodes
+                    if self.scheduler.ensure_decode_capacity(r)]
+            if not live:
+                self._stepping = False
+                return
+            ctx = sum(r.total_len for r in live) / len(live)
+            dur = self.cm.decode_time(len(live), ctx)
+            self.loop.call_after(dur, lambda: self._finish_decode(live, dur))
+
+    def _finish_prefill(self, plan, dur: float) -> None:
+        firsts = []
+        for w in plan.prefills:
+            final = (w.req.prefilled + w.chunk) >= w.req.prompt_len
+            firsts.append(w.req.generated if final else None)  # synthetic id
+        self.apply_prefill(plan.prefills, firsts, self.now())
+        self._end_step(dur)
+
+    def _finish_decode(self, reqs, dur: float) -> None:
+        toks = [r.generated for r in reqs]        # synthetic token ids
+        self.apply_decode(reqs, toks, self.now())
+        self._end_step(dur)
+
+    def _end_step(self, dur: float) -> None:
+        self.steps += 1
+        self.busy_time += dur
+        self._step_metrics(dur)
+        self._stepping = False
+        if not self.paused:
+            self._begin_step()
+
+    # ------------------------------------------------------------ kv transfer
+    def extract_state(self, req: Request) -> dict:
+        return {"cache": None, "last_token": 0,
+                "nbytes": self.cm.kv_transfer_bytes(req.total_len)}
+
+    def inject_state(self, req: Request, state: dict) -> None:
+        req.state = RequestState.RUNNING
+        req.prefilled = req.prompt_len
+        self.kick()

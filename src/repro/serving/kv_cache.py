@@ -1,0 +1,57 @@
+"""Page-granular KV accounting (vLLM-style allocator, TPU-adapted).
+
+On TPU the physical decode state lives in slot-contiguous ring buffers
+inside the jitted step (fixed shapes, no per-page gathers on the hot
+path — see DESIGN.md §3); this allocator provides the *scheduling*
+semantics of paging: admission control, growth-on-decode, preemption
+pressure, and per-sequence accounting that the controller's policies and
+the KV-transfer cost model read.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass
+class PageAllocator:
+    num_pages: int
+    page_size: int = 128
+    _used: dict[str, int] = field(default_factory=dict)   # seq -> pages
+
+    # -- queries --------------------------------------------------------------
+    @property
+    def free_pages(self) -> int:
+        return self.num_pages - sum(self._used.values())
+
+    def pages_for(self, tokens: int) -> int:
+        return -(-tokens // self.page_size) if tokens > 0 else 0
+
+    def holds(self, seq_id: str) -> int:
+        return self._used.get(seq_id, 0)
+
+    def can_allocate(self, tokens: int) -> bool:
+        return self.pages_for(tokens) <= self.free_pages
+
+    @property
+    def utilization(self) -> float:
+        return 1.0 - self.free_pages / max(self.num_pages, 1)
+
+    # -- mutation ---------------------------------------------------------------
+    def allocate(self, seq_id: str, tokens: int) -> bool:
+        need = self.pages_for(tokens)
+        have = self._used.get(seq_id, 0)
+        grow = max(0, need - have)
+        if grow > self.free_pages:
+            return False
+        self._used[seq_id] = max(need, have)
+        return True
+
+    def grow_to(self, seq_id: str, total_tokens: int) -> bool:
+        """Ensure capacity for total_tokens; False => caller must preempt."""
+        return self.allocate(seq_id, total_tokens)
+
+    def free(self, seq_id: str) -> int:
+        return self._used.pop(seq_id, 0)
+
+    def reset(self) -> None:
+        self._used.clear()

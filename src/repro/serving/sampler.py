@@ -1,0 +1,27 @@
+"""Token sampling: greedy / temperature / top-k, batched and jittable."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("top_k",))
+def sample(logits: jax.Array, key: jax.Array, temperature: float = 0.0,
+           top_k: int = 0) -> jax.Array:
+    """logits: (B, V) -> (B,) int32."""
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def _sampled() -> jax.Array:
+        lg = logits.astype(jnp.float32) / jnp.maximum(temperature, 1e-6)
+        if top_k > 0 and top_k < lg.shape[-1]:
+            vals, idx = jax.lax.top_k(lg, top_k)
+            draw = jax.random.categorical(key, vals, axis=-1)
+            return jnp.take_along_axis(idx, draw[:, None], axis=1)[:, 0]
+        return jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)
+
+    # temperature is traced (engines retune it via set()): select, don't
+    # branch in python
+    return jnp.where(temperature <= 0.0, greedy,
+                     _sampled().astype(jnp.int32))

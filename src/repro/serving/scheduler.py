@@ -1,0 +1,224 @@
+"""Continuous-batching scheduler (shared by the real and sim engines).
+
+Each engine step executes one ``StepPlan``:
+  * PREFILL — one or more waiting/preempted requests get (a chunk of)
+    their prompt processed, bounded by ``max_batch_tokens``;
+  * DECODE  — every running sequence advances one token (fixed-shape
+    batched step on TPU).
+
+Admission takes page capacity (PageAllocator) and the priority floor into
+account; decode-time page growth failures preempt the lowest-priority
+youngest sequence (its pages are freed, the request re-queues — or the
+controller migrates it to another instance via kv_transfer first).
+
+All the ``set()``-able knobs the paper's Table-1 interface exposes live
+here: max_num_seqs, max_batch_tokens, prefill_chunk, admit_priority_min.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.core.types import Priority, Request, RequestState
+from repro.serving.kv_cache import PageAllocator
+
+
+class StepKind(str, enum.Enum):
+    PREFILL = "prefill"
+    DECODE = "decode"
+    IDLE = "idle"
+
+
+@dataclass
+class PrefillWork:
+    req: Request
+    chunk: int            # prompt tokens to process this step
+
+
+@dataclass
+class StepPlan:
+    kind: StepKind
+    prefills: list[PrefillWork] = field(default_factory=list)
+    decodes: list[Request] = field(default_factory=list)
+
+
+@dataclass
+class SchedulerConfig:
+    max_slots: int = 8
+    max_batch_tokens: int = 2048
+    prefill_chunk: int = 0            # 0 = whole prompt in one step
+    max_context: int = 4096
+    page_size: int = 128
+    num_pages: int = 1024
+    admit_priority_min: int = 0
+    preempt: bool = True
+    decode_first: bool = False        # prioritize decode over admission
+    require_complete_prompt: bool = False  # real engine: no partial prefill
+
+
+class Scheduler:
+    def __init__(self, cfg: SchedulerConfig):
+        self.cfg = cfg
+        self.alloc = PageAllocator(cfg.num_pages, cfg.page_size)
+        self.waiting: list[Request] = []
+        self.running: list[Request] = []
+        self._free_slots = list(range(cfg.max_slots))
+        self.preempt_count = 0
+
+    # -- knobs (set()/reset() surface) ----------------------------------------
+    KNOBS = ("max_num_seqs", "max_batch_tokens", "prefill_chunk",
+             "admit_priority_min", "decode_first")
+
+    def set_knob(self, name: str, value) -> None:
+        if name == "max_num_seqs":
+            value = int(value)
+            assert value >= 1
+            old = self.cfg.max_slots
+            if value > old:
+                self._free_slots.extend(range(old, value))
+            else:
+                self._free_slots = [s for s in self._free_slots if s < value]
+            self.cfg.max_slots = value
+        elif name == "max_batch_tokens":
+            self.cfg.max_batch_tokens = int(value)
+        elif name == "prefill_chunk":
+            self.cfg.prefill_chunk = int(value)
+        elif name == "admit_priority_min":
+            self.cfg.admit_priority_min = int(value)
+        elif name == "decode_first":
+            self.cfg.decode_first = bool(value)
+        else:
+            raise KeyError(name)
+
+    # -- queue ops ---------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        req.state = RequestState.QUEUED
+        if req.available < 0:
+            req.available = req.prompt_len
+        self.waiting.append(req)
+        self._sort_waiting()
+
+    def _sort_waiting(self) -> None:
+        self.waiting.sort(key=lambda r: (-int(r.priority), r.arrival_time))
+
+    @property
+    def queue_len(self) -> int:
+        return len(self.waiting)
+
+    @property
+    def num_running(self) -> int:
+        return len(self.running)
+
+    def slots_in_use(self) -> int:
+        return self.cfg.max_slots - len(self._free_slots)
+
+    # -- planning -----------------------------------------------------------------
+    def _admissible(self, req: Request) -> bool:
+        if int(req.priority) < self.cfg.admit_priority_min:
+            return False
+        if not self._free_slots:
+            return False
+        need = min(req.prompt_len + req.max_new_tokens, self.cfg.max_context)
+        return self.alloc.can_allocate(need)
+
+    def _admit(self, req: Request) -> None:
+        req.slot = self._free_slots.pop(0)
+        need = min(req.prompt_len + req.max_new_tokens, self.cfg.max_context)
+        ok = self.alloc.allocate(req.req_id, need)
+        assert ok
+        req.state = RequestState.PREFILL
+        self.running.append(req)
+
+    def _release(self, req: Request) -> None:
+        self.alloc.free(req.req_id)
+        if req.slot >= 0 and req.slot < self.cfg.max_slots:
+            self._free_slots.append(req.slot)
+        req.slot = -1
+        if req in self.running:
+            self.running.remove(req)
+
+    def finish(self, req: Request, now: float) -> None:
+        req.state = RequestState.FINISHED
+        req.finish_time = now
+        self._release(req)
+
+    def admit_direct(self, req: Request) -> bool:
+        """Admit a migrated request straight into RUNNING (its decode state
+        arrives via kv_transfer inject, no prefill)."""
+        if not self._free_slots:
+            return False
+        need = min(req.total_len + (req.max_new_tokens - req.generated),
+                   self.cfg.max_context)
+        if not self.alloc.allocate(req.req_id, need):
+            return False
+        req.slot = self._free_slots.pop(0)
+        req.state = RequestState.RUNNING
+        self.running.append(req)
+        return True
+
+    def preempt_one(self) -> Optional[Request]:
+        """Evict lowest-priority, youngest running sequence."""
+        candidates = [r for r in self.running
+                      if r.state == RequestState.RUNNING]
+        if not candidates:
+            return None
+        victim = min(candidates,
+                     key=lambda r: (int(r.priority), -r.arrival_time))
+        self._release(victim)
+        victim.state = RequestState.PREEMPTED
+        victim.prefilled = 0          # cache dropped; re-prefill on re-admit
+        victim.generated = 0
+        self.waiting.append(victim)
+        self._sort_waiting()
+        self.preempt_count += 1
+        return victim
+
+    def plan_step(self) -> StepPlan:
+        # 1. admit while capacity
+        if not self.cfg.decode_first or not self.running:
+            while self.waiting and self._admissible(self.waiting[0]):
+                self._admit(self.waiting.pop(0))
+        # 2. prefill work pending?  (only tokens that have *arrived* —
+        #    under STREAM granularity the prompt trickles in and prefill
+        #    overlaps the upstream agent's generation)
+        pending = [r for r in self.running
+                   if r.state in (RequestState.PREFILL,)
+                   and r.prefilled < min(r.prompt_len, r.available)]
+        if self.cfg.require_complete_prompt:
+            pending = [r for r in pending if r.available >= r.prompt_len]
+        if pending:
+            budget = self.cfg.max_batch_tokens
+            chunkcfg = self.cfg.prefill_chunk
+            plan = StepPlan(StepKind.PREFILL)
+            for r in pending:
+                if budget <= 0:
+                    break
+                remaining = min(r.prompt_len, r.available) - r.prefilled
+                chunk = remaining if chunkcfg <= 0 else min(chunkcfg,
+                                                            remaining)
+                chunk = min(chunk, budget)
+                if chunk <= 0:
+                    continue
+                plan.prefills.append(PrefillWork(r, chunk))
+                budget -= chunk
+            if plan.prefills:
+                return plan
+        # 3. decode everyone running
+        decodes = [r for r in self.running if r.state == RequestState.RUNNING]
+        if decodes:
+            return StepPlan(StepKind.DECODE, decodes=decodes)
+        return StepPlan(StepKind.IDLE)
+
+    # -- decode-time growth ----------------------------------------------------------
+    def ensure_decode_capacity(self, req: Request) -> bool:
+        """Grow pages for the next token; preempt others if configured."""
+        while not self.alloc.grow_to(req.req_id,
+                                     min(req.total_len + 1,
+                                         self.cfg.max_context)):
+            if not self.cfg.preempt:
+                return False
+            victim = self.preempt_one()
+            if victim is None or victim is req:
+                return False
+        return True

@@ -1,0 +1,128 @@
+"""Roofline-derived engine cost model (TPU v5e constants, the same ones
+EXPERIMENTS.md §Roofline uses).
+
+Step latencies for the sim engine come from the same three-term roofline
+the dry-run analysis reports:
+
+    t_step = max(FLOPs / (chips·peak), bytes / (chips·hbm_bw)) + overhead
+
+``calibrate_from_dryrun`` can rescale the analytic FLOPs with the
+compiled HLO_FLOPs/MODEL_FLOPs ratio from launch/dryrun.py artifacts,
+closing the loop between the compiled graphs and the discrete-event
+benchmarks.
+"""
+from __future__ import annotations
+
+import json
+import math
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Optional
+
+from repro.configs.base import FULL_ATTENTION, ModelConfig
+
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip (TPU v5e)
+HBM_BW = 819e9             # B/s per chip
+ICI_BW = 50e9              # B/s per link
+DCN_BW = 25e9              # B/s per pod link (cross-pod)
+STEP_OVERHEAD = 2.0e-4     # dispatch/launch overhead per engine step (s)
+BYTES_PER_PARAM = 2        # bf16 weights
+
+
+@dataclass
+class CostModel:
+    cfg: ModelConfig
+    chips: int = 1
+    flops_scale: float = 1.0      # HLO_FLOPs / MODEL_FLOPs (from dry-run)
+    bytes_scale: float = 1.0
+
+    # -- static quantities ---------------------------------------------------
+    def n_params(self) -> int:
+        from repro.models import param_count
+        return param_count(self.cfg)
+
+    def n_active_params(self) -> int:
+        """MoE: only top_k (+shared, +dense-residual) experts per token."""
+        cfg = self.cfg
+        if cfg.n_experts == 0:
+            return self.n_params()
+        from repro.models import param_count
+        dense_equiv = cfg.replace(
+            n_experts=cfg.top_k, top_k=cfg.top_k)
+        return param_count(dense_equiv)
+
+    def kv_bytes_per_token(self) -> int:
+        cfg = self.cfg
+        if cfg.family == "ssm":
+            return 0  # constant-size state, no per-token growth
+        per_layer = 2 * cfg.n_kv_heads * cfg.d_head * BYTES_PER_PARAM
+        n_kv_layers = cfg.n_layers
+        return per_layer * n_kv_layers
+
+    def state_bytes(self) -> int:
+        """Constant-size recurrent state (SSM/hybrid archs)."""
+        cfg = self.cfg
+        if cfg.family == "ssm":
+            d_inner = cfg.ssm_expand * cfg.d_model
+            dh = d_inner // max(cfg.n_heads, 1)
+            return cfg.n_layers * cfg.n_heads * dh * (dh + 1) * 4
+        if cfg.family == "hybrid":
+            d_inner = cfg.ssm_expand * cfg.d_model
+            return cfg.n_layers * d_inner * cfg.ssm_state * 4
+        return 0
+
+    def kv_transfer_bytes(self, context_len: int) -> int:
+        """Bytes moved when migrating a request's decode state — bounded by
+        the window for SWA layers (the controller's Fig-7 policy consumes
+        this: SSM state is ~free to move, 500k dense KV is not)."""
+        cfg = self.cfg
+        if cfg.family == "ssm":
+            return self.state_bytes()
+        eff = context_len
+        if cfg.window > 0 and not cfg.local_global_ratio:
+            eff = min(context_len, cfg.window)
+        return self.kv_bytes_per_token() * eff + self.state_bytes()
+
+    # -- step times -----------------------------------------------------------
+    def _roofline(self, flops: float, bytes_: float) -> float:
+        t_c = flops * self.flops_scale / (self.chips * PEAK_FLOPS)
+        t_m = bytes_ * self.bytes_scale / (self.chips * HBM_BW)
+        return max(t_c, t_m) + STEP_OVERHEAD
+
+    def prefill_time(self, prompt_tokens: int, batch: int = 1) -> float:
+        n = self.n_active_params()
+        toks = prompt_tokens * batch
+        flops = 2.0 * n * toks
+        # attention term (quadratic unless windowed)
+        cfg = self.cfg
+        s_eff = prompt_tokens
+        if cfg.window > 0:
+            s_eff = min(prompt_tokens, cfg.window)
+        attn_flops = (4.0 * cfg.n_layers * cfg.n_heads * cfg.d_head
+                      * prompt_tokens * s_eff * batch)
+        bytes_ = n * BYTES_PER_PARAM + toks * self.kv_bytes_per_token()
+        return self._roofline(flops + attn_flops, bytes_)
+
+    def decode_time(self, batch: int, mean_context: float) -> float:
+        n = self.n_active_params()
+        flops = 2.0 * n * batch
+        cfg = self.cfg
+        ctx = mean_context
+        if cfg.window > 0 and not cfg.local_global_ratio:
+            ctx = min(mean_context, cfg.window)
+        kv_read = batch * ctx * self.kv_bytes_per_token()
+        bytes_ = n * BYTES_PER_PARAM + kv_read + batch * self.state_bytes()
+        return self._roofline(flops, bytes_)
+
+    # -- calibration -----------------------------------------------------------
+    @classmethod
+    def from_dryrun(cls, cfg: ModelConfig, chips: int,
+                    artifact: Optional[Path]) -> "CostModel":
+        cm = cls(cfg, chips)
+        if artifact and Path(artifact).exists():
+            data = json.loads(Path(artifact).read_text())
+            model_flops = data.get("model_flops")
+            hlo_flops = data.get("flops")
+            if model_flops and hlo_flops and model_flops > 0:
+                cm.flops_scale = max(1.0, hlo_flops / model_flops)
+        return cm

@@ -1,0 +1,9 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests must see the real
+single CPU device (the 512-device override is exclusively dryrun.py's)."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(autouse=True)
+def _seed():
+    np.random.seed(0)

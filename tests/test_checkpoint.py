@@ -1,0 +1,75 @@
+"""Checkpoint manager: atomicity, keep-K GC, async writes, resharding."""
+import json
+import shutil
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+
+
+def _tree(x=1.0):
+    return {"params": {"w": np.full((8, 4), x, np.float32),
+                       "b": np.arange(4, dtype=np.int32)},
+            "step": np.asarray(7)}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=3)
+    t = _tree(2.5)
+    mgr.save(10, t, meta={"data_step": 10})
+    got, meta = mgr.restore(10, t)
+    np.testing.assert_array_equal(got["params"]["w"], t["params"]["w"])
+    np.testing.assert_array_equal(got["params"]["b"], t["params"]["b"])
+    assert meta["data_step"] == 10
+
+
+def test_keep_k_gc(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _tree(float(s)))
+    assert mgr.steps() == [3, 4]
+    got, _ = mgr.restore(4, _tree())
+    assert got["params"]["w"][0, 0] == 4.0
+
+
+def test_incomplete_checkpoint_ignored(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=3)
+    mgr.save(1, _tree(1.0))
+    # simulate a crashed writer: directory without _COMPLETE
+    bad = tmp_path / "step_2"
+    bad.mkdir()
+    (bad / "arrays.npz").write_bytes(b"garbage")
+    assert mgr.latest_step() == 1
+    step, tree, _ = mgr.restore_latest(_tree())
+    assert step == 1
+
+
+def test_async_save_then_wait(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=3)
+    mgr.save(5, _tree(5.0), blocking=False)
+    mgr.wait()
+    assert mgr.steps() == [5]
+
+
+def test_restore_latest_none_when_empty(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=3)
+    assert mgr.restore_latest(_tree()) is None
+
+
+def test_restore_casts_dtypes(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=1)
+    t = {"w": np.ones((4,), np.float32)}
+    mgr.save(1, t)
+    like = {"w": jnp.zeros((4,), jnp.bfloat16)}
+    got, _ = mgr.restore(1, like)
+    assert got["w"].dtype == jnp.bfloat16
+
+
+def test_leaf_count_mismatch_raises(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=1)
+    mgr.save(1, {"a": np.ones(3)})
+    with pytest.raises(AssertionError):
+        mgr.restore(1, {"a": np.ones(3), "b": np.ones(2)})

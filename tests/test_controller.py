@@ -1,0 +1,205 @@
+"""Control plane: registry set/reset, rules, intent language, policies."""
+import pytest
+
+from repro.core import (AgentRule, Controller, Granularity, IntentError,
+                        Registry, RequestRule, RuleTable, compile_intent)
+from repro.core.controller import ControlContext
+from repro.core.metrics import CentralPoller, Collector, StateStore
+from repro.core.types import Message
+from repro.sim.clock import EventLoop
+
+
+class FakeKnobbed:
+    def __init__(self, name="eng", kind="llm"):
+        self.name = name
+        self.kind = kind
+        self.values = {"max_num_seqs": 8, "temperature": 0.0}
+        self._defaults = {}
+
+    def card(self):
+        from repro.core.types import AgentCard
+        return AgentCard(name=self.name, kind=self.kind,
+                         knobs=dict(self.values), metrics=("queue_len",),
+                         capabilities=("kv_transfer",))
+
+    def get_param(self, k):
+        return self.values[k]
+
+    def set_param(self, k, v):
+        if k not in self.values:
+            raise KeyError(k)
+        self._defaults.setdefault(k, self.values[k])
+        self.values[k] = v
+
+    def reset_param(self, k):
+        if k in self._defaults:
+            self.values[k] = self._defaults[k]
+
+
+def _controller(objs=()):
+    loop = EventLoop()
+    reg = Registry()
+    for o in objs:
+        reg.register(o)
+    store = StateStore()
+    poller = CentralPoller(store)
+    c = Controller(loop, reg, poller, interval=0.05)
+    return loop, reg, store, poller, c
+
+
+# ---------------------------------------------------------------------------
+# Registry (Table-1 surface)
+# ---------------------------------------------------------------------------
+
+def test_registry_set_reset_roundtrip():
+    eng = FakeKnobbed()
+    _, reg, *_ = _controller([eng])
+    reg.set("eng", "max_num_seqs", 4)
+    assert eng.values["max_num_seqs"] == 4
+    reg.reset("eng", "max_num_seqs")
+    assert eng.values["max_num_seqs"] == 8
+
+
+def test_registry_discovery():
+    eng = FakeKnobbed("a", "llm")
+    tool = FakeKnobbed("b", "tool")
+    _, reg, *_ = _controller([eng, tool])
+    assert reg.of_kind("llm") == ["a"]
+    assert set(reg.with_capability("kv_transfer")) == {"a", "b"}
+    with pytest.raises(ValueError):
+        reg.register(FakeKnobbed("a"))           # duplicate
+
+
+def test_unknown_knob_raises():
+    eng = FakeKnobbed()
+    _, reg, *_ = _controller([eng])
+    with pytest.raises(KeyError):
+        reg.set("eng", "nonsense", 1)
+
+
+# ---------------------------------------------------------------------------
+# Rules
+# ---------------------------------------------------------------------------
+
+def _msg(session="s0", task="t0", speculative=False):
+    return Message(src="a", dst="b", payload={"session": session},
+                   task_id=task, speculative=speculative)
+
+
+def test_request_rule_routing_last_wins():
+    rt = RuleTable()
+    rt.install(RequestRule(session="s0", route_to="i0"))
+    rt.install(RequestRule(session="s0", route_to="i1"))
+    assert rt.route_for(_msg()) == "i1"
+    assert rt.route_for(_msg(session="other")) is None
+
+
+def test_request_rule_blocking_speculative():
+    rt = RuleTable()
+    rt.install(RequestRule(speculative=True, block=True))
+    assert rt.blocked(_msg(speculative=True))
+    assert not rt.blocked(_msg(speculative=False))
+    rt.remove_request_rules(lambda r: r.block)
+    assert not rt.blocked(_msg(speculative=True))
+
+
+def test_agent_rule_knob_updates():
+    r = AgentRule(target="dev->*", granularity=Granularity.BATCH, pace=0.01)
+    upd = r.knob_updates()
+    assert upd == {"granularity": Granularity.BATCH, "pace": 0.01}
+
+
+# ---------------------------------------------------------------------------
+# Controller loop + context
+# ---------------------------------------------------------------------------
+
+def test_controller_polls_and_acts():
+    eng = FakeKnobbed()
+    loop, reg, store, poller, c = _controller([eng])
+    col = Collector()
+    poller.attach(col)
+    col.gauge("eng.queue_len", 12, 0.0)
+
+    from repro.core.controller import Policy
+
+    class P(Policy):
+        def on_tick(self, ctx):
+            if ctx.metric("eng.queue_len", "last") > 10:
+                ctx.set("eng", "max_num_seqs", 2)
+
+    c.install(P())
+    c.start()
+    loop.run_until(0.2)
+    assert eng.values["max_num_seqs"] == 2
+    kinds = [a.kind for a in c.action_log()]
+    assert "set" in kinds
+    # idempotent set: only ONE action despite many ticks
+    assert kinds.count("set") == 1
+
+
+# ---------------------------------------------------------------------------
+# Intent language
+# ---------------------------------------------------------------------------
+
+def test_intent_parse_and_fire():
+    eng = FakeKnobbed()
+    loop, reg, store, poller, c = _controller([eng])
+    col = Collector()
+    poller.attach(col)
+    col.gauge("eng.queue_len", 20, 0.0)
+    pol = compile_intent("""
+# keep things sane
+objective: maximize throughput under p95(lat) <= 2.0
+rule shrink: when mean(eng.queue_len) > 10 => set eng.max_num_seqs 2
+rule grow hold 1.0: when mean(eng.queue_len) <= 10 => reset eng.max_num_seqs
+""")
+    assert pol.objective.direction == "maximize"
+    c.install(pol)
+    c.start()
+    loop.run_until(0.2)
+    assert eng.values["max_num_seqs"] == 2
+    assert pol.stats()["shrink"] >= 1
+
+
+def test_intent_guarded_first_match_wins():
+    eng = FakeKnobbed()
+    loop, reg, store, poller, c = _controller([eng])
+    col = Collector()
+    poller.attach(col)
+    col.gauge("eng.queue_len", 20, 0.0)
+    pol = compile_intent("""
+rule a: when mean(eng.queue_len) > 15 => set eng.max_num_seqs 1
+rule b: when mean(eng.queue_len) > 5 => set eng.max_num_seqs 99
+""")
+    c.install(pol)
+    c.start()
+    loop.run_until(0.1)
+    assert eng.values["max_num_seqs"] == 1      # rule b never fired
+    assert pol.stats()["b"] == 0
+
+
+def test_intent_conjunction_and_windows():
+    pol = compile_intent(
+        "rule r: when mean(a.x, 2.0) > 1 and p95(a.y) <= 3 => note hello")
+    term = pol.rules[0].cond.terms[0]
+    assert term.window == 2.0 and term.cmp == ">"
+
+
+def test_intent_syntax_errors():
+    with pytest.raises(IntentError):
+        compile_intent("rule r: when garbage => set a.b 1")
+    with pytest.raises(IntentError):
+        compile_intent("rule r: when mean(x) > 1 => frobnicate y")
+    with pytest.raises(IntentError):
+        compile_intent("objective: minimize nothing")    # no rules
+
+
+def test_intent_unobserved_metric_does_not_fire():
+    eng = FakeKnobbed()
+    loop, reg, store, poller, c = _controller([eng])
+    pol = compile_intent(
+        "rule r: when mean(ghost.metric) > 0 => set eng.max_num_seqs 1")
+    c.install(pol)
+    c.start()
+    loop.run_until(0.2)
+    assert eng.values["max_num_seqs"] == 8      # NaN comparisons are False

@@ -1,0 +1,134 @@
+"""Data plane shim: granularity buffering, runtime switching, pacing,
+speculative gating."""
+from repro.core.dataplane import Channel
+from repro.core.types import Granularity, Message, Priority
+from repro.sim.clock import EventLoop
+from repro.sim.network import Link
+
+
+class Sink:
+    name = "sink"
+
+    def __init__(self):
+        self.msgs: list[Message] = []
+
+    def deliver(self, msg: Message) -> None:
+        self.msgs.append(msg)
+
+
+def _mk(granularity, stream_chunk=4, **link_kw):
+    loop = EventLoop()
+    sink = Sink()
+    link = Link(loop, bandwidth=1e9, latency=1e-4, **link_kw)
+    ch = Channel(loop, link, "src", sink, granularity=granularity,
+                 stream_chunk=stream_chunk)
+    return loop, sink, ch
+
+
+def _task(ch, task_id="t0", units=3, tokens_per_unit=10, **kw):
+    ch.begin_task(task_id, session="s0", **kw)
+    for _ in range(units):
+        for _ in range(tokens_per_unit):
+            ch.push_tokens(task_id, 1)
+        ch.end_unit(task_id)
+    ch.end_task(task_id)
+
+
+def test_batch_one_message_per_task():
+    loop, sink, ch = _mk(Granularity.BATCH)
+    _task(ch)
+    loop.run_until(1.0)
+    assert len(sink.msgs) == 1
+    m = sink.msgs[0]
+    assert m.tokens == 30 and m.payload["task_end"]
+
+
+def test_pipeline_one_message_per_unit():
+    loop, sink, ch = _mk(Granularity.PIPELINE)
+    _task(ch)
+    loop.run_until(1.0)
+    # 3 unit messages + one zero-token end-of-task marker (EOS frame)
+    assert len(sink.msgs) == 4
+    content = [m for m in sink.msgs if m.tokens]
+    assert [m.tokens for m in content] == [10, 10, 10]
+    assert all(m.payload["unit_end"] for m in content)
+    assert sink.msgs[-1].payload["task_end"] and sink.msgs[-1].tokens == 0
+
+
+def test_stream_chunked_messages():
+    loop, sink, ch = _mk(Granularity.STREAM, stream_chunk=4)
+    _task(ch)
+    loop.run_until(1.0)
+    # 10 tokens/unit -> 2 chunks of 4 + unit-end flush of 2, per unit,
+    # plus the zero-token task_end marker
+    assert sum(m.tokens for m in sink.msgs) == 30
+    assert len(sink.msgs) == 10
+    assert max(m.tokens for m in sink.msgs) == 4
+
+
+def test_midtask_granularity_switch():
+    loop, sink, ch = _mk(Granularity.BATCH)
+    ch.begin_task("t0", session="s0")
+    for _ in range(10):
+        ch.push_tokens("t0", 1)
+    ch.end_unit("t0")
+    # controller switches to pipeline mid-task: buffered unit flushes
+    ch.set_param("granularity", "pipeline")
+    loop.run_until(0.5)
+    assert len(sink.msgs) == 1 and sink.msgs[0].tokens == 10
+    for _ in range(10):
+        ch.push_tokens("t0", 1)
+    ch.end_unit("t0")
+    ch.end_task("t0")
+    loop.run_until(1.0)
+    assert sum(m.tokens for m in sink.msgs) == 20
+
+
+def test_set_reset_knobs():
+    loop, sink, ch = _mk(Granularity.BATCH)
+    ch.set_param("granularity", Granularity.STREAM)
+    ch.set_param("stream_chunk", 2)
+    assert ch.granularity is Granularity.STREAM
+    ch.reset_param("granularity")
+    assert ch.granularity is Granularity.BATCH
+    card = ch.card()
+    assert "granularity" in card.knobs and card.kind == "channel"
+
+
+def test_pacing_spaces_messages():
+    loop, sink, ch = _mk(Granularity.PIPELINE)
+    ch.set_param("pace", 0.1)
+    _task(ch, units=3)
+    loop.run_until(5.0)
+    # 3 unit messages + end-of-task marker
+    assert len(sink.msgs) == 4
+
+
+def test_speculative_gating_holds_and_releases():
+    loop, sink, ch = _mk(Granularity.BATCH)
+    ch.set_param("gate_speculative", True)
+    _task(ch, task_id="spec", speculative=True)
+    loop.run_until(0.5)
+    assert len(sink.msgs) == 0 and ch.held_count == 1
+    ch.set_param("gate_speculative", False)     # release
+    loop.run_until(1.0)
+    assert len(sink.msgs) == 1 and sink.msgs[0].speculative
+
+
+def test_normal_traffic_not_gated():
+    loop, sink, ch = _mk(Granularity.BATCH)
+    ch.set_param("gate_speculative", True)
+    _task(ch, task_id="normal", speculative=False)
+    loop.run_until(0.5)
+    assert len(sink.msgs) == 1
+
+
+def test_link_serialization_and_proc_time():
+    loop = EventLoop()
+    link = Link(loop, bandwidth=1e3, latency=0.0, proc_time=0.5)
+    done = []
+    link.transfer(1000, lambda: done.append(loop.now()))   # 1s + 0.5
+    link.transfer(1000, lambda: done.append(loop.now()))   # queued behind
+    loop.run_until(10.0)
+    assert abs(done[0] - 1.5) < 1e-9
+    assert abs(done[1] - 3.0) < 1e-9

@@ -1,0 +1,155 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret=True."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _assert_close(a, b, dtype, tol_f32=2e-5, tol_bf16=2e-2):
+    tol = tol_bf16 if dtype == jnp.bfloat16 else tol_f32
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32),
+                               atol=tol, rtol=tol)
+
+
+# ---------------------------------------------------------------------------
+# flash attention (prefill/training)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,h,hkv,dh", [
+    (1, 128, 4, 4, 64),       # MHA
+    (2, 256, 8, 2, 64),       # GQA 4:1
+    (1, 192, 4, 1, 32),       # MQA, ragged seq vs 128 blocks
+    (2, 64, 2, 2, 128),       # short seq, wide head
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(b, s, h, hkv, dh, dtype):
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (b, s, h, dh), dtype)
+    k = jax.random.normal(ks[1], (b, s, hkv, dh), dtype)
+    v = jax.random.normal(ks[2], (b, s, hkv, dh), dtype)
+    out = ops.flash_attention(q, k, v, causal=True, interpret=True)
+    want = ref.flash_attention_ref(jnp.moveaxis(q, 2, 1),
+                                   jnp.moveaxis(k, 2, 1),
+                                   jnp.moveaxis(v, 2, 1), causal=True)
+    _assert_close(out, jnp.moveaxis(want, 1, 2), dtype)
+
+
+@pytest.mark.parametrize("window", [32, 64])
+def test_flash_attention_window(window):
+    b, s, h, dh = 1, 256, 4, 64
+    ks = jax.random.split(jax.random.key(1), 3)
+    q = jax.random.normal(ks[0], (b, s, h, dh))
+    k = jax.random.normal(ks[1], (b, s, h, dh))
+    v = jax.random.normal(ks[2], (b, s, h, dh))
+    out = ops.flash_attention(q, k, v, causal=True, window=window,
+                              interpret=True)
+    want = ref.flash_attention_ref(jnp.moveaxis(q, 2, 1),
+                                   jnp.moveaxis(k, 2, 1),
+                                   jnp.moveaxis(v, 2, 1),
+                                   causal=True, window=window)
+    _assert_close(out, jnp.moveaxis(want, 1, 2), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# decode attention (flash-decoding, split-KV)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,h,hkv,dh,t,qpos", [
+    (2, 8, 2, 64, 256, 200),
+    (1, 4, 4, 64, 128, 5),      # near-empty cache
+    (3, 4, 1, 128, 384, 380),   # MQA, nearly full
+])
+@pytest.mark.parametrize("window", [-1, 64])
+def test_decode_attention_sweep(b, h, hkv, dh, t, qpos, window):
+    ks = jax.random.split(jax.random.key(2), 3)
+    q = jax.random.normal(ks[0], (b, 1, h, dh))
+    ck = jax.random.normal(ks[1], (b, t, hkv, dh))
+    cv = jax.random.normal(ks[2], (b, t, hkv, dh))
+    kpos = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+    # slots past qpos are "unwritten" — mark invalid
+    kpos = jnp.where(kpos <= qpos, kpos, -1)
+    qp = jnp.full((b,), qpos)
+    out = ops.decode_attention(q, ck, cv, kpos, qp, window=window,
+                               interpret=True)
+    qg = q.reshape(b, hkv, h // hkv, dh)
+    want = ref.decode_attention_ref(qg, jnp.moveaxis(ck, 2, 1),
+                                    jnp.moveaxis(cv, 2, 1), kpos,
+                                    qp[:, None], window=window)
+    _assert_close(out.reshape(b, hkv, h // hkv, dh), want, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# grouped matmul (MoE experts)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("e,c,d,f", [
+    (4, 64, 128, 256),
+    (8, 32, 64, 64),
+    (2, 128, 256, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_grouped_matmul_sweep(e, c, d, f, dtype):
+    ks = jax.random.split(jax.random.key(3), 2)
+    x = jax.random.normal(ks[0], (e, c, d), dtype)
+    w = jax.random.normal(ks[1], (e, d, f), dtype)
+    counts = jnp.array([c, c // 2, 0, 1][:e].ljust if False else
+                       [min(c, max(0, c - i * (c // max(e - 1, 1))))
+                        for i in range(e)])
+    out = ops.grouped_matmul(x, w, counts, interpret=True)
+    want = ref.grouped_matmul_ref(x, w, counts)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol * d, rtol=tol)
+
+
+def test_grouped_matmul_empty_experts_are_zero():
+    x = jax.random.normal(jax.random.key(4), (4, 16, 32))
+    w = jax.random.normal(jax.random.key(5), (4, 32, 64))
+    counts = jnp.array([16, 0, 3, 0])
+    out = np.asarray(ops.grouped_matmul(x, w, counts, interpret=True))
+    assert np.all(out[1] == 0) and np.all(out[3] == 0)
+    assert np.all(out[2, 3:] == 0)          # rows past count zeroed
+
+
+# ---------------------------------------------------------------------------
+# chunked SSM scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,h,t,dk,dv,chunk", [
+    (1, 2, 128, 16, 16, 32),
+    (2, 4, 96, 32, 16, 32),     # ragged tail chunk
+    (1, 1, 64, 64, 64, 64),     # single chunk
+])
+def test_ssm_scan_sweep(b, h, t, dk, dv, chunk):
+    ks = jax.random.split(jax.random.key(6), 4)
+    q = jax.random.normal(ks[0], (b, t, h, dk)) * 0.3
+    k = jax.random.normal(ks[1], (b, t, h, dk)) * 0.3
+    v = jax.random.normal(ks[2], (b, t, h, dv)) * 0.3
+    log_a = -jax.random.uniform(ks[3], (b, t, h)) * 0.1
+    h0 = jnp.zeros((b, h, dk, dv))
+    y, hT = ops.ssm_scan(q, k, v, log_a, h0, chunk=chunk, interpret=True)
+    y_ref, hT_ref = ref.ssm_scan_ref(
+        jnp.moveaxis(q, 2, 1), jnp.moveaxis(k, 2, 1), jnp.moveaxis(v, 2, 1),
+        jnp.moveaxis(log_a, 2, 1)[..., None], h0)
+    _assert_close(y, jnp.moveaxis(y_ref, 1, 2), jnp.float32, tol_f32=1e-4)
+    _assert_close(hT, hT_ref, jnp.float32, tol_f32=1e-4)
+
+
+def test_ssm_scan_nonzero_initial_state():
+    b, h, t, dk, dv = 1, 2, 64, 16, 16
+    ks = jax.random.split(jax.random.key(7), 5)
+    q = jax.random.normal(ks[0], (b, t, h, dk)) * 0.3
+    k = jax.random.normal(ks[1], (b, t, h, dk)) * 0.3
+    v = jax.random.normal(ks[2], (b, t, h, dv)) * 0.3
+    log_a = -jax.random.uniform(ks[3], (b, t, h)) * 0.05
+    h0 = jax.random.normal(ks[4], (b, h, dk, dv)) * 0.5
+    y, hT = ops.ssm_scan(q, k, v, log_a, h0, chunk=16, interpret=True)
+    y_ref, hT_ref = ref.ssm_scan_ref(
+        jnp.moveaxis(q, 2, 1), jnp.moveaxis(k, 2, 1), jnp.moveaxis(v, 2, 1),
+        jnp.moveaxis(log_a, 2, 1)[..., None], h0)
+    _assert_close(y, jnp.moveaxis(y_ref, 1, 2), jnp.float32, tol_f32=1e-4)
+    _assert_close(hT, hT_ref, jnp.float32, tol_f32=1e-4)

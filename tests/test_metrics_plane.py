@@ -1,0 +1,97 @@
+"""Metrics plane: rings, aggregation, spec language, central polling."""
+import math
+
+from repro.core.metrics import (AGGREGATIONS, CentralPoller, Collector,
+                                MetricSpec, Ring, StateStore,
+                                register_aggregation)
+
+
+def test_ring_wraps_and_windows():
+    r = Ring(cap=4)
+    for i in range(10):
+        r.push(float(i), float(i))
+    assert r.last() == 9.0
+    w = r.window(since=7.0)
+    assert [v for _, v in w] == [7.0, 8.0, 9.0]
+    assert len(r.window()) == 4            # capacity bound
+
+
+def test_aggregations():
+    xs = [1.0, 2.0, 3.0, 4.0, 100.0]
+    assert AGGREGATIONS["mean"](xs) == 22.0
+    assert AGGREGATIONS["p50"](xs) == 3.0
+    assert AGGREGATIONS["max"](xs) == 100.0
+    assert AGGREGATIONS["count"](xs) == 5.0
+    assert math.isnan(AGGREGATIONS["mean"]([]))
+
+
+def test_custom_aggregation_registration():
+    register_aggregation("range", lambda xs: max(xs) - min(xs) if xs else 0.0)
+    assert AGGREGATIONS["range"]([3.0, 9.0]) == 6.0
+
+
+def test_metric_spec_from_docstring():
+    s = MetricSpec.from_docstring(
+        "ttft", "Time to first token in seconds; lower is better.")
+    assert s.kind == "latency"
+    assert s.direction == "lower_better"
+    assert s.unit == "seconds"
+    assert s.default_agg == "p95"
+
+    s2 = MetricSpec.from_docstring(
+        "throughput", "Completed requests per second; higher is better.")
+    assert s2.kind == "rate"
+    assert s2.direction == "higher_better"
+
+    s3 = MetricSpec.from_docstring(
+        "tokens_total", "Cumulative number of generated tokens.")
+    assert s3.kind == "counter"
+    assert s3.default_agg == "sum"
+
+
+def test_metric_spec_from_dict():
+    s = MetricSpec.from_dict({"name": "queue_len", "kind": "gauge",
+                              "direction": "lower_better"})
+    assert s.direction == "lower_better"
+
+
+def test_collector_and_poller_roundtrip():
+    c = Collector("node0")
+    store = StateStore()
+    poller = CentralPoller(store, window=10.0)
+    poller.attach(c)
+
+    for t in range(5):
+        c.gauge("eng.queue_len", t * 2, float(t))
+        c.observe("eng.latency", 0.1 * t, float(t))
+        c.counter("eng.msgs", 1, float(t))
+    poller.poll(now=5.0)
+
+    assert store.get("eng.queue_len", "last") == 8
+    assert store.get("eng.queue_len", "mean") == 4.0
+    assert abs(store.get("eng.latency", "max") - 0.4) < 1e-9
+    assert store.get("eng.msgs", "last") == 5      # cumulative counter
+
+    # windowed query: only samples newer than now-2
+    assert store.get("eng.queue_len", "mean", window=2.0) == 7.0
+
+
+def test_poll_window_excludes_stale():
+    c = Collector()
+    store = StateStore()
+    poller = CentralPoller(store, window=1.0)
+    poller.attach(c)
+    c.gauge("m", 1.0, t=0.0)
+    c.gauge("m", 2.0, t=9.5)
+    poller.poll(now=10.0)
+    assert store.get("m", "count") == 1.0          # only the fresh sample
+
+
+def test_semantic_specs_attached_via_describe():
+    c = Collector()
+    c.describe("custom.depth",
+               "Current depth of the compaction queue; lower is better.")
+    spec = c.spec("custom.depth")
+    assert spec.direction == "lower_better"
+    # builtin fallback by suffix
+    assert c.spec("tester-0.ttft").kind == "latency"

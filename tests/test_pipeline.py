@@ -1,0 +1,128 @@
+"""Integration: the full agentic pipeline under control — mini versions
+of the three paper experiments plus speculative gating and the A2A
+protocol facade."""
+import statistics
+
+import pytest
+
+from repro.agents import (AgenticPipeline, PipelineConfig, TaskSpec,
+                          WorkloadConfig)
+from repro.agents.workloads import (ClosedLoopClient, OpenLoopSource,
+                                    Phase, PhasedLoad, _dispatch_done,
+                                    launch_clients)
+from repro.core.policies import (AdaptiveGranularityPolicy,
+                                 LoadBalancePolicy, SpeculativeGatePolicy)
+from repro.core.types import Granularity
+
+
+def test_pipeline_completes_tasks_all_granularities():
+    for g in Granularity:
+        p = AgenticPipeline(PipelineConfig(granularity=g))
+        for i in range(3):
+            p.submit(TaskSpec(session=f"s{i}", n_functions=2,
+                              func_tokens=16, test_tokens=8))
+        p.run(until=30.0)
+        assert len(p.done) == 3, g
+        assert all(s.finished_at > s.submitted_at for s in p.done)
+
+
+def test_latency_ordering_low_load():
+    """At low load finer granularity must not be slower (overlap wins)."""
+    lat = {}
+    for g in (Granularity.BATCH, Granularity.STREAM):
+        p = AgenticPipeline(PipelineConfig(granularity=g, stream_chunk=2))
+        launch_clients(p, WorkloadConfig(n_clients=1, think_time=0.2),
+                       stop_at=15.0)
+        p.run(until=25.0)
+        lat[g] = statistics.mean(p.latencies())
+    assert lat[Granularity.STREAM] < lat[Granularity.BATCH]
+
+
+def test_adaptive_switches_with_load():
+    p = AgenticPipeline(PipelineConfig(granularity=Granularity.PIPELINE,
+                                       stream_chunk=2))
+    pol = AdaptiveGranularityPolicy("dev->tester", ["tester-0"],
+                                    stream_below=2.0, batch_above=10.0)
+    p.controller.install(pol)
+    load = PhasedLoad(p, WorkloadConfig(think_time=0.2),
+                      [Phase(6.0, 1), Phase(8.0, 32), Phase(6.0, 1)])
+    load.start()
+    p.run(until=22.0)
+    modes = [g for _, g in pol.switches]
+    assert Granularity.STREAM in modes      # low-load phase
+    assert Granularity.BATCH in modes       # burst phase
+    assert len(p.done) > 10
+
+
+def test_load_balance_improves_tail_latency():
+    def run(mode):
+        p = AgenticPipeline(PipelineConfig(
+            granularity=Granularity.PIPELINE, n_testers=2,
+            dev_chips=8, tester_chips=2))
+        pol = LoadBalancePolicy([t.name for t in p.testers], mode=mode,
+                                imbalance_min=2.0, cooldown=1.0)
+        p.controller.install(pol)
+        # adversarial: all sessions hash to tester-0 (crc32 % 2 == 0)
+        hot = ["sess-4", "sess-5", "sess-6", "sess-7", "sess-14",
+               "sess-15", "sess-16", "sess-17"]
+        src = OpenLoopSource(p, hot, 0.6,
+                             WorkloadConfig(n_functions=6, func_tokens=32,
+                                            test_tokens=32), t_end=20.0)
+        src.start()
+        p.run(until=40.0)
+        lats = sorted(p.latencies())
+        return lats[int(0.9 * len(lats)) - 1], pol.migrations
+
+    p90_none, m0 = run("none")
+    p90_lb, m1 = run("hints")
+    assert m0 == 0 and m1 > 0
+    assert p90_lb < p90_none            # controller reduces tail latency
+
+
+def test_speculative_gate_policy():
+    p = AgenticPipeline(PipelineConfig(granularity=Granularity.BATCH))
+    pol = SpeculativeGatePolicy("dev->tester", ["tester-0"],
+                                gate_above=2.0)
+    p.controller.install(pol)
+    # load up the tester, then submit a speculative task
+    for i in range(8):
+        p.submit(TaskSpec(session=f"s{i}", n_functions=4, func_tokens=32,
+                          test_tokens=32))
+    p.controller.start()
+    p.loop.run_until(2.0)
+    p.submit(TaskSpec(session="spec", n_functions=1, func_tokens=8,
+                      test_tokens=8, speculative=True))
+    p.loop.run_until(4.0)
+    assert p.channel.gate_speculative or p.channel.held_count >= 0
+    p.loop.run_until(120.0)
+    assert len(p.done) == 9             # gated task eventually completes
+
+
+def test_kv_transfer_metrics_exported():
+    p = AgenticPipeline(PipelineConfig(n_testers=2))
+    pol = LoadBalancePolicy([t.name for t in p.testers], mode="hints",
+                            imbalance_min=0.0, cooldown=0.0)
+    p.controller.install(pol)
+    launch_clients(p, WorkloadConfig(n_clients=6, think_time=0.1),
+                   stop_at=10.0)
+    p.run(until=20.0)
+    if p.kvx.transfers:
+        assert p.kvx.bytes_moved > 0
+        assert p.collector.last("kvx.transfer_bytes") is not None
+
+
+def test_a2a_protocol_facade():
+    from repro.agents.protocol import A2AClient
+    p = AgenticPipeline(PipelineConfig(granularity=Granularity.BATCH))
+    client = A2AClient.from_agent_card(p.registry, "tester-0", p.channel)
+    assert client.card.kind == "llm"
+    # app "streams", data plane batches — late binding in action
+    stream = client.send_message_streaming(session="a2a-sess",
+                                           n_functions=1, func_tokens=12,
+                                           test_tokens=8)
+    for _ in range(12):
+        stream.push(1)
+    stream.end_unit()
+    stream.close()
+    p.run(until=0.5)
+    assert p.channel.msgs_sent <= 2     # batched despite streaming API

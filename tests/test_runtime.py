@@ -1,0 +1,188 @@
+"""Fault tolerance: supervised restart bit-exactness, heartbeats,
+stragglers, elastic scaling, serving failover."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.data import DataConfig, TokenPipeline
+from repro.runtime import (ElasticGroup, HeartbeatMonitor, SimulatedFailure,
+                           StragglerPolicy, TrainSupervisor)
+from repro.runtime.heartbeat import attach_engine
+from repro.runtime.supervisor import SupervisorConfig
+from repro.sim.clock import EventLoop
+
+
+# ---------------------------------------------------------------------------
+# Supervisor: crash mid-training, resume, identical trajectory
+# ---------------------------------------------------------------------------
+
+def _toy_step(state, batch, step):
+    # state: {"w": vector} — deterministic "training" on batch stats
+    inc = float(batch["tokens"].mean()) * 1e-3
+    return {"w": state["w"] + inc, "n": state["n"] + 1}
+
+
+def test_supervisor_restart_bit_exact(tmp_path):
+    data_cfg = DataConfig(vocab=100, seq_len=8, global_batch=2)
+
+    # uninterrupted reference
+    ref_mgr = CheckpointManager(tmp_path / "ref", keep=2)
+    sup0 = TrainSupervisor(ref_mgr, SupervisorConfig(ckpt_every=5,
+                                                     async_ckpt=False))
+    ref = sup0.run(state={"w": np.zeros(()), "n": np.zeros((), np.int64)},
+                   pipeline=TokenPipeline(data_cfg), step_fn=_toy_step,
+                   total_steps=20)
+
+    # crashy run: fails at steps 7 and 13
+    mgr = CheckpointManager(tmp_path / "crashy", keep=2)
+    sup = TrainSupervisor(mgr, SupervisorConfig(ckpt_every=5,
+                                                async_ckpt=False))
+    fail_at = {7, 13}
+    calls = {"n": 0}
+
+    def crashy(state, batch, step):
+        calls["n"] += 1
+        if step in fail_at:
+            fail_at.discard(step)
+            raise SimulatedFailure(f"chaos at {step}")
+        return _toy_step(state, batch, step)
+
+    got = sup.run(state={"w": np.zeros(()), "n": np.zeros((), np.int64)},
+                  pipeline=TokenPipeline(data_cfg), step_fn=crashy,
+                  total_steps=20)
+    assert sup.restarts == 2
+    np.testing.assert_allclose(got["w"], ref["w"], rtol=0, atol=0)
+    assert int(got["n"]) == int(ref["n"]) == 20
+
+
+def test_supervisor_restart_budget(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    sup = TrainSupervisor(mgr, SupervisorConfig(ckpt_every=100,
+                                                max_restarts=2))
+
+    def always_fail(state, batch, step):
+        raise SimulatedFailure("doomed")
+
+    with pytest.raises(RuntimeError):
+        sup.run(state={"w": np.zeros(())},
+                pipeline=TokenPipeline(
+                    DataConfig(vocab=10, seq_len=4, global_batch=1)),
+                step_fn=always_fail, total_steps=5)
+
+
+# ---------------------------------------------------------------------------
+# Heartbeats
+# ---------------------------------------------------------------------------
+
+def test_heartbeat_failure_and_recovery():
+    loop = EventLoop()
+    mon = HeartbeatMonitor(loop, miss_timeout=1.0, check_interval=0.2)
+    events = []
+    mon.on_failure = lambda n: events.append(("fail", n, loop.now()))
+    mon.on_recovery = lambda n: events.append(("recover", n, loop.now()))
+    mon.watch("eng0")
+    mon.start()
+    # beats until t=0.5, then silence
+    for t in (0.1, 0.3, 0.5):
+        loop.call_at(t, lambda: mon.beat("eng0"))
+    loop.call_at(3.0, lambda: mon.beat("eng0"))     # comes back
+    loop.run_until(4.0)
+    kinds = [e[0] for e in events]
+    assert kinds == ["fail", "recover"]
+    assert 1.5 <= events[0][2] <= 2.0
+
+
+def test_heartbeat_attach_engine():
+    from repro.configs import get_config
+    from repro.core.types import Request
+    from repro.serving.engine_sim import SimEngine
+    from repro.serving.scheduler import SchedulerConfig
+    from repro.sim.costmodel import CostModel
+    loop = EventLoop()
+    mon = HeartbeatMonitor(loop, miss_timeout=5.0)
+    eng = SimEngine(loop, CostModel(get_config("agent-7b"), chips=4),
+                    SchedulerConfig(max_slots=2, num_pages=64))
+    attach_engine(mon, eng)
+    eng.submit(Request(prompt_len=8, max_new_tokens=2))
+    loop.run_until(10.0)
+    assert mon.last_beat["sim-engine"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Straggler detection
+# ---------------------------------------------------------------------------
+
+def test_straggler_demotes_slow_instance():
+    from repro.core.metrics import CentralPoller, Collector, StateStore
+    from repro.core.registry import Registry
+    from repro.core.controller import Controller
+    from tests.test_controller import FakeKnobbed
+
+    loop = EventLoop()
+    reg = Registry()
+    fast = FakeKnobbed("t0")
+    slow = FakeKnobbed("t1")
+    fast.values["admit_priority_min"] = 0
+    slow.values["admit_priority_min"] = 0
+    reg.register(fast)
+    reg.register(slow)
+    store = StateStore()
+    poller = CentralPoller(store, window=10.0)
+    col = Collector()
+    poller.attach(col)
+    c = Controller(loop, reg, poller, interval=0.1)
+    pol = StragglerPolicy(["t0", "t1"], ratio=2.0, window=10.0)
+    c.install(pol)
+    for i in range(10):
+        col.observe("t0.step_time", 0.01, 0.1 * i)
+        col.observe("t1.step_time", 0.08, 0.1 * i)   # 8x slower
+    c.start()
+    loop.run_until(1.0)
+    assert "t1" in pol.demoted
+    assert slow.values["admit_priority_min"] == 1
+    # straggler recovers
+    for i in range(40):
+        col.observe("t1.step_time", 0.01, 1.0 + 0.1 * i)
+    loop.run_until(8.0)
+    assert "t1" not in pol.demoted
+    assert slow.values["admit_priority_min"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Elastic scaling + serving failover
+# ---------------------------------------------------------------------------
+
+def _pipeline(n_testers=2):
+    from repro.agents import AgenticPipeline, PipelineConfig
+    return AgenticPipeline(PipelineConfig(n_testers=n_testers))
+
+
+def test_elastic_scale_up():
+    p = _pipeline(1)
+    grp = ElasticGroup(p)
+    name = grp.scale_up()
+    assert name == "tester-1"
+    assert len(p.router.instances) == 2
+    assert name in p.registry.names()
+
+
+def test_failover_requeues_and_reroutes():
+    from repro.agents import TaskSpec
+    p = _pipeline(2)
+    grp = ElasticGroup(p)
+    # run some sessions so tester-0 owns state
+    for i in range(6):
+        p.submit(TaskSpec(session=f"fs-{i}", n_functions=2, func_tokens=16,
+                          test_tokens=16))
+    p.run(until=3.0)
+    victim = p.testers[0].name
+    moved = grp.fail_over(victim)
+    assert victim not in p.router.instances
+    # all session homes now point at survivors
+    for rec in p.directory.records.values():
+        assert rec.instance != victim
+    p.loop.run_until(60.0)
+    # pipeline still makes progress after the failure
+    assert len(p.done) >= 1

@@ -1,0 +1,175 @@
+"""Scheduler + page-allocator invariants, including hypothesis property
+tests over random workloads."""
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.types import Priority, Request, RequestState
+from repro.serving.kv_cache import PageAllocator
+from repro.serving.scheduler import Scheduler, SchedulerConfig, StepKind
+
+
+def _req(prompt=10, gen=5, prio=Priority.NORMAL):
+    return Request(prompt_len=prompt, max_new_tokens=gen, priority=prio)
+
+
+# ---------------------------------------------------------------------------
+# PageAllocator
+# ---------------------------------------------------------------------------
+
+def test_allocator_basic():
+    a = PageAllocator(num_pages=10, page_size=128)
+    assert a.pages_for(1) == 1 and a.pages_for(128) == 1
+    assert a.pages_for(129) == 2
+    assert a.allocate("s1", 1000)        # 8 pages
+    assert a.free_pages == 2
+    assert not a.allocate("s2", 512)     # needs 4
+    assert a.allocate("s2", 256)         # 2 fits
+    a.free("s1")
+    assert a.free_pages == 8
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["alloc", "grow", "free"]),
+                          st.integers(0, 7),
+                          st.integers(0, 2000)), max_size=40))
+def test_allocator_never_oversubscribes(ops):
+    a = PageAllocator(num_pages=16, page_size=128)
+    for op, sid, toks in ops:
+        s = f"s{sid}"
+        if op == "alloc":
+            a.allocate(s, toks)
+        elif op == "grow":
+            a.grow_to(s, toks)
+        else:
+            a.free(s)
+        used = sum(a._used.values())
+        assert 0 <= used <= a.num_pages
+        assert a.free_pages == a.num_pages - used
+
+
+# ---------------------------------------------------------------------------
+# Scheduler
+# ---------------------------------------------------------------------------
+
+def test_priority_admission_order():
+    s = Scheduler(SchedulerConfig(max_slots=1, num_pages=64))
+    lo = _req(prio=Priority.LOW)
+    hi = _req(prio=Priority.INTERACTIVE)
+    s.submit(lo)
+    s.submit(hi)
+    plan = s.plan_step()
+    assert plan.kind == StepKind.PREFILL
+    assert plan.prefills[0].req is hi            # one slot: high prio wins
+
+
+def test_admit_priority_min_floor():
+    s = Scheduler(SchedulerConfig(max_slots=4, num_pages=64,
+                                  admit_priority_min=1))
+    lo = _req(prio=Priority.LOW)
+    s.submit(lo)
+    assert s.plan_step().kind == StepKind.IDLE   # LOW = 0 < floor
+    s.set_knob("admit_priority_min", 0)
+    assert s.plan_step().kind == StepKind.PREFILL
+
+
+def test_prefill_chunking_respects_budget():
+    s = Scheduler(SchedulerConfig(max_slots=4, num_pages=1024,
+                                  max_batch_tokens=64, prefill_chunk=32))
+    r = _req(prompt=200, gen=1)
+    s.submit(r)
+    plan = s.plan_step()
+    assert plan.kind == StepKind.PREFILL
+    assert sum(w.chunk for w in plan.prefills) <= 64
+
+
+def test_progressive_availability_gates_prefill():
+    s = Scheduler(SchedulerConfig(max_slots=2, num_pages=64))
+    r = _req(prompt=100, gen=4)
+    r.available = 0                               # nothing arrived yet
+    s.submit(r)
+    assert s.plan_step().kind == StepKind.IDLE
+    r.feed(30)
+    plan = s.plan_step()
+    assert plan.kind == StepKind.PREFILL
+    assert plan.prefills[0].chunk == 30
+    r.prefilled = 30
+    r.feed(70)
+    plan = s.plan_step()
+    assert plan.prefills[0].chunk == 70
+
+
+def test_require_complete_prompt():
+    s = Scheduler(SchedulerConfig(max_slots=2, num_pages=64,
+                                  require_complete_prompt=True))
+    r = _req(prompt=100, gen=4)
+    r.available = 50
+    s.submit(r)
+    assert s.plan_step().kind == StepKind.IDLE
+    r.feed(50)
+    assert s.plan_step().kind == StepKind.PREFILL
+
+
+def test_preemption_picks_lowest_priority_youngest():
+    s = Scheduler(SchedulerConfig(max_slots=4, num_pages=12, page_size=128,
+                                  max_context=1024))
+    a = _req(prompt=256, gen=10, prio=Priority.HIGH)
+    a.arrival_time = 0.0
+    b = _req(prompt=256, gen=10, prio=Priority.LOW)
+    b.arrival_time = 1.0
+    c = _req(prompt=256, gen=10, prio=Priority.LOW)
+    c.arrival_time = 2.0
+    for r in (a, b, c):
+        s.submit(r)
+    s.plan_step()                                 # admits all three
+    for r in (a, b, c):                           # prefill done -> running
+        r.prefilled = r.prompt_len
+        r.state = RequestState.RUNNING
+    victim = s.preempt_one()
+    assert victim is c                            # low prio, youngest
+    assert victim.state == RequestState.PREEMPTED
+    assert victim in s.waiting
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(st.integers(1, 300), st.integers(1, 20),
+                          st.sampled_from(list(Priority))), min_size=1,
+                max_size=24))
+def test_scheduler_invariants_random_workload(reqs):
+    """Drive random workloads to completion; invariants hold throughout."""
+    s = Scheduler(SchedulerConfig(max_slots=4, num_pages=32, page_size=128,
+                                  max_context=512, max_batch_tokens=256))
+    pending = [Request(prompt_len=p, max_new_tokens=g, priority=pr)
+               for p, g, pr in reqs]
+    for r in pending:
+        r.prompt_len = min(r.prompt_len, 300)
+        s.submit(r)
+    for step in range(2000):
+        plan = s.plan_step()
+        # invariant: slots never oversubscribed
+        assert s.slots_in_use() <= s.cfg.max_slots
+        assert s.slots_in_use() == len(s.running)
+        # invariant: every running request holds pages
+        for r in s.running:
+            assert s.alloc.holds(r.req_id) > 0
+        if plan.kind == StepKind.IDLE:
+            break
+        if plan.kind == StepKind.PREFILL:
+            for w in plan.prefills:
+                w.req.prefilled += w.chunk
+                if w.req.prefilled >= w.req.prompt_len:
+                    w.req.state = RequestState.RUNNING
+        else:
+            for r in plan.decodes:
+                if not s.ensure_decode_capacity(r):
+                    continue
+                if r.state != RequestState.RUNNING:
+                    continue
+                r.generated += 1
+                if r.done:
+                    s.finish(r, float(step))
+    # everything either finished or was preempted/waiting — no leaks
+    assert s.slots_in_use() == len(s.running)
+    finished = [r for r in pending if r.state == RequestState.FINISHED]
+    for r in finished:
+        assert s.alloc.holds(r.req_id) == 0       # pages released
