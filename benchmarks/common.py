@@ -40,3 +40,12 @@ class Report:
         out += [r.csv() for r in self.rows]
         out += [f"# {n}" for n in self.notes]
         return "\n".join(out)
+
+    def to_dict(self) -> dict:
+        """JSON-shaped summary so the perf trajectory is trackable
+        across PRs (benchmarks/run.py writes BENCH_<section>.json)."""
+        return {
+            "title": self.title,
+            "rows": [{"name": r.name, **r.fields} for r in self.rows],
+            "notes": list(self.notes),
+        }

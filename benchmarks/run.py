@@ -2,38 +2,56 @@
 kernel microbench and (if dry-run artifacts exist) the roofline tables.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig3,fig6,...]
+                                            [--out-dir artifacts/bench]
+
+Each section's table is also written as ``BENCH_<section>.json`` (plus a
+combined ``BENCH_summary.json``) so the perf trajectory can be tracked
+across PRs by diffing machine-readable artifacts instead of log text.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 from pathlib import Path
+
+
+def _emit(out_dir: Path, name: str, payload: dict) -> None:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    path = out_dir / f"BENCH_{name}.json"
+    path.write_text(json.dumps(payload, indent=2, default=str) + "\n")
+    print(f"# wrote {path}", flush=True)
 
 
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all",
                     help="comma list: fig3,fig6,fig7,kernels,roofline")
+    ap.add_argument("--out-dir", default="artifacts/bench",
+                    help="directory for BENCH_*.json summaries")
     args = ap.parse_args()
     want = None if args.only == "all" else set(args.only.split(","))
+    out_dir = Path(args.out_dir)
 
+    summary: dict[str, dict] = {}
     names = [n for n in ("fig3", "fig6", "fig7", "kernels", "roofline")
              if want is None or n in want]
     for name in names:
         t0 = time.time()
         print(f"\n######## {name} ########", flush=True)
+        report = None
         if name == "fig3":
             from benchmarks import bench_fig3
-            print(bench_fig3.main().render())
+            report = bench_fig3.main()
         elif name == "fig6":
             from benchmarks import bench_fig6
-            print(bench_fig6.main().render())
+            report = bench_fig6.main()
         elif name == "fig7":
             from benchmarks import bench_fig7
-            print(bench_fig7.main().render())
+            report = bench_fig7.main()
         elif name == "kernels":
             from benchmarks import bench_kernels
-            print(bench_kernels.main().render())
+            report = bench_kernels.main()
         elif name == "roofline":
             from benchmarks import roofline
             if Path("artifacts/dryrun").exists():
@@ -41,7 +59,15 @@ def main() -> int:
             else:
                 print("# no artifacts/dryrun — run "
                       "`python -m repro.launch.dryrun` first")
-        print(f"# section {name} took {time.time()-t0:.1f}s", flush=True)
+        elapsed = time.time() - t0
+        if report is not None:
+            print(report.render())
+            payload = {**report.to_dict(), "elapsed_s": round(elapsed, 2)}
+            summary[name] = payload
+            _emit(out_dir, name, payload)
+        print(f"# section {name} took {elapsed:.1f}s", flush=True)
+    if summary:
+        _emit(out_dir, "summary", summary)
     return 0
 
 

@@ -7,7 +7,7 @@ re-homed, in-flight work re-queued on survivors), then scale back up.
 from repro.agents import AgenticPipeline, PipelineConfig, WorkloadConfig
 from repro.agents.workloads import launch_clients
 from repro.core.types import Granularity
-from repro.runtime import ElasticGroup, HeartbeatMonitor
+from repro.runtime import HeartbeatMonitor
 from repro.runtime.heartbeat import attach_engine
 
 
@@ -17,7 +17,10 @@ def main():
     mon = HeartbeatMonitor(p.loop, miss_timeout=1.0)
     for t in p.testers:
         attach_engine(mon, t.engine)
-    grp = ElasticGroup(p, monitor=mon)
+    # reuse the pipeline's registered group — one drain/scale authority
+    # per fleet (a second ElasticGroup would track draining separately)
+    grp = p.elastic
+    grp.monitor = mon
 
     events = []
 

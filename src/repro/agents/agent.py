@@ -20,8 +20,9 @@ from dataclasses import dataclass, field
 from typing import Callable, Optional
 
 from repro.core.dataplane import Channel
-from repro.core.types import (AgentCard, Message, Priority, Request,
-                              RequestState, fresh_id)
+from repro.core.knobs import ControlSurface, KnobSpec
+from repro.core.types import (Message, Priority, Request, RequestState,
+                              fresh_id)
 from repro.serving.engine_base import EngineCore
 from repro.serving.kv_transfer import KVTransferManager, SessionDirectory
 from repro.sim.clock import EventLoop
@@ -270,7 +271,7 @@ class TesterAgent:
 # ---------------------------------------------------------------------------
 
 
-class ToolAgent:
+class ToolAgent(ControlSurface):
     """A fixed-latency tool (code executor / retriever / file system).
 
     Not an LLM: its metrics are call latency and queue depth, and its
@@ -278,7 +279,15 @@ class ToolAgent:
     that tools need *different* metrics under the same unified plane.
     """
 
-    KNOBS = ("concurrency", "throttle")
+    kind = "tool"
+    CAPABILITIES = ("throttle",)
+    METRICS = ("tool_latency", "tool_queue")
+    KNOB_SPECS = (
+        KnobSpec("concurrency", kind="int", lo=1,
+                 doc="max simultaneous tool calls"),
+        KnobSpec("throttle", kind="float", lo=0.0,
+                 doc="artificial per-call latency in seconds"),
+    )
 
     def __init__(self, name: str, loop: EventLoop, latency: float = 0.05,
                  concurrency: int = 2, collector=None):
@@ -288,7 +297,6 @@ class ToolAgent:
         self.concurrency = concurrency
         self.throttle = 0.0
         self.collector = collector
-        self._defaults: dict[str, object] = {}
         self._busy = 0
         self._queue: list[tuple[Message, Callable]] = []
         self.calls = 0
@@ -297,27 +305,8 @@ class ToolAgent:
                 f"{name}.tool_latency",
                 "Tool call latency in seconds; lower is better.")
 
-    def card(self) -> AgentCard:
-        return AgentCard(name=self.name, kind="tool",
-                         knobs={k: getattr(self, k) for k in self.KNOBS},
-                         metrics=("tool_latency", "tool_queue"),
-                         capabilities=("throttle",))
-
-    def get_param(self, name: str):
-        if name not in self.KNOBS:
-            raise KeyError(name)
-        return getattr(self, name)
-
-    def set_param(self, name: str, value) -> None:
-        if name not in self.KNOBS:
-            raise KeyError(name)
-        self._defaults.setdefault(name, getattr(self, name))
-        setattr(self, name, type(getattr(self, name))(value))
-        self._pump()
-
-    def reset_param(self, name: str) -> None:
-        if name in self._defaults:
-            self.set_param(name, self._defaults[name])
+    def on_knob_set(self, name: str, old, new) -> None:
+        self._pump()                    # raised concurrency drains the queue
 
     # -- endpoint -------------------------------------------------------------
     def deliver(self, msg: Message, on_done: Optional[Callable] = None) -> None:

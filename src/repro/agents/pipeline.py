@@ -15,7 +15,7 @@ from repro.agents.agent import DeveloperAgent, TesterAgent
 from repro.configs import get_config
 from repro.core.controller import Controller
 from repro.core.dataplane import Channel
-from repro.core.metrics import CentralPoller, Collector, StateStore
+from repro.core.metrics import CentralPoller, Collector, MetricBus, StateStore
 from repro.core.registry import Registry
 from repro.core.types import Granularity, Priority, fresh_id
 from repro.serving.engine_sim import SimEngine
@@ -67,13 +67,15 @@ class AgenticPipeline:
     def __init__(self, cfg: PipelineConfig, loop: Optional[EventLoop] = None):
         self.cfg = cfg
         self.loop = loop or EventLoop()
-        self.collector = Collector("pipeline")
+        self.bus = MetricBus()
+        self.collector = Collector("pipeline", bus=self.bus)
         self.store = StateStore()
         self.poller = CentralPoller(self.store)
         self.poller.attach(self.collector)
         self.registry = Registry()
         self.controller = Controller(self.loop, self.registry, self.poller,
-                                     interval=cfg.controller_interval)
+                                     interval=cfg.controller_interval,
+                                     bus=self.bus)
 
         model_cfg = get_config(cfg.model)
         self.costmodel = CostModel(model_cfg, chips=cfg.tester_chips)
@@ -128,6 +130,14 @@ class AgenticPipeline:
         self.controller.attach_transfer(
             lambda sess, src, dst, proactive: self.kvx.transfer(
                 sess, src, dst, proactive=proactive))
+
+        # --- elastic tester group: a "group" controllable so intent v2's
+        # ``scale tester-group ±N`` reaches the fleet through the same
+        # Table-1 surface as every other knob (import is deferred —
+        # runtime/elastic imports agents/agent)
+        from repro.runtime.elastic import ElasticGroup
+        self.elastic = ElasticGroup(self, name="tester-group")
+        self.registry.register(self.elastic)
 
         # --- bookkeeping -------------------------------------------------------
         self._inflight: dict[str, TaskSpec] = {}

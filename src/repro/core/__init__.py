@@ -9,10 +9,12 @@
 from repro.core.controller import (Action, ControlContext, Controller,
                                    Policy)
 from repro.core.dataplane import Channel
-from repro.core.intent import IntentError, IntentPolicy, compile_intent
+from repro.core.intent import (IntentError, IntentPolicy, Trigger,
+                               compile_intent)
+from repro.core.knobs import ControlSurface, KnobSpec
 from repro.core.metrics import (AGGREGATIONS, CentralPoller, Collector,
-                                MetricSpec, StateStore,
-                                register_aggregation)
+                                MetricBus, MetricSpec, StateStore,
+                                ThresholdSub, register_aggregation)
 from repro.core.registry import Registry
 from repro.core.rules import AgentRule, RequestRule, RuleTable
 from repro.core.types import (AgentCard, Granularity, Message, Priority,
@@ -20,8 +22,9 @@ from repro.core.types import (AgentCard, Granularity, Message, Priority,
 
 __all__ = [
     "AGGREGATIONS", "Action", "AgentCard", "AgentRule", "CentralPoller",
-    "Channel", "Collector", "ControlContext", "Controller", "Granularity",
-    "IntentError", "IntentPolicy", "Message", "MetricSpec", "Policy",
-    "Priority", "Registry", "Request", "RequestRule", "RequestState",
-    "RuleTable", "StateStore", "compile_intent", "register_aggregation",
+    "Channel", "Collector", "ControlContext", "ControlSurface", "Controller",
+    "Granularity", "IntentError", "IntentPolicy", "KnobSpec", "Message",
+    "MetricBus", "MetricSpec", "Policy", "Priority", "Registry", "Request",
+    "RequestRule", "RequestState", "RuleTable", "StateStore", "ThresholdSub",
+    "Trigger", "compile_intent", "register_aggregation",
 ]

@@ -4,10 +4,13 @@ A logically centralized controller that
 
 1. polls the metrics plane into its ``StateStore`` on a fixed interval
    (the paper's centralized on-demand polling),
-2. runs installed **policies** — closed-loop programs written against the
+2. reacts to **events** between polls: named events agents push
+   (``task_start`` …) and ``MetricBus`` threshold subscriptions — the
+   hybrid event/interval control loop,
+3. runs installed **policies** — closed-loop programs written against the
    store + registry (hand-written, or compiled from the declarative
    intent language in core/intent.py),
-3. enforces decisions through the Table-1 ``set()/reset()`` surface and
+4. enforces decisions through the Table-1 ``set()/reset()`` surface and
    the **rule table** (agent-level + request-level rules) the data plane
    consults.
 
@@ -21,7 +24,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
-from repro.core.metrics import CentralPoller, StateStore
+from repro.core.metrics import CentralPoller, MetricBus, StateStore
 from repro.core.registry import Registry
 from repro.core.rules import AgentRule, RequestRule, RuleTable
 from repro.core.types import Granularity
@@ -53,6 +56,11 @@ class ControlContext:
     def metric(self, name: str, agg: Optional[str] = None,
                window: float = float("inf"), default: float = 0.0) -> float:
         return self.store.get(name, agg, window, default)
+
+    def refresh(self) -> None:
+        """On-demand poll: event handlers call this so guards read the
+        current metric window, not the previous tick's."""
+        self._c.poller.poll(self.now)
 
     # -- Table-1 surface ---------------------------------------------------------
     def set(self, target: str, knob: str, value) -> None:
@@ -96,6 +104,26 @@ class ControlContext:
         self._c._log("transfer", f"{src}->{dst}",
                      f"session={session} proactive={proactive}")
 
+    # -- intent v2 verbs ---------------------------------------------------------
+    def scale_to(self, group: str, n: int) -> None:
+        """Set a group's replica target (intent ``scale GROUP N``)."""
+        cur = int(self.get(group, "replicas"))
+        n = max(1, int(n))
+        if n == cur:
+            return
+        self._c.registry.set(group, "replicas", n)
+        self._c._log("scale", group, f"replicas {cur}->{n}")
+
+    def scale(self, group: str, delta: int) -> None:
+        """Scale a group by ±delta replicas (intent ``scale GROUP ±N``)."""
+        cur = int(self.get(group, "replicas"))
+        self.scale_to(group, cur + int(delta))
+
+    def gate(self, channel: str, on: bool) -> None:
+        """Gate/release a channel's speculative traffic
+        (intent ``gate CHANNEL on|off``)."""
+        self.set(channel, "gate_speculative", bool(on))
+
     def note(self, target: str, detail: str) -> None:
         self._c._log("note", target, detail)
 
@@ -112,26 +140,35 @@ class Policy:
         """Optional push-path: agents raise events (task_start, task_done,
         instance_failed) the controller forwards between polls."""
 
+    def on_install(self, controller: "Controller") -> None:
+        """Bind-time hook: e.g. intent programs register their ``on``
+        triggers as MetricBus threshold subscriptions here."""
+
 
 class Controller:
     def __init__(self, loop: EventLoop, registry: Registry,
                  poller: CentralPoller, store: Optional[StateStore] = None,
-                 interval: float = 0.05):
+                 interval: float = 0.05, bus: Optional[MetricBus] = None):
         self.loop = loop
         self.registry = registry
         self.poller = poller
         self.store = store or poller.store
         self.interval = interval
+        self.bus = bus
         self.rules = RuleTable()
         self.policies: list[Policy] = []
         self.actions: list[Action] = []
         self.transfer_fn: Optional[Callable] = None
         self._running = False
         self.ticks = 0
+        self.events_handled = 0
 
     # -- policy management ---------------------------------------------------
     def install(self, policy: Policy) -> None:
         self.policies.append(policy)
+        hook = getattr(policy, "on_install", None)
+        if hook is not None:
+            hook(self)
 
     def attach_transfer(self, fn: Callable) -> None:
         self.transfer_fn = fn
@@ -162,6 +199,39 @@ class Controller:
         ctx = ControlContext(self)
         for p in self.policies:
             p.on_event(ctx, kind, **kw)
+
+    # -- event tier (MetricBus threshold subscriptions) --------------------------
+    def watch_metric(self, metric: str, above: Optional[float] = None,
+                     below: Optional[float] = None, cooldown: float = 0.0,
+                     edge: bool = True):
+        """Subscribe the control loop to a metric threshold: when the
+        data plane pushes a sample into the region, policies get an
+        ``on_event(ctx, "metric", ...)`` *between* interval polls.
+        Requires a MetricBus; returns the subscription handle."""
+        if self.bus is None:
+            raise RuntimeError("controller has no MetricBus attached")
+        return self.bus.subscribe(
+            metric, above=above, below=below, cooldown=cooldown, edge=edge,
+            fn=lambda name, value, t: self._defer(
+                lambda: self.event("metric", name=name, value=value, t=t)))
+
+    def _defer(self, fn: Callable[[], None]) -> None:
+        """Run a control action on the next loop turn.  Bus callbacks
+        arrive *inside* data-plane writes (mid engine-step); deferring
+        keeps control actions from mutating scheduler state re-entrantly."""
+        self.loop.call_after(0.0, fn)
+
+    def fire_on_event(self, run: Callable[[ControlContext], None],
+                      reason: str = "") -> None:
+        """Event-path entry used by intent programs: on-demand poll for a
+        fresh window, then run ``run(ctx)`` — deferred one loop turn."""
+        def _go():
+            self.poller.poll(self.loop.now())
+            self.events_handled += 1
+            if reason:
+                self._log("event", "bus", reason)
+            run(ControlContext(self))
+        self._defer(_go)
 
     # -- audit ---------------------------------------------------------------------
     def _log(self, kind: str, target: str, detail: str) -> None:

@@ -25,7 +25,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Callable, Optional, Protocol
 
-from repro.core.types import AgentCard, Granularity, Message, Priority
+from repro.core.knobs import ControlSurface, KnobSpec
+from repro.core.types import Granularity, Message, Priority
 from repro.sim.clock import EventLoop
 from repro.sim.network import Link
 
@@ -49,11 +50,25 @@ class _TaskBuf:
     open_unit_tokens: int = 0        # tokens in the currently-open unit
 
 
-class Channel:
+class Channel(ControlSurface):
     """One directed agent→agent (or agent→router) communication shim."""
 
-    KNOBS = ("granularity", "stream_chunk", "pace", "priority",
-             "gate_speculative")
+    kind = "channel"
+    CAPABILITIES = ("granularity", "pace", "gate")
+    METRICS = ("msgs_sent", "bytes_sent", "link_delay")
+    KNOB_SPECS = (
+        KnobSpec("granularity", enum=Granularity,
+                 on_change="_granularity_changed",
+                 doc="BATCH/PIPELINE/STREAM buffering of the token flow"),
+        KnobSpec("stream_chunk", kind="int", lo=1,
+                 doc="tokens per message under STREAM"),
+        KnobSpec("pace", kind="float", lo=0.0,
+                 doc="min seconds between flushes"),
+        KnobSpec("priority", enum=Priority,
+                 doc="priority stamped on outgoing messages"),
+        KnobSpec("gate_speculative", kind="bool", on_change="_gate_changed",
+                 doc="hold speculative messages until released"),
+    )
 
     def __init__(self, loop: EventLoop, link: Link, src: str, dst: Endpoint,
                  name: Optional[str] = None, collector=None,
@@ -70,51 +85,22 @@ class Channel:
         self.pace = 0.0                      # min seconds between flushes
         self.priority = Priority.NORMAL
         self.gate_speculative = False
-        self._defaults: dict[str, object] = {}
         self._bufs: dict[str, _TaskBuf] = {}
         self._held: list[Message] = []       # gated speculative messages
         self._last_flush = -1e18
         self.msgs_sent = 0
         self.tokens_sent = 0
 
-    # ------------------------------------------------------------- set/reset
-    def card(self) -> AgentCard:
-        return AgentCard(
-            name=self.name, kind="channel",
-            knobs={k: self.get_param(k) for k in self.KNOBS},
-            metrics=("msgs_sent", "bytes_sent", "link_delay"),
-            capabilities=("granularity", "pace", "gate"))
+    # -------------------------------------------------- knob change hooks
+    # (get/set/reset/card come from ControlSurface)
+    def _granularity_changed(self, old, new) -> None:
+        # re-evaluate buffers under the new mode immediately
+        for buf in list(self._bufs.values()):
+            self._maybe_flush(buf)
 
-    def get_param(self, name: str):
-        if name not in self.KNOBS:
-            raise KeyError(f"{self.name}: unknown knob {name!r}")
-        return getattr(self, name)
-
-    def set_param(self, name: str, value) -> None:
-        if name not in self.KNOBS:
-            raise KeyError(f"{self.name}: unknown knob {name!r}")
-        self._defaults.setdefault(name, self.get_param(name))
-        if name == "granularity":
-            value = Granularity(value)
-        elif name == "stream_chunk":
-            value = max(1, int(value))
-        elif name == "pace":
-            value = float(value)
-        elif name == "priority":
-            value = Priority(value)
-        elif name == "gate_speculative":
-            value = bool(value)
-        setattr(self, name, value)
-        if name == "gate_speculative" and not value:
+    def _gate_changed(self, old, new) -> None:
+        if not new:
             self.release_held()
-        if name == "granularity":
-            # re-evaluate buffers under the new mode immediately
-            for buf in list(self._bufs.values()):
-                self._maybe_flush(buf)
-
-    def reset_param(self, name: str) -> None:
-        if name in self._defaults:
-            self.set_param(name, self._defaults[name])
 
     # ------------------------------------------------------------- producer
     def begin_task(self, task_id: str, session: Optional[str] = None,

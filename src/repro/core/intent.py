@@ -1,4 +1,4 @@
-"""Declarative intent language (paper §3.1 goal 3, §5 "Languages for
+"""Declarative intent language v2 (paper §3.1 goal 3, §5 "Languages for
 Agentic Control").
 
 Infrastructure engineers express goals without touching control-plane
@@ -8,28 +8,51 @@ internals; the compiler turns them into a closed-loop ``Policy``:
 
     rule high_load: when mean(tester.queue_len, 2.0) > 8
         => granularity dev->tester batch
-    rule mid_load: when mean(tester.queue_len, 2.0) > 2
-        => granularity dev->tester pipeline
     rule low_load hold 0.5: when mean(tester.queue_len, 2.0) <= 2
         => granularity dev->tester stream; reset tester-0.admit_priority_min
+    # v2: event-triggered rules — fired by MetricBus threshold pushes
+    # (or named controller events) BETWEEN interval polls
+    rule burst on tester-0.queue_len > 12 hold 4:
+        => scale tester-group +1; gate dev->tester on
 
 Grammar (line oriented; '#' comments):
 
     objective: (minimize|maximize) EXPR [under COND]
-    rule NAME [hold SECONDS]: when COND => ACTION (';' ACTION)*
+    rule NAME [hold SECONDS] [on EVENT] [hold SECONDS]:
+        [when COND] => ACTION (';' ACTION)*
 
+    EVENT  := METRIC CMP NUMBER        (MetricBus threshold subscription)
+            | NAME                     (named controller event, e.g.
+                                        task_start, instance_failed)
     COND   := TERM (('and'|'or') TERM)*
     TERM   := AGG '(' METRIC [',' WINDOW] ')' CMP NUMBER
+    METRIC := exact series name, or a glob (``tester-*.queue_len``)
+              pooling every matching series fleet-wide
     ACTION := set TARGET.KNOB VALUE | reset TARGET.KNOB
             | granularity CHANNEL (batch|pipeline|stream)
             | route SESSION INSTANCE | pace CHANNEL SECONDS
+            | scale GROUP (+N|-N|N) | gate CHANNEL (on|off)
+            | transfer SESSION SRC DST
             | note TEXT
 
-Rules are evaluated top-to-bottom each controller tick; **the first rule
-whose condition holds fires** (guarded-command semantics — put the most
-specific condition first), unless it is still within its ``hold``
+A rule must have a ``when`` condition, an ``on`` trigger, or both.
+
+Tick rules are evaluated top-to-bottom each controller tick; **the first
+rule whose condition holds fires** (guarded-command semantics — put the
+most specific condition first), unless it is still within its ``hold``
 window.  ``set`` is idempotent at the controller, so a firing rule does
 not thrash knobs that already hold the target value.
+
+``on`` rules are event-driven: installed on a controller with a
+``MetricBus`` they become threshold subscriptions (fresh on-demand
+poll, then the ``when`` guard, then the actions — all between interval
+ticks).  With a ``hold`` the subscription is level-triggered and
+``hold`` is the re-fire cooldown, so a *sustained* breach keeps firing
+(e.g. keep adding replicas while overloaded); without one it is
+edge-triggered and fires once per excursion.  Without a bus the rules
+degrade gracefully to tick rules whose trigger becomes a
+``last(METRIC) CMP NUMBER`` condition term, so the same program runs on
+both control-plane generations.
 """
 from __future__ import annotations
 
@@ -55,7 +78,7 @@ _CMP = {
 }
 
 _TERM_RE = re.compile(
-    r"^\s*(?P<agg>\w+)\s*\(\s*(?P<metric>[\w.>\-]+)"
+    r"^\s*(?P<agg>\w+)\s*\(\s*(?P<metric>[\w.>\-*?\[\]]+)"
     r"\s*(?:,\s*(?P<window>[\d.]+)\s*)?\)\s*"
     r"(?P<cmp><=|>=|==|!=|<|>)\s*(?P<num>-?[\d.]+(?:e-?\d+)?)\s*$")
 
@@ -154,26 +177,97 @@ def _parse_action(text: str, lineno: int) -> Callable[[ControlContext], None]:
     if op == "route" and len(args) == 2:
         sess, inst = args
         return lambda ctx: ctx.route(sess, inst)
+    if op == "scale" and len(args) == 2:
+        group, amt = args
+        if not re.fullmatch(r"[+-]?\d+", amt):
+            raise IntentError(
+                f"line {lineno}: scale needs GROUP +N|-N|N, got {amt!r}")
+        if amt[0] in "+-":
+            delta = int(amt)
+            return lambda ctx: ctx.scale(group, delta)
+        target = int(amt)
+        return lambda ctx: ctx.scale_to(group, target)
+    if op == "gate" and len(args) == 2:
+        chan, sw = args
+        if sw not in ("on", "off"):
+            raise IntentError(
+                f"line {lineno}: gate needs CHANNEL on|off, got {sw!r}")
+        return lambda ctx: ctx.gate(chan, sw == "on")
+    if op == "transfer" and len(args) == 3:
+        sess, src, dst = args
+        return lambda ctx: ctx.transfer_kv(sess, src, dst, proactive=True)
     if op == "note":
         text_ = " ".join(args)
         return lambda ctx: ctx.note("intent", text_)
     raise IntentError(f"line {lineno}: unknown action {text!r}")
 
 
+_TRIGGER_RE = re.compile(
+    r"^(?P<metric>[\w.>\-*?\[\]]+)\s*(?P<cmp><=|>=|==|!=|<|>)\s*"
+    r"(?P<num>-?[\d.]+(?:e-?\d+)?)$")
+_EVENT_NAME_RE = re.compile(r"^[\w\-]+$")
+
+
+@dataclass(frozen=True)
+class Trigger:
+    """``on`` clause of a v2 rule: a metric threshold (MetricBus
+    subscription) or a named controller event (task_start, ...)."""
+
+    event: Optional[str] = None
+    metric: Optional[str] = None
+    cmp: Optional[str] = None
+    value: Optional[float] = None
+
+    def as_term(self) -> Term:
+        """Tick-path fallback when no MetricBus is attached."""
+        return Term("last", self.metric, float("inf"), self.cmp, self.value)
+
+    def describe(self) -> str:
+        if self.event is not None:
+            return self.event
+        return f"{self.metric} {self.cmp} {self.value:g}"
+
+
+def _parse_trigger(text: str, lineno: int) -> Trigger:
+    text = text.strip()
+    m = _TRIGGER_RE.match(text)
+    if m:
+        return Trigger(metric=m.group("metric"), cmp=m.group("cmp"),
+                       value=float(m.group("num")))
+    if _EVENT_NAME_RE.match(text):
+        return Trigger(event=text)
+    raise IntentError(f"line {lineno}: bad trigger {text!r} "
+                      "(want METRIC CMP NUMBER or an event name)")
+
+
 @dataclass
 class IntentRule:
     name: str
-    cond: Cond
+    cond: Optional[Cond]
     actions: list[Callable]
     hold: float = 0.0
+    trigger: Optional[Trigger] = None
+    bus_bound: bool = False            # trigger registered on a MetricBus
     last_fired: float = -1e18
     fire_count: int = 0
 
-    def maybe_fire(self, ctx: ControlContext) -> bool:
-        if not self.cond.eval(ctx):
+    def _guard_holds(self, ctx: ControlContext, from_event: bool) -> bool:
+        # on the tick path an unbound metric trigger degrades to a
+        # last(METRIC) CMP NUMBER term; on the event path the bus already
+        # established it, so only the explicit `when` guard remains
+        if (not from_event and self.trigger is not None
+                and self.trigger.metric is not None):
+            if not self.trigger.as_term().eval(ctx):
+                return False
+        if self.cond is not None and not self.cond.eval(ctx):
+            return False
+        return True
+
+    def maybe_fire(self, ctx: ControlContext, from_event: bool = False) -> bool:
+        if not self._guard_holds(ctx, from_event):
             return False
         if ctx.now - self.last_fired < self.hold:
-            return True                 # matched but held: still consumes
+            return not from_event       # matched but held: still consumes
         self.last_fired = ctx.now
         self.fire_count += 1
         for act in self.actions:
@@ -195,7 +289,8 @@ class Objective:
 
 
 class IntentPolicy(Policy):
-    """A compiled intent program: guarded rules over the state store."""
+    """A compiled intent program: guarded rules over the state store,
+    plus v2 event rules bound to the controller's MetricBus."""
 
     def __init__(self, objective: Optional[Objective],
                  rules: list[IntentRule], source: str = ""):
@@ -204,10 +299,46 @@ class IntentPolicy(Policy):
         self.source = source
         self.name = "intent"
 
+    # -- bind time ----------------------------------------------------------
+    def on_install(self, controller) -> None:
+        bus = getattr(controller, "bus", None)
+        if bus is None:
+            return                     # metric triggers degrade to tick path
+        for rule in self.rules:
+            trig = rule.trigger
+            if trig is None or trig.metric is None:
+                continue
+            cmp_fn = _CMP[trig.cmp]
+            # with a hold, level-trigger so a sustained breach re-fires
+            # every `hold` seconds (e.g. keep scaling while overloaded);
+            # without one, edge-trigger so it can't storm
+            bus.subscribe(
+                trig.metric,
+                predicate=lambda v, f=cmp_fn, x=trig.value: f(v, x),
+                cooldown=rule.hold, edge=rule.hold <= 0,
+                fn=lambda name, value, t, r=rule: controller.fire_on_event(
+                    lambda ctx: r.maybe_fire(ctx, from_event=True),
+                    reason=f"rule {r.name}: {name}={value:.4g}"))
+            rule.bus_bound = True
+
+    # -- interval path -------------------------------------------------------
     def on_tick(self, ctx: ControlContext) -> None:
         for rule in self.rules:
+            if rule.trigger is not None and (rule.bus_bound
+                                             or rule.trigger.event):
+                continue               # event rules never tick
             if rule.maybe_fire(ctx):
                 return                 # guarded commands: first match wins
+
+    # -- event path ----------------------------------------------------------
+    def on_event(self, ctx: ControlContext, kind: str, **kw) -> None:
+        fresh = False
+        for rule in self.rules:
+            if rule.trigger is not None and rule.trigger.event == kind:
+                if not fresh:
+                    ctx.refresh()      # `when` guards read current metrics,
+                    fresh = True       # not the previous tick's window
+                rule.maybe_fire(ctx, from_event=True)
 
     # -- introspection -----------------------------------------------------
     def stats(self) -> dict[str, int]:
@@ -215,8 +346,11 @@ class IntentPolicy(Policy):
 
 
 _RULE_RE = re.compile(
-    r"^rule\s+(?P<name>[\w\-]+)(?:\s+hold\s+(?P<hold>[\d.]+))?\s*:"
-    r"\s*when\s+(?P<cond>.+?)\s*=>\s*(?P<actions>.+)$")
+    r"^rule\s+(?P<name>[\w\-]+)"
+    r"(?:\s+hold\s+(?P<hold>[\d.]+))?"
+    r"(?:\s+on\s+(?P<event>.+?))?"
+    r"(?:\s+hold\s+(?P<hold2>[\d.]+))?"
+    r"\s*:\s*(?:when\s+(?P<cond>.+?)\s*)?=>\s*(?P<actions>.+)$")
 _OBJ_RE = re.compile(
     r"^objective\s*:\s*(?P<dir>minimize|maximize)\s+(?P<expr>.+?)"
     r"(?:\s+under\s+(?P<constraint>.+))?$")
@@ -244,11 +378,21 @@ def compile_intent(text: str) -> IntentPolicy:
             continue
         m = _RULE_RE.match(line)
         if m:
-            cond = _parse_cond(m.group("cond"), lineno)
+            if m.group("hold") and m.group("hold2"):
+                raise IntentError(f"line {lineno}: 'hold' given twice")
+            trigger = (None if m.group("event") is None
+                       else _parse_trigger(m.group("event"), lineno))
+            cond = (None if m.group("cond") is None
+                    else _parse_cond(m.group("cond"), lineno))
+            if cond is None and trigger is None:
+                raise IntentError(f"line {lineno}: rule "
+                                  f"{m.group('name')!r} needs a 'when' "
+                                  "condition or an 'on' trigger")
             actions = [_parse_action(a.strip(), lineno)
                        for a in m.group("actions").split(";") if a.strip()]
-            rules.append(IntentRule(m.group("name"), cond, actions,
-                                    hold=float(m.group("hold") or 0.0)))
+            rules.append(IntentRule(
+                m.group("name"), cond, actions, trigger=trigger,
+                hold=float(m.group("hold") or m.group("hold2") or 0.0)))
             continue
         raise IntentError(f"line {lineno}: cannot parse {line!r}")
     if not rules:

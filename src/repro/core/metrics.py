@@ -24,10 +24,123 @@ Two-tier design, exactly as proposed:
 """
 from __future__ import annotations
 
+import fnmatch
 import math
 import re
 from dataclasses import dataclass, field
 from typing import Callable, Iterable, Optional
+
+
+# ---------------------------------------------------------------------------
+# Metric bus (event tier)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ThresholdSub:
+    """One threshold subscription: fire ``fn(name, value, t)`` when a
+    published sample enters the subscribed region.
+
+    Edge-triggered by default: the subscription re-arms only after a
+    sample *leaves* the region, so a sustained breach fires once, not on
+    every sample.  ``cooldown`` additionally rate-limits fires.
+    """
+
+    sub_id: int
+    metric: str                          # exact name or glob
+    fn: Callable[[str, float, float], None]
+    above: Optional[float] = None
+    below: Optional[float] = None
+    predicate: Optional[Callable[[float], bool]] = None
+    cooldown: float = 0.0
+    edge: bool = True
+    fires: int = 0
+    # per concrete metric name: a glob subscription must track each
+    # matched series independently, or one instance's breach would
+    # suppress / mask another's
+    _in_region: dict = field(default_factory=dict)
+    _last_fire: dict = field(default_factory=dict)
+
+    def _hit(self, value: float) -> bool:
+        if self.predicate is not None:
+            return bool(self.predicate(value))
+        if self.above is not None and value > self.above:
+            return True
+        if self.below is not None and value < self.below:
+            return True
+        return False
+
+    def check(self, name: str, value: float, t: float) -> bool:
+        hit = self._hit(value)
+        was = self._in_region.get(name, False)
+        if not hit:
+            self._in_region[name] = False
+            return False
+        if self.edge and was:
+            return False
+        if t - self._last_fire.get(name, -math.inf) < self.cooldown:
+            return False               # suppressed: stay ARMED, so the
+                                       # breach fires once cooldown expires
+        self._in_region[name] = True   # entry recorded only on a real fire
+        self._last_fire[name] = t
+        self.fires += 1
+        self.fn(name, value, t)
+        return True
+
+
+class MetricBus:
+    """Push tier of the metrics plane: components publish deltas as they
+    write, and threshold subscriptions fire *between* controller polls.
+
+    The interval poll path scans every ring of every collector each
+    tick; the bus inverts that — O(subscriptions-on-this-metric) per
+    observation, nothing at all for unwatched metrics — which is the
+    shape that scales to large fleets.  The controller runs both paths
+    (hybrid): polls for policy state, bus events for fast reaction.
+    """
+
+    def __init__(self):
+        self._exact: dict[str, list[ThresholdSub]] = {}
+        self._globs: list[ThresholdSub] = []
+        self._next_id = 0
+        self.published = 0
+        self.delivered = 0
+
+    def subscribe(self, metric: str, fn: Callable[[str, float, float], None],
+                  above: Optional[float] = None,
+                  below: Optional[float] = None,
+                  predicate: Optional[Callable[[float], bool]] = None,
+                  cooldown: float = 0.0, edge: bool = True) -> ThresholdSub:
+        if above is None and below is None and predicate is None:
+            raise ValueError("subscribe needs above=, below= or predicate=")
+        sub = ThresholdSub(self._next_id, metric, fn, above, below,
+                           predicate, cooldown, edge)
+        self._next_id += 1
+        if any(c in metric for c in "*?["):
+            self._globs.append(sub)
+        else:
+            self._exact.setdefault(metric, []).append(sub)
+        return sub
+
+    def unsubscribe(self, sub: ThresholdSub) -> None:
+        if sub in self._globs:
+            self._globs.remove(sub)
+        subs = self._exact.get(sub.metric)
+        if subs and sub in subs:
+            subs.remove(sub)
+
+    def publish(self, name: str, value: float, t: float) -> None:
+        self.published += 1
+        for sub in self._exact.get(name, ()):
+            if sub.check(name, value, t):
+                self.delivered += 1
+        for sub in self._globs:
+            if fnmatch.fnmatch(name, sub.metric) and sub.check(name, value, t):
+                self.delivered += 1
+
+    def subscriptions(self) -> list[ThresholdSub]:
+        return [s for subs in self._exact.values() for s in subs] + \
+            list(self._globs)
 
 # ---------------------------------------------------------------------------
 # Ring buffer
@@ -223,12 +336,16 @@ class Collector:
     ``gauge`` overwrites a point-in-time series; ``observe`` appends an
     event sample (latencies etc.); ``counter`` accumulates.  All three
     land in ring buffers read by ``CentralPoller.poll`` — writers never
-    block on the control plane.
+    block on the control plane.  When a ``MetricBus`` is attached, every
+    write is also pushed through it so threshold subscriptions can react
+    between polls (the event tier; still O(1) when nothing subscribes).
     """
 
-    def __init__(self, node: str = "node0", cap: int = 512):
+    def __init__(self, node: str = "node0", cap: int = 512,
+                 bus: Optional[MetricBus] = None):
         self.node = node
         self.cap = cap
+        self.bus = bus
         self._rings: dict[str, Ring] = {}
         self._counters: dict[str, float] = {}
         self._specs: dict[str, MetricSpec] = {}
@@ -242,14 +359,20 @@ class Collector:
 
     def gauge(self, name: str, value: float, t: float) -> None:
         self._ring(name).push(float(value), t)
+        if self.bus is not None:
+            self.bus.publish(name, float(value), t)
 
     def observe(self, name: str, value: float, t: float) -> None:
         self._ring(name).push(float(value), t)
+        if self.bus is not None:
+            self.bus.publish(name, float(value), t)
 
     def counter(self, name: str, delta: float, t: float) -> None:
         total = self._counters.get(name, 0.0) + delta
         self._counters[name] = total
         self._ring(name).push(total, t)
+        if self.bus is not None:
+            self.bus.publish(name, total, t)
 
     # -- spec side --------------------------------------------------------------
     def describe(self, name: str, spec_or_doc) -> None:
@@ -319,11 +442,33 @@ class StateStore:
     # -- query API used by policies / the intent language ---------------------
     def get(self, name: str, agg: Optional[str] = None,
             window: float = math.inf, default: float = math.nan) -> float:
+        if any(c in name for c in "*?["):
+            return self._get_glob(name, agg, window, default)
         s = self.series.get(name)
         if s is None or not s.points:
             return default
         how = agg or s.spec.default_agg
         v = s.agg(how, window, now=self.polled_at)
+        return default if (isinstance(v, float) and math.isnan(v)) else v
+
+    def _get_glob(self, pattern: str, agg: Optional[str],
+                  window: float, default: float) -> float:
+        """Fleet-wide query: pool every series matching the glob (e.g.
+        ``mean(tester-*.queue_len)``) and aggregate the combined window —
+        mirroring the MetricBus's glob threshold subscriptions."""
+        lo = ((self.polled_at - window)
+              if math.isfinite(self.polled_at) else -math.inf)
+        xs: list[float] = []
+        how = agg
+        for n, s in self.series.items():
+            if not fnmatch.fnmatch(n, pattern) or not s.points:
+                continue
+            if how is None:
+                how = s.spec.default_agg
+            xs.extend(v for (t, v) in s.points if t >= lo)
+        if not xs:
+            return default
+        v = AGGREGATIONS[how or "mean"](xs)
         return default if (isinstance(v, float) and math.isnan(v)) else v
 
     def names(self, pattern: str = "") -> list[str]:

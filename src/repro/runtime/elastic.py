@@ -5,24 +5,67 @@
 monitor, added to the router) or drain one (stop admissions, migrate its
 sessions out over the KV fabric, then remove it).  AutoscalePolicy
 (core/policies.py) decides *when*; this module knows *how* — the
-separation of concerns the paper's control plane prescribes."""
+separation of concerns the paper's control plane prescribes.
+
+The group is itself a registered *controllable* (kind ``"group"``) with
+a single ``replicas`` knob, so the intent language's ``scale GROUP ±N``
+action and plain ``registry.set(group, "replicas", n)`` both reach it
+through the same Table-1 surface as every other knob."""
 from __future__ import annotations
 
 from typing import Callable, Optional
 
 from repro.agents.agent import TesterAgent
+from repro.core.knobs import ControlSurface, KnobSpec
 from repro.core.rules import RequestRule
 from repro.core.types import RequestState
 from repro.serving.engine_sim import SimEngine
 from repro.serving.scheduler import SchedulerConfig
 
 
-class ElasticGroup:
-    def __init__(self, pipeline, monitor=None):
+class ElasticGroup(ControlSurface):
+    kind = "group"
+    CAPABILITIES = ("scale",)
+    METRICS = ("replicas",)
+    KNOB_SPECS = (
+        KnobSpec("replicas", kind="int", lo=1, attr="replicas",
+                 doc="target live instance count; setting it scales "
+                     "up (spawn) or down (graceful drain)"),
+    )
+
+    def __init__(self, pipeline, monitor=None, name: str = "tester-group"):
+        self.name = name
         self.p = pipeline
+        self.loop = pipeline.loop
+        self.collector = getattr(pipeline, "collector", None)
         self.monitor = monitor
         self.spawned = 0
         self.drained: list[str] = []
+        self._draining: set[str] = set()
+        self._publish_replicas()
+
+    def _publish_replicas(self) -> None:
+        # keep the advertised METRICS live so intent terms/triggers over
+        # tester-group.replicas actually observe samples
+        if self.collector is not None:
+            self.collector.gauge(f"{self.name}.replicas", self.replicas,
+                                 self.loop.now())
+
+    # -- the replicas knob ----------------------------------------------------
+    def _live(self) -> list[TesterAgent]:
+        return [t for t in self.p.testers if t.name not in self._draining]
+
+    @property
+    def replicas(self) -> int:
+        return len(self._live())
+
+    @replicas.setter
+    def replicas(self, n: int) -> None:
+        n = max(1, int(n))
+        while self.replicas < n:
+            self.scale_up()
+        while self.replicas > n:
+            self.drain(self._live()[-1].name)   # newest live instance first
 
     # -- scale up -----------------------------------------------------------
     def scale_up(self) -> str:
@@ -49,6 +92,7 @@ class ElasticGroup:
             from repro.runtime.heartbeat import attach_engine
             attach_engine(self.monitor, eng)
         self.spawned += 1
+        self._publish_replicas()
         return name
 
     # -- scale down ----------------------------------------------------------
@@ -56,8 +100,10 @@ class ElasticGroup:
         """Graceful: stop new sessions, migrate homed sessions away,
         remove once idle."""
         agent = next(t for t in self.p.testers if t.name == name)
-        others = [t.name for t in self.p.testers if t.name != name]
+        others = [t.name for t in self.p.testers
+                  if t.name != name and t.name not in self._draining]
         assert others, "cannot drain the last instance"
+        self._draining.add(name)
         # stop new admissions at the engine
         self.p.registry.set(name, "admit_priority_min", 99)
         # re-home sessions
@@ -76,9 +122,12 @@ class ElasticGroup:
             self.p.registry.deregister(name)
             if self.monitor is not None:
                 self.monitor.unwatch(name)
+            self.p.testers = [t for t in self.p.testers if t.name != name]
+            self._draining.discard(name)
             self.drained.append(name)
 
         _finalize()
+        self._publish_replicas()
 
     # -- failure path ---------------------------------------------------------
     def fail_over(self, name: str) -> int:
@@ -112,4 +161,5 @@ class ElasticGroup:
         if self.monitor is not None:
             self.monitor.unwatch(name)
         self.p.testers = [t for t in self.p.testers if t.name != name]
+        self._publish_replicas()
         return moved

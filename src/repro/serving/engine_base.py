@@ -11,79 +11,67 @@ from __future__ import annotations
 
 from typing import Callable, Optional
 
-from repro.core.types import (AgentCard, Priority, Request, RequestState,
-                              fresh_id)
+from repro.core.knobs import ControlSurface, KnobSpec
+from repro.core.types import Priority, Request, RequestState, fresh_id
 from repro.serving.scheduler import (PrefillWork, Scheduler, SchedulerConfig,
                                      StepKind, StepPlan)
 
 
-class EngineCore:
-    """Lifecycle + metrics + knobs; time/token mechanics in subclasses."""
+class EngineCore(ControlSurface):
+    """Lifecycle + metrics + knobs; time/token mechanics in subclasses.
+
+    Scheduler knobs are *delegated*: the engine advertises them on its
+    card and forwards set/get to its scheduler's own ControlSurface —
+    the uniform knob name maps onto the engine-internal API with no
+    per-knob shim code (the paper's vLLM ``max_num_seqs`` example).
+    """
+
+    kind = "llm"
+    CAPABILITIES = ("kv_transfer", "pause", "priority")
+    METRICS = ("queue_len", "num_running", "page_util", "step_time",
+               "ttft", "latency", "tpt", "throughput")
+    KNOB_SPECS = tuple(
+        s.delegated("scheduler", clamp="_clamp_max_num_seqs")
+        if s.name == "max_num_seqs" else s.delegated("scheduler")
+        for s in Scheduler.KNOB_SPECS
+    ) + (
+        KnobSpec("temperature", kind="float", lo=0.0,
+                 doc="sampling temperature; 0 = greedy"),
+        KnobSpec("paused", kind="bool", on_change="_paused_changed",
+                 doc="freeze the step loop (resume kicks it)"),
+    )
 
     def __init__(self, name: str, model_name: str, sched_cfg: SchedulerConfig,
                  collector=None):
         self.name = name
         self.model_name = model_name
         self._physical_slots = sched_cfg.max_slots   # hardware capacity
-        self.scheduler = Scheduler(sched_cfg)
+        self.scheduler = Scheduler(sched_cfg, name=f"{name}.scheduler")
         self.collector = collector
         self.temperature = 0.0
         self.paused = False
         self.steps = 0
         self.tokens_generated = 0
         self.finished: list[Request] = []
-        self._defaults: dict[str, object] = {}
         self.on_finish: Optional[Callable[[Request, float], None]] = None
         self.on_token: Optional[Callable[[Request, int, float], None]] = None
 
     # ------------------------------------------------------------------ knobs
-    KNOBS = Scheduler.KNOBS + ("temperature", "paused")
+    def _clamp_max_num_seqs(self, value: int) -> int:
+        return min(int(value), self.physical_slots())
 
-    def knob_names(self) -> tuple[str, ...]:
-        return self.KNOBS
+    def _paused_changed(self, old, new) -> None:
+        if not new:
+            self.kick()
 
-    def card(self) -> AgentCard:
-        return AgentCard(
-            name=self.name, kind="llm",
-            knobs={k: self.get_param(k) for k in self.knob_names()},
-            metrics=("queue_len", "num_running", "page_util", "step_time",
-                     "ttft", "latency", "tpt", "throughput"),
-            capabilities=("kv_transfer", "pause", "priority"))
-
-    def get_param(self, name: str):
-        if name == "temperature":
-            return self.temperature
-        if name == "paused":
-            return self.paused
-        if name == "max_num_seqs":
-            return self.scheduler.cfg.max_slots
-        return getattr(self.scheduler.cfg, name)
-
-    def set_param(self, name: str, value) -> None:
-        """The paper's ``set()`` — map the uniform knob name onto the
-        engine-internal API (this method IS the per-agent shim layer)."""
-        if name not in self.KNOBS:
-            raise KeyError(f"{self.name}: unknown knob {name!r}")
-        self._defaults.setdefault(name, self.get_param(name))
-        if name == "temperature":
-            self.temperature = float(value)
-        elif name == "paused":
-            self.paused = bool(value)
-            if not self.paused:
-                self.kick()
-        else:
-            if name == "max_num_seqs":
-                value = min(int(value), self.physical_slots())
-            self.scheduler.set_knob(name, value)
-        self.kick()
-
-    def reset_param(self, name: str) -> None:
-        """The paper's ``reset()`` — restore the registered default."""
-        if name in self._defaults:
-            self.set_param(name, self._defaults[name])
+    def on_knob_set(self, name: str, old, new) -> None:
+        self.kick()                     # new headroom may unblock work
 
     def physical_slots(self) -> int:
         return self._physical_slots
+
+    def _surface_now(self) -> float:
+        return self.now()               # audit stamps use engine time
 
     # ---------------------------------------------------------------- queue
     def submit(self, req: Request) -> None:

@@ -19,13 +19,19 @@ import zlib
 from typing import Optional
 
 from repro.core.dataplane import Endpoint
+from repro.core.knobs import ControlSurface, KnobSpec
 from repro.core.rules import RuleTable
-from repro.core.types import AgentCard, Message
+from repro.core.types import Message
 from repro.sim.clock import EventLoop
 
 
-class Router:
-    KNOBS = ("policy",)
+class Router(ControlSurface):
+    kind = "router"
+    CAPABILITIES = ("route",)
+    KNOB_SPECS = (
+        KnobSpec("policy", kind="str", choices=("static", "least_loaded"),
+                 doc="fallback routing policy when no rule matches"),
+    )
 
     def __init__(self, loop: EventLoop, name: str = "router",
                  rules: Optional[RuleTable] = None, policy: str = "static",
@@ -54,26 +60,9 @@ class Router:
         self._session_pin = {s: i for s, i in self._session_pin.items()
                              if i != name}
 
-    # -- set/reset shim ----------------------------------------------------------
-    def card(self) -> AgentCard:
-        return AgentCard(name=self.name, kind="router",
-                         knobs={"policy": self.policy},
-                         metrics=tuple(f"routed.{n}" for n in self.instances),
-                         capabilities=("route",))
-
-    def get_param(self, name: str):
-        if name != "policy":
-            raise KeyError(name)
-        return self.policy
-
-    def set_param(self, name: str, value) -> None:
-        if name != "policy":
-            raise KeyError(name)
-        assert value in ("static", "least_loaded")
-        self.policy = value
-
-    def reset_param(self, name: str) -> None:
-        self.set_param(name, "static")
+    # -- set/reset shim: derived from ControlSurface -------------------------
+    def card_metrics(self) -> tuple:
+        return tuple(f"routed.{n}" for n in self.instances)
 
     # -- routing ------------------------------------------------------------------
     def _fallback(self, session: str) -> str:

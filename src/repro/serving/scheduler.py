@@ -20,6 +20,7 @@ import enum
 from dataclasses import dataclass, field
 from typing import Optional
 
+from repro.core.knobs import ControlSurface, KnobSpec
 from repro.core.types import Priority, Request, RequestState
 from repro.serving.kv_cache import PageAllocator
 
@@ -57,8 +58,29 @@ class SchedulerConfig:
     require_complete_prompt: bool = False  # real engine: no partial prefill
 
 
-class Scheduler:
-    def __init__(self, cfg: SchedulerConfig):
+class Scheduler(ControlSurface):
+    # -- knobs (set()/reset() surface, derived from ControlSurface) --------
+    kind = "scheduler"
+    CAPABILITIES = ("priority", "preempt")
+    METRICS = ("queue_len", "num_running", "page_util")
+    KNOB_SPECS = (
+        KnobSpec("max_num_seqs", kind="int", lo=1, attr="cfg.max_slots",
+                 on_change="_resize_slots",
+                 doc="continuous-batching slot count"),
+        KnobSpec("max_batch_tokens", kind="int", lo=1,
+                 attr="cfg.max_batch_tokens",
+                 doc="prefill token budget per step"),
+        KnobSpec("prefill_chunk", kind="int", lo=0, attr="cfg.prefill_chunk",
+                 doc="chunked-prefill size; 0 = whole prompt"),
+        KnobSpec("admit_priority_min", kind="int",
+                 attr="cfg.admit_priority_min",
+                 doc="admission floor: requests below are not admitted"),
+        KnobSpec("decode_first", kind="bool", attr="cfg.decode_first",
+                 doc="prioritize decode over new admissions"),
+    )
+
+    def __init__(self, cfg: SchedulerConfig, name: str = "scheduler"):
+        self.name = name
         self.cfg = cfg
         self.alloc = PageAllocator(cfg.num_pages, cfg.page_size)
         self.waiting: list[Request] = []
@@ -66,30 +88,11 @@ class Scheduler:
         self._free_slots = list(range(cfg.max_slots))
         self.preempt_count = 0
 
-    # -- knobs (set()/reset() surface) ----------------------------------------
-    KNOBS = ("max_num_seqs", "max_batch_tokens", "prefill_chunk",
-             "admit_priority_min", "decode_first")
-
-    def set_knob(self, name: str, value) -> None:
-        if name == "max_num_seqs":
-            value = int(value)
-            assert value >= 1
-            old = self.cfg.max_slots
-            if value > old:
-                self._free_slots.extend(range(old, value))
-            else:
-                self._free_slots = [s for s in self._free_slots if s < value]
-            self.cfg.max_slots = value
-        elif name == "max_batch_tokens":
-            self.cfg.max_batch_tokens = int(value)
-        elif name == "prefill_chunk":
-            self.cfg.prefill_chunk = int(value)
-        elif name == "admit_priority_min":
-            self.cfg.admit_priority_min = int(value)
-        elif name == "decode_first":
-            self.cfg.decode_first = bool(value)
-        else:
-            raise KeyError(name)
+    def _resize_slots(self, old: int, new: int) -> None:
+        if new > old:
+            self._free_slots.extend(range(old, new))
+        elif new < old:
+            self._free_slots = [s for s in self._free_slots if s < new]
 
     # -- queue ops ---------------------------------------------------------------
     def submit(self, req: Request) -> None:

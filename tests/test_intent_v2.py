@@ -1,0 +1,281 @@
+"""Intent language v2: error paths, `on` event triggers (MetricBus and
+named events), and the scale/gate/transfer actions."""
+import pytest
+
+from repro.agents import AgenticPipeline, PipelineConfig, TaskSpec
+from repro.core import (Controller, IntentError, MetricBus, Registry,
+                        compile_intent)
+from repro.core.metrics import CentralPoller, Collector, StateStore
+from repro.sim.clock import EventLoop
+
+from tests.test_controller import FakeKnobbed
+
+
+def _controller(objs=(), bus=None):
+    loop = EventLoop()
+    reg = Registry()
+    for o in objs:
+        reg.register(o)
+    store = StateStore()
+    poller = CentralPoller(store)
+    c = Controller(loop, reg, poller, interval=0.05, bus=bus)
+    return loop, reg, store, poller, c
+
+
+# ---------------------------------------------------------------------------
+# Error paths
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("program,fragment", [
+    ("rule r: when mean(x) > 1 => frobnicate y", "unknown action"),
+    ("rule r: when mean(x) > 1 => scale grp lots", "scale needs"),
+    ("rule r: when mean(x) > 1 => gate ch maybe", "gate needs"),
+    ("rule r: when mean(x) > 1 => transfer s src", "unknown action"),
+    ("rule r: when median(x) > 1 => note hi", "unknown aggregation"),
+    ("rule r: when garbage => note hi", "bad condition term"),
+    ("rule r: when mean(x) > 1 => set nodot 1", "set needs TARGET.KNOB"),
+    ("rule r: when mean(x) > 1 => reset nodot", "reset needs TARGET.KNOB"),
+    ("rule r on !!bad!!: => note hi", "bad trigger"),
+    ("rule r: => note hi", "needs a 'when' condition or an 'on' trigger"),
+    ("this is not a rule", "cannot parse"),
+    ("objective: maximize throughput", "no rules"),
+])
+def test_intent_error_paths(program, fragment):
+    with pytest.raises(IntentError) as ei:
+        compile_intent(program)
+    assert fragment in str(ei.value)
+
+
+def test_intent_empty_action_list_rejected():
+    with pytest.raises(IntentError):
+        compile_intent("rule r: when mean(x) > 1 => ")
+
+
+# ---------------------------------------------------------------------------
+# Parsing v2 clauses
+# ---------------------------------------------------------------------------
+
+def test_trigger_parsing_threshold_and_named():
+    pol = compile_intent("""
+rule a on eng.queue_len > 12 hold 3: => note burst
+rule b on task_start: => note started
+rule c hold 2 on eng.queue_len < 1: when mean(eng.queue_len) < 1 => note calm
+""")
+    a, b, c = pol.rules
+    assert a.trigger.metric == "eng.queue_len" and a.trigger.value == 12
+    assert a.hold == 3.0 and a.cond is None
+    assert b.trigger.event == "task_start"
+    assert c.hold == 2.0 and c.trigger.cmp == "<" and c.cond is not None
+
+
+# ---------------------------------------------------------------------------
+# Event semantics
+# ---------------------------------------------------------------------------
+
+def test_bus_trigger_fires_between_polls():
+    eng = FakeKnobbed()
+    bus = MetricBus()
+    loop, reg, store, poller, c = _controller([eng], bus=bus)
+    col = Collector(bus=bus)
+    poller.attach(col)
+    pol = compile_intent(
+        "rule spike on eng.queue_len > 10: => set eng.max_num_seqs 2")
+    c.install(pol)                        # subscribes; controller NOT started
+    assert pol.rules[0].bus_bound
+    assert [s.metric for s in bus.subscriptions()] == ["eng.queue_len"]
+    col.gauge("eng.queue_len", 20, 0.01)  # push: no tick ever runs
+    loop.run_until(0.02)                  # deferred action executes
+    assert eng.values["max_num_seqs"] == 2
+    assert c.ticks == 0                   # purely event-driven
+    assert [a.kind for a in c.actions] == ["event", "set"]
+
+
+def test_bus_trigger_hold_is_refire_cooldown():
+    eng = FakeKnobbed()
+    bus = MetricBus()
+    loop, reg, store, poller, c = _controller([eng], bus=bus)
+    col = Collector(bus=bus)
+    poller.attach(col)
+    pol = compile_intent(
+        "rule spike on eng.queue_len > 10 hold 5: => note fired")
+    c.install(pol)
+    for i in range(5):                    # burst of samples: one fire
+        col.gauge("eng.queue_len", 20 + i, 0.01 * (i + 1))
+    loop.run_until(0.1)
+    assert pol.stats()["spike"] == 1
+    col.gauge("eng.queue_len", 0, 0.2)    # dip changes nothing:
+    col.gauge("eng.queue_len", 30, 0.3)   # still within the 5 s hold
+    loop.run_until(0.4)
+    assert pol.stats()["spike"] == 1
+    # level-triggered: a SUSTAINED breach re-fires once the hold expires
+    loop.run_until(5.5)                   # advance the control clock too
+    col.gauge("eng.queue_len", 30, 5.5)
+    loop.run_until(5.6)
+    assert pol.stats()["spike"] == 2
+
+
+def test_bus_trigger_without_hold_is_edge_triggered():
+    eng = FakeKnobbed()
+    bus = MetricBus()
+    loop, reg, store, poller, c = _controller([eng], bus=bus)
+    col = Collector(bus=bus)
+    poller.attach(col)
+    pol = compile_intent(
+        "rule spike on eng.queue_len > 10: => note fired")
+    c.install(pol)
+    for i in range(5):                    # sustained breach: one edge
+        col.gauge("eng.queue_len", 20, 0.01 * (i + 1))
+    col.gauge("eng.queue_len", 0, 0.1)    # leaves region: re-arms
+    col.gauge("eng.queue_len", 20, 0.2)   # second excursion
+    loop.run_until(0.3)
+    assert pol.stats()["spike"] == 2
+
+
+def test_glob_subscription_cooldowns_are_per_instance():
+    bus = MetricBus()
+    fired = []
+    bus.subscribe("tester-*.queue_len", above=10, cooldown=5.0, edge=False,
+                  fn=lambda n, v, t: fired.append((n, t)))
+    bus.publish("tester-0.queue_len", 20, 1.0)
+    bus.publish("tester-1.queue_len", 20, 2.0)   # independent instance
+    bus.publish("tester-0.queue_len", 20, 3.0)   # within tester-0 cooldown
+    assert fired == [("tester-0.queue_len", 1.0),
+                     ("tester-1.queue_len", 2.0)]
+
+
+def test_edge_subscription_with_cooldown_stays_armed():
+    # a cooldown-suppressed re-entry must NOT disarm the edge trigger
+    bus = MetricBus()
+    fired = []
+    bus.subscribe("q", above=8, cooldown=5.0, edge=True,
+                  fn=lambda n, v, t: fired.append(t))
+    bus.publish("q", 9, 0.0)              # entry: fires
+    bus.publish("q", 5, 1.0)              # leaves: re-arms
+    bus.publish("q", 9, 2.0)              # re-entry inside cooldown: held
+    bus.publish("q", 9, 3.0)              # still breached, still held
+    bus.publish("q", 9, 6.0)              # cooldown over: breach not lost
+    assert fired == [0.0, 6.0]
+
+
+def test_glob_term_pools_fleet_metrics():
+    eng = FakeKnobbed()
+    loop, reg, store, poller, c = _controller([eng])
+    col = Collector()
+    poller.attach(col)
+    col.gauge("tester-0.queue_len", 0, 0.0)
+    col.gauge("tester-1.queue_len", 12, 0.0)   # one hot instance
+    pol = compile_intent(
+        "rule any_hot: when max(tester-*.queue_len) > 10"
+        " => set eng.max_num_seqs 2")
+    c.install(pol)
+    c.start()
+    loop.run_until(0.2)
+    assert eng.values["max_num_seqs"] == 2
+    # fleet-wide mean pools both series: (0 + 12) / 2
+    assert store.get("tester-*.queue_len", "mean") == 6.0
+
+
+def test_hold_given_twice_rejected():
+    with pytest.raises(IntentError) as ei:
+        compile_intent(
+            "rule r hold 2 on eng.queue_len > 5 hold 4: => note hi")
+    assert "'hold' given twice" in str(ei.value)
+
+
+def test_trigger_degrades_to_tick_rule_without_bus():
+    eng = FakeKnobbed()
+    loop, reg, store, poller, c = _controller([eng], bus=None)
+    col = Collector()
+    poller.attach(col)
+    col.gauge("eng.queue_len", 20, 0.0)
+    pol = compile_intent(
+        "rule spike on eng.queue_len > 10: => set eng.max_num_seqs 2")
+    c.install(pol)
+    assert not pol.rules[0].bus_bound
+    c.start()
+    loop.run_until(0.2)                   # interval path picks it up
+    assert eng.values["max_num_seqs"] == 2
+
+
+def test_named_event_trigger():
+    eng = FakeKnobbed()
+    loop, reg, store, poller, c = _controller([eng])
+    pol = compile_intent(
+        "rule hint on task_start: => set eng.temperature 1.0")
+    c.install(pol)
+    c.event("task_done")                  # wrong kind: no fire
+    assert pol.stats()["hint"] == 0
+    c.event("task_start", session="s0")
+    assert pol.stats()["hint"] == 1
+    assert eng.values["temperature"] == 1.0
+
+
+def test_event_rule_when_guard_still_applies():
+    eng = FakeKnobbed()
+    bus = MetricBus()
+    loop, reg, store, poller, c = _controller([eng], bus=bus)
+    col = Collector(bus=bus)
+    poller.attach(col)
+    pol = compile_intent("""
+rule spike on eng.queue_len > 10: when mean(eng.temperature_hint) > 5
+    => set eng.max_num_seqs 2
+""")
+    c.install(pol)
+    col.gauge("eng.queue_len", 20, 0.01)  # trigger fires, guard is NaN
+    loop.run_until(0.1)
+    assert eng.values["max_num_seqs"] == 8   # guard held the actions back
+
+
+# ---------------------------------------------------------------------------
+# scale / gate / transfer end-to-end on the real pipeline
+# ---------------------------------------------------------------------------
+
+def test_scale_action_from_bus_event_scales_fleet_and_audits():
+    p = AgenticPipeline(PipelineConfig(n_testers=1))
+    pol = compile_intent(
+        "rule burst on tester-0.queue_len > 6 hold 4:"
+        " => scale tester-group +1")
+    p.controller.install(pol)
+    for i in range(10):
+        p.submit(TaskSpec(session=f"s{i}", n_functions=2, func_tokens=16,
+                          test_tokens=16))
+    p.run(until=8.0)
+    assert p.registry.get_param("tester-group", "replicas") >= 2
+    kinds = [a.kind for a in p.controller.actions]
+    assert "event" in kinds and "scale" in kinds
+    scale = next(a for a in p.controller.actions if a.kind == "scale")
+    assert scale.target == "tester-group" and "replicas" in scale.detail
+
+
+def test_gate_action_toggles_channel():
+    p = AgenticPipeline(PipelineConfig(n_testers=1))
+    pol = compile_intent("""
+rule shut on task_start: => gate dev->tester on
+""")
+    p.controller.install(pol)
+    p.controller.event("task_start", session="x")
+    assert p.channel.gate_speculative is True
+    assert any(a.kind == "set" and "gate_speculative" in a.detail
+               for a in p.controller.actions)
+
+
+def test_transfer_action_moves_session_state():
+    p = AgenticPipeline(PipelineConfig(n_testers=2))
+    p.directory.ensure("sx", "tester-0")
+    p.directory.grow("sx", 256)
+    pol = compile_intent(
+        "rule mv on task_start: => transfer sx tester-0 tester-1")
+    p.controller.install(pol)
+    p.controller.event("task_start", session="sx")
+    p.loop.run_until(5.0)
+    assert p.directory.get("sx").instance == "tester-1"
+    assert any(a.kind == "transfer" for a in p.controller.actions)
+
+
+def test_scale_clamps_at_one_replica():
+    p = AgenticPipeline(PipelineConfig(n_testers=1))
+    pol = compile_intent("rule dn on task_start: => scale tester-group -3")
+    p.controller.install(pol)
+    p.controller.event("task_start")
+    assert p.registry.get_param("tester-group", "replicas") == 1
+    assert not any(a.kind == "scale" for a in p.controller.actions)

@@ -1,0 +1,212 @@
+"""Unified ControlSurface: clamp/reset round-trip semantics across every
+migrated controllable (channel, router, scheduler, engine, tool, group).
+
+The acceptance bar for the refactor: exactly ONE set/reset
+implementation (core/knobs.ControlSurface), with all the per-class
+behaviours of the old hand-rolled shims preserved.
+"""
+import pytest
+
+from repro.agents import AgenticPipeline, PipelineConfig, ToolAgent
+from repro.core.dataplane import Channel
+from repro.core.knobs import ControlSurface, KnobSpec
+from repro.core.types import Granularity, Priority
+from repro.serving.engine_sim import SimEngine
+from repro.serving.router import Router
+from repro.serving.scheduler import Scheduler, SchedulerConfig
+from repro.sim.clock import EventLoop
+from repro.sim.costmodel import CostModel
+from repro.sim.network import Link
+from repro.configs import get_config
+
+
+class _Sink:
+    name = "sink"
+
+    def deliver(self, msg):
+        pass
+
+
+def _channel():
+    loop = EventLoop()
+    return Channel(loop, Link(loop, bandwidth=1e9), "src", _Sink())
+
+
+def _engine():
+    loop = EventLoop()
+    cm = CostModel(get_config("agent-7b"), chips=4)
+    return SimEngine(loop, cm, SchedulerConfig(max_slots=4, num_pages=256))
+
+
+# ---------------------------------------------------------------------------
+# One implementation
+# ---------------------------------------------------------------------------
+
+def test_single_set_reset_implementation():
+    """No migrated class redefines the Table-1 surface."""
+    from repro.runtime.elastic import ElasticGroup
+    from repro.serving.engine_base import EngineCore
+    for cls in (Channel, Router, Scheduler, EngineCore, SimEngine,
+                ToolAgent, ElasticGroup):
+        assert issubclass(cls, ControlSurface)
+        for meth in ("set_param", "reset_param", "get_param"):
+            assert meth not in cls.__dict__, (
+                f"{cls.__name__}.{meth} shadows ControlSurface")
+    assert not hasattr(Scheduler, "set_knob")
+
+
+# ---------------------------------------------------------------------------
+# Round-trips per controllable
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("knob,value,expect", [
+    ("granularity", "stream", Granularity.STREAM),
+    ("stream_chunk", "16", 16),
+    ("stream_chunk", 0, 1),                      # clamped to floor
+    ("pace", -0.5, 0.0),                         # clamped to floor
+    ("priority", 3, Priority.INTERACTIVE),
+    ("gate_speculative", "on", True),
+])
+def test_channel_set_coerces_and_clamps(knob, value, expect):
+    ch = _channel()
+    ch.set_param(knob, value)
+    assert ch.get_param(knob) == expect
+
+
+def test_channel_reset_roundtrip_all_knobs():
+    ch = _channel()
+    before = {k: ch.get_param(k) for k in ch.KNOBS}
+    ch.set_param("granularity", Granularity.STREAM)
+    ch.set_param("stream_chunk", 2)
+    ch.set_param("pace", 0.25)
+    ch.set_param("priority", Priority.HIGH)
+    ch.set_param("gate_speculative", True)
+    for k in ch.KNOBS:
+        ch.reset_param(k)
+    assert {k: ch.get_param(k) for k in ch.KNOBS} == before
+
+
+def test_unknown_knob_raises_everywhere():
+    for obj in (_channel(), Router(EventLoop()), _engine(),
+                Scheduler(SchedulerConfig()),
+                ToolAgent("tool", EventLoop())):
+        with pytest.raises(KeyError):
+            obj.set_param("no_such_knob", 1)
+        with pytest.raises(KeyError):
+            obj.get_param("no_such_knob")
+        with pytest.raises(KeyError):
+            obj.reset_param("no_such_knob")
+
+
+def test_router_policy_choices_validated():
+    r = Router(EventLoop())
+    r.set_param("policy", "least_loaded")
+    assert r.policy == "least_loaded"
+    with pytest.raises(ValueError):
+        r.set_param("policy", "round_robin")
+    r.reset_param("policy")
+    assert r.policy == "static"
+
+
+def test_scheduler_slot_resize_up_and_down():
+    s = Scheduler(SchedulerConfig(max_slots=4, num_pages=64))
+    s.set_param("max_num_seqs", 8)
+    assert s.cfg.max_slots == 8 and len(s._free_slots) == 8
+    s.set_param("max_num_seqs", 2)
+    assert s.cfg.max_slots == 2 and s._free_slots == [0, 1]
+    s.reset_param("max_num_seqs")
+    assert s.cfg.max_slots == 4 and len(s._free_slots) == 4
+
+
+def test_scheduler_clamps_instead_of_asserting():
+    s = Scheduler(SchedulerConfig(max_slots=4, num_pages=64))
+    s.set_param("max_num_seqs", 0)               # old code: AssertionError
+    assert s.cfg.max_slots == 1
+    s.set_param("max_batch_tokens", -5)
+    assert s.cfg.max_batch_tokens == 1
+
+
+def test_engine_delegates_scheduler_knobs_and_clamps_physical():
+    eng = _engine()
+    eng.set_param("max_num_seqs", 100)           # physical_slots = 4
+    assert eng.scheduler.cfg.max_slots == 4
+    eng.set_param("max_num_seqs", 2)
+    assert eng.get_param("max_num_seqs") == 2
+    eng.reset_param("max_num_seqs")
+    assert eng.scheduler.cfg.max_slots == 4
+    # engine-only knobs still work and coerce
+    eng.set_param("paused", "true")
+    assert eng.paused is True
+    eng.set_param("temperature", "0.7")
+    assert eng.temperature == 0.7
+
+
+def test_engine_reset_roundtrip_all_knobs():
+    eng = _engine()
+    before = {k: eng.get_param(k) for k in eng.KNOBS}
+    for k, v in [("max_num_seqs", 2), ("max_batch_tokens", 128),
+                 ("prefill_chunk", 64), ("admit_priority_min", 2),
+                 ("decode_first", True), ("temperature", 1.0),
+                 ("paused", True)]:
+        eng.set_param(k, v)
+    for k in eng.KNOBS:
+        eng.reset_param(k)
+    assert {k: eng.get_param(k) for k in eng.KNOBS} == before
+
+
+def test_tool_agent_roundtrip():
+    t = ToolAgent("exec", EventLoop(), concurrency=2)
+    t.set_param("concurrency", "6")
+    t.set_param("throttle", 0.2)
+    assert t.concurrency == 6 and t.throttle == 0.2
+    t.set_param("concurrency", 0)                # clamped to >= 1
+    assert t.concurrency == 1
+    t.reset_param("concurrency")
+    t.reset_param("throttle")
+    assert t.concurrency == 2 and t.throttle == 0.0
+
+
+def test_reset_without_set_is_noop():
+    ch = _channel()
+    ch.reset_param("pace")                       # no default recorded yet
+    assert ch.pace == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Audit + cards
+# ---------------------------------------------------------------------------
+
+def test_knob_log_records_transitions():
+    ch = _channel()
+    ch.set_param("stream_chunk", 4)
+    ch.set_param("stream_chunk", 2)
+    names = [(name, old, new) for (_, name, old, new) in ch.knob_log]
+    assert names == [("stream_chunk", 8, 4), ("stream_chunk", 4, 2)]
+
+
+def test_cards_derived_from_specs():
+    eng = _engine()
+    card = eng.card()
+    assert card.kind == "llm"
+    assert set(card.knobs) == set(eng.KNOBS)
+    assert "kv_transfer" in card.capabilities
+    ch = _channel()
+    assert ch.card().kind == "channel"
+    assert "granularity" in ch.card().knobs
+
+
+def test_group_replicas_knob_scales_fleet():
+    p = AgenticPipeline(PipelineConfig(n_testers=1))
+    assert "tester-group" in p.registry.names()
+    assert p.registry.card("tester-group").kind == "group"
+    p.registry.set("tester-group", "replicas", 3)
+    assert len(p.testers) == 3
+    assert len(p.router.instances) == 3
+    # scale back down: newest instances drain away once idle
+    p.registry.set("tester-group", "replicas", 1)
+    p.loop.run_until(p.loop.now() + 5.0)
+    assert p.registry.get_param("tester-group", "replicas") == 1
+    assert len(p.router.instances) == 1
+    # reset restores the construction-time default (1) — already there
+    p.registry.reset("tester-group", "replicas")
+    assert p.registry.get_param("tester-group", "replicas") == 1

@@ -1,8 +1,32 @@
 """Scheduler + page-allocator invariants, including hypothesis property
-tests over random workloads."""
+tests over random workloads (skipped when hypothesis is not installed)."""
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                     # pragma: no cover - env dependent
+    HAVE_HYPOTHESIS = False
+
+    def settings(**kw):                 # no-op decorators so module-level
+        return lambda fn: fn            # @settings/@given still evaluate
+
+    def given(*a, **kw):
+        def deco(fn):
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def skipped():              # zero-arg: no fixture resolution
+                pass
+            skipped.__name__ = fn.__name__
+            skipped.__doc__ = fn.__doc__
+            return skipped
+        return deco
+
+    class _AnyStrategy:
+        def __getattr__(self, name):
+            return lambda *a, **kw: None
+
+    st = _AnyStrategy()
 
 from repro.core.types import Priority, Request, RequestState
 from repro.serving.kv_cache import PageAllocator
@@ -69,7 +93,7 @@ def test_admit_priority_min_floor():
     lo = _req(prio=Priority.LOW)
     s.submit(lo)
     assert s.plan_step().kind == StepKind.IDLE   # LOW = 0 < floor
-    s.set_knob("admit_priority_min", 0)
+    s.set_param("admit_priority_min", 0)
     assert s.plan_step().kind == StepKind.PREFILL
 
 
