@@ -16,32 +16,37 @@ from repro.agents.workloads import launch_clients
 from repro.core.types import Granularity
 
 LOADS = (1, 4, 16, 64, 96)
+SMOKE_LOADS = (1, 16)
 WARMUP, HORIZON = 10.0, 70.0
+SMOKE_HORIZON = 25.0
 GRANS = (Granularity.BATCH, Granularity.PIPELINE, Granularity.STREAM)
 
 
-def run_cell(gran: Granularity, n_clients: int, stream_chunk: int = 1):
+def run_cell(gran: Granularity, n_clients: int, stream_chunk: int = 1,
+             horizon: float = HORIZON):
     p = AgenticPipeline(PipelineConfig(
         granularity=gran, n_testers=1, stream_chunk=stream_chunk))
     launch_clients(p, WorkloadConfig(n_clients=n_clients, think_time=0.3),
-                   stop_at=HORIZON - 10.0)
-    p.run(until=HORIZON)
+                   stop_at=horizon - 10.0)
+    p.run(until=horizon)
     lats = p.latencies()
     return {
-        "throughput": p.throughput(WARMUP, HORIZON),
+        "throughput": p.throughput(WARMUP, horizon),
         "mean_lat": statistics.mean(lats) if lats else float("nan"),
         "p95_lat": pctl(lats, 0.95),
         "msgs": p.channel.msgs_sent,
     }
 
 
-def main(report: Report | None = None) -> Report:
+def main(report: Report | None = None, smoke: bool = False) -> Report:
     rep = report or Report("fig3: granularity x load (static configs)")
+    loads = SMOKE_LOADS if smoke else LOADS
+    horizon = SMOKE_HORIZON if smoke else HORIZON
     table: dict[int, dict[Granularity, dict]] = {}
-    for n in LOADS:
+    for n in loads:
         table[n] = {}
         for g in GRANS:
-            r = run_cell(g, n)
+            r = run_cell(g, n, horizon=horizon)
             table[n][g] = r
             rep.add(f"fig3.load{n}.{g.value}",
                     thpt=f"{r['throughput']:.3f}",
@@ -51,7 +56,7 @@ def main(report: Report | None = None) -> Report:
 
     # paper-claim summary: best/worst ratios at the extremes
     ratios = []
-    for n in LOADS:
+    for n in loads:
         best = max(table[n].values(), key=lambda r: r["throughput"])
         worst = min(table[n].values(), key=lambda r: r["throughput"])
         if worst["throughput"] > 0:
@@ -59,10 +64,10 @@ def main(report: Report | None = None) -> Report:
     spread = max(r for _, r in ratios)
     # which granularity wins, per load level
     winners = {n: max(table[n], key=lambda g: table[n][g]["throughput"])
-               .value for n in LOADS}
+               .value for n in loads}
     lat_winners = {n: min(table[n],
                           key=lambda g: table[n][g]["mean_lat"]).value
-                   for n in LOADS}
+                   for n in loads}
     rep.add("fig3.summary",
             max_degradation=f"{spread:.2f}x",
             paper_claim="3.6x",

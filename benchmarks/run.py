@@ -3,6 +3,10 @@ kernel microbench and (if dry-run artifacts exist) the roofline tables.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig3,fig6,...]
                                             [--out-dir artifacts/bench]
+                                            [--smoke]
+
+``--smoke`` shrinks the sweeps (sections that support it) so CI can run
+a fast end-to-end pass and still upload real BENCH_*.json artifacts.
 
 Each section's table is also written as ``BENCH_<section>.json`` (plus a
 combined ``BENCH_summary.json``) so the perf trajectory can be tracked
@@ -26,15 +30,18 @@ def _emit(out_dir: Path, name: str, payload: dict) -> None:
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all",
-                    help="comma list: fig3,fig6,fig7,kernels,roofline")
+                    help="comma list: fig3,fig6,fig7,prefix,kernels,roofline")
     ap.add_argument("--out-dir", default="artifacts/bench",
                     help="directory for BENCH_*.json summaries")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sweeps for CI smoke runs")
     args = ap.parse_args()
     want = None if args.only == "all" else set(args.only.split(","))
     out_dir = Path(args.out_dir)
 
     summary: dict[str, dict] = {}
-    names = [n for n in ("fig3", "fig6", "fig7", "kernels", "roofline")
+    names = [n for n in ("fig3", "fig6", "fig7", "prefix", "kernels",
+                         "roofline")
              if want is None or n in want]
     for name in names:
         t0 = time.time()
@@ -42,13 +49,16 @@ def main() -> int:
         report = None
         if name == "fig3":
             from benchmarks import bench_fig3
-            report = bench_fig3.main()
+            report = bench_fig3.main(smoke=args.smoke)
         elif name == "fig6":
             from benchmarks import bench_fig6
             report = bench_fig6.main()
         elif name == "fig7":
             from benchmarks import bench_fig7
             report = bench_fig7.main()
+        elif name == "prefix":
+            from benchmarks import bench_prefix
+            report = bench_prefix.main(smoke=args.smoke)
         elif name == "kernels":
             from benchmarks import bench_kernels
             report = bench_kernels.main()

@@ -48,10 +48,16 @@ class DeveloperAgent:
         engine.on_finish = self._on_finish
 
     def submit_task(self, spec) -> None:
+        # prefix identity for the cache plane: the MetaGPT-style system
+        # preamble is shared across every task; the task body is private
+        sys_toks = min(int(getattr(spec, "system_tokens", 0) or 0),
+                       spec.prompt_tokens)
+        prefix = (("system-prompt", sys_toks),
+                  (f"task:{spec.task_id}", spec.prompt_tokens - sys_toks))
         req = Request(prompt_len=spec.prompt_tokens,
                       max_new_tokens=spec.n_functions * spec.func_tokens,
                       priority=spec.priority,
-                      meta={"spec": spec})
+                      meta={"spec": spec, "prefix": prefix})
         self._active[req.req_id] = spec
         self.out.begin_task(
             spec.task_id, session=spec.session,
@@ -235,13 +241,23 @@ class TesterAgent:
 
     def _make_request(self, st: _TaskState, units: int, content_tokens: int,
                       available_content: int, priority: Priority) -> Request:
-        base = self.header_tokens + st.extra_prefill
+        extra = st.extra_prefill
+        base = self.header_tokens + extra
         st.extra_prefill = 0          # recompute cost paid once per task
+        # prefix identity: the tester's system header is shared across
+        # every request on this instance; the session-context recompute
+        # is shared within the session; the unit content is private
+        prefix = [("system-prompt", self.header_tokens)]
+        if extra > 0:
+            prefix.append((f"sess:{st.session}", extra))
+        prefix.append((f"unit:{st.task_id}:{st.units_requested}",
+                       content_tokens))
         req = Request(
             prompt_len=base + content_tokens,
             max_new_tokens=units * st.test_tokens,
             priority=priority,
-            meta={"task": st.task_id, "units": units, "agent": self.name})
+            meta={"task": st.task_id, "units": units, "agent": self.name,
+                  "prefix": tuple(prefix)})
         req.available = base + available_content
         st.reqs.append(req)
         self.engine.submit(req)

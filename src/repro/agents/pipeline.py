@@ -20,6 +20,7 @@ from repro.core.registry import Registry
 from repro.core.types import Granularity, Priority, fresh_id
 from repro.serving.engine_sim import SimEngine
 from repro.serving.kv_transfer import KVTransferManager, SessionDirectory
+from repro.serving.prefix_cache import CacheDirectory, PrefixCache
 from repro.serving.router import Router
 from repro.serving.scheduler import SchedulerConfig
 from repro.sim.clock import EventLoop
@@ -33,6 +34,7 @@ class TaskSpec:
 
     session: str
     prompt_tokens: int = 192
+    system_tokens: int = 128            # shared system preamble (cacheable)
     n_functions: int = 6
     func_tokens: int = 48
     test_tokens: int = 40
@@ -60,7 +62,12 @@ class PipelineConfig:
     msg_proc_time: float = 1.0e-3      # per-message protocol/serde cost
     kv_bandwidth: float = 12.5e9        # 100 Gb interconnect for KV
     controller_interval: float = 0.05
-    router_policy: str = "static"
+    router_policy: str = "static"       # static | least_loaded | cache_aware
+    # prefix-cache plane (serving/prefix_cache.py)
+    prefix_cache: bool = True
+    cache_block_tokens: int = 64
+    cache_reserve_frac: float = 0.5
+    cache_evict_policy: str = "lru"
 
 
 class AgenticPipeline:
@@ -80,9 +87,13 @@ class AgenticPipeline:
         model_cfg = get_config(cfg.model)
         self.costmodel = CostModel(model_cfg, chips=cfg.tester_chips)
         self.dev_costmodel = CostModel(model_cfg, chips=cfg.dev_chips)
+        # page granularity bounds the effective prefix-cache block size
+        # from below: keep it <= header_tokens so the shared system
+        # header fills whole blocks and is actually reusable at defaults
+        page = min(cfg.cache_block_tokens, max(cfg.header_tokens, 1))
         sched = lambda slots: SchedulerConfig(
             max_slots=slots, num_pages=cfg.num_pages,
-            max_context=cfg.max_context)
+            max_context=cfg.max_context, page_size=page)
 
         # --- KV fabric + session directory --------------------------------
         self.directory = SessionDirectory()
@@ -93,10 +104,16 @@ class AgenticPipeline:
             self.loop, self.directory, bytes_fn=kv_bytes,
             bandwidth=cfg.kv_bandwidth, collector=self.collector)
 
+        # --- prefix-cache plane: per-instance caches + the controller-
+        # visible residency directory the cache-aware router reads
+        self.cache_dir = CacheDirectory()
+
         # --- tester instances behind the router -----------------------------
         self.router = Router(self.loop, "tester-router",
                              policy=cfg.router_policy,
-                             collector=self.collector)
+                             collector=self.collector,
+                             cache_dir=self.cache_dir,
+                             prefix_fn=self._msg_prefix)
         self.testers: list[TesterAgent] = []
         for i in range(cfg.n_testers):
             eng = SimEngine(self.loop, self.costmodel,
@@ -109,6 +126,7 @@ class AgenticPipeline:
             self.testers.append(t)
             self.router.add_instance(t)
             self.registry.register(eng)
+            self.attach_prefix_cache(eng)
 
         # --- developer + the controllable channel ----------------------------
         dev_eng = SimEngine(self.loop, self.dev_costmodel,
@@ -124,6 +142,7 @@ class AgenticPipeline:
                                         self.channel,
                                         controller=self.controller)
         self.registry.register(dev_eng)
+        self.attach_prefix_cache(dev_eng)
         self.registry.register(self.channel)
         self.registry.register(self.router)
         self.router.rules = self.controller.rules
@@ -146,6 +165,34 @@ class AgenticPipeline:
         self.collector.describe(
             "pipeline.task_latency",
             "End-to-end pipeline task latency in seconds; lower is better.")
+
+    # -- prefix-cache wiring ------------------------------------------------------
+    def attach_prefix_cache(self, eng):
+        """Give an engine its prefix cache (over the engine's own page
+        pool), registered as a `<engine>.cache` controllable and visible
+        in the shared CacheDirectory.  No-op when the plane is off."""
+        cfg = self.cfg
+        if not cfg.prefix_cache:
+            return None
+        # same clamp as the scheduler page size: blocks no larger than
+        # the shared header, or the header could never fill one
+        block = min(cfg.cache_block_tokens, max(cfg.header_tokens, 1))
+        cache = PrefixCache(
+            eng.scheduler.alloc, name=f"{eng.name}.cache",
+            instance=eng.name, block_tokens=block,
+            evict_policy=cfg.cache_evict_policy,
+            reserve_frac=cfg.cache_reserve_frac,
+            directory=self.cache_dir, collector=self.collector,
+            clock=self.loop.now)
+        eng.attach_cache(cache)
+        self.registry.register(cache)
+        return cache
+
+    def _msg_prefix(self, msg):
+        """Prefix source the cache-aware router scores: every tester
+        request for this message starts with the instance-shared system
+        header (agents/agent.py builds the same identity)."""
+        return (("system-prompt", self.cfg.header_tokens),)
 
     # -- workload entry -----------------------------------------------------------
     def submit(self, spec: TaskSpec) -> None:

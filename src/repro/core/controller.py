@@ -124,6 +124,27 @@ class ControlContext:
         (intent ``gate CHANNEL on|off``)."""
         self.set(channel, "gate_speculative", bool(on))
 
+    def pin(self, prefix: str) -> int:
+        """Pin a named prefix in every registered cache plane (intent
+        ``pin PREFIX``): its blocks become exempt from eviction."""
+        n, hit = 0, []
+        for name in self.registry.with_capability("pin"):
+            n += self.registry.get(name).pin(prefix)
+            hit.append(name)
+        self._c._log("pin", ",".join(hit) or "-",
+                     f"prefix={prefix} blocks={n}")
+        return n
+
+    def unpin(self, prefix: str) -> int:
+        """Release a pinned prefix (intent ``unpin PREFIX``)."""
+        n, hit = 0, []
+        for name in self.registry.with_capability("pin"):
+            n += self.registry.get(name).unpin(prefix)
+            hit.append(name)
+        self._c._log("unpin", ",".join(hit) or "-",
+                     f"prefix={prefix} blocks={n}")
+        return n
+
     def note(self, target: str, detail: str) -> None:
         self._c._log("note", target, detail)
 

@@ -33,6 +33,7 @@ Grammar (line oriented; '#' comments):
             | route SESSION INSTANCE | pace CHANNEL SECONDS
             | scale GROUP (+N|-N|N) | gate CHANNEL (on|off)
             | transfer SESSION SRC DST
+            | pin PREFIX | unpin PREFIX
             | note TEXT
 
 A rule must have a ``when`` condition, an ``on`` trigger, or both.
@@ -196,6 +197,12 @@ def _parse_action(text: str, lineno: int) -> Callable[[ControlContext], None]:
     if op == "transfer" and len(args) == 3:
         sess, src, dst = args
         return lambda ctx: ctx.transfer_kv(sess, src, dst, proactive=True)
+    if op == "pin" and len(args) == 1:
+        prefix = args[0]
+        return lambda ctx: ctx.pin(prefix)
+    if op == "unpin" and len(args) == 1:
+        prefix = args[0]
+        return lambda ctx: ctx.unpin(prefix)
     if op == "note":
         text_ = " ".join(args)
         return lambda ctx: ctx.note("intent", text_)

@@ -323,6 +323,9 @@ _builtin("msgs_sent", "Cumulative number of messages sent on a channel.")
 _builtin("bytes_sent", "Cumulative number of bytes sent on a channel.")
 _builtin("link_delay", "Current queueing delay of the link in seconds; lower is better.")
 _builtin("transfer_bytes", "Cumulative bytes of KV-cache state moved between instances.")
+_builtin("hit_rate", "Prefix-cache token hit fraction; higher is better.")
+_builtin("saved_prefill_tokens", "Cumulative number of prompt tokens served from the prefix cache instead of re-prefilled.")
+_builtin("shared_pages", "Current number of KV pages held in shared (refcounted) prefix blocks.")
 
 
 # ---------------------------------------------------------------------------

@@ -88,12 +88,22 @@ class ElasticGroup(ControlSurface):
         self.p.testers.append(agent)
         self.p.router.add_instance(agent)
         self.p.registry.register(eng)
+        if hasattr(self.p, "attach_prefix_cache"):
+            self.p.attach_prefix_cache(eng)
         if self.monitor is not None:
             from repro.runtime.heartbeat import attach_engine
             attach_engine(self.monitor, eng)
         self.spawned += 1
         self._publish_replicas()
         return name
+
+    def _drop_cache(self, name: str) -> None:
+        """Instance gone: its cache controllable and directory residency
+        records go with it."""
+        self.p.registry.deregister(f"{name}.cache")
+        cache_dir = getattr(self.p, "cache_dir", None)
+        if cache_dir is not None:
+            cache_dir.detach(name)
 
     # -- scale down ----------------------------------------------------------
     def drain(self, name: str) -> None:
@@ -120,6 +130,7 @@ class ElasticGroup(ControlSurface):
                 return
             self.p.router.remove_instance(name)
             self.p.registry.deregister(name)
+            self._drop_cache(name)
             if self.monitor is not None:
                 self.monitor.unwatch(name)
             self.p.testers = [t for t in self.p.testers if t.name != name]
@@ -158,6 +169,7 @@ class ElasticGroup(ControlSurface):
             moved += 1
         self.p.router.remove_instance(name)
         self.p.registry.deregister(name)
+        self._drop_cache(name)
         if self.monitor is not None:
             self.monitor.unwatch(name)
         self.p.testers = [t for t in self.p.testers if t.name != name]

@@ -70,6 +70,13 @@ class EngineCore(ControlSurface):
     def physical_slots(self) -> int:
         return self._physical_slots
 
+    def attach_cache(self, cache):
+        """Wire a PrefixCache (sharing this engine's PageAllocator) into
+        the scheduler's admission path.  (`scheduler.cache` is the
+        handle; the real Engine keeps `self.cache` for its KV pytree.)"""
+        self.scheduler.cache = cache
+        return cache
+
     def _surface_now(self) -> float:
         return self.now()               # audit stamps use engine time
 
@@ -106,6 +113,7 @@ class EngineCore(ControlSurface):
             r.prefilled += work.chunk
             if r.prefilled >= r.prompt_len:
                 r.state = RequestState.RUNNING
+                self.scheduler.commit_prefix(r)
                 if tok is not None:
                     self._emit_token(r, int(tok), t)
                     if r.first_token_time is None:

@@ -42,7 +42,11 @@ class SimEngine(EngineCore):
             return
         self._stepping = True
         if plan.kind == StepKind.PREFILL:
-            dur = sum(self.cm.prefill_time(w.chunk) for w in plan.prefills)
+            # chunks cover only uncached tokens (the scheduler starts
+            # ``prefilled`` past the cached prefix), so prefix-cache hits
+            # shrink step time; the resident context still costs KV reads
+            dur = sum(self.cm.prefill_time(w.chunk, context=w.req.prefilled)
+                      for w in plan.prefills)
             self.loop.call_after(dur, lambda: self._finish_prefill(plan, dur))
         else:
             live = [r for r in plan.decodes

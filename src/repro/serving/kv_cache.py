@@ -6,6 +6,21 @@ path — see DESIGN.md §3); this allocator provides the *scheduling*
 semantics of paging: admission control, growth-on-decode, preemption
 pressure, and per-sequence accounting that the controller's policies and
 the KV-transfer cost model read.
+
+Two page classes:
+
+* **private** pages — owned by exactly one sequence (`allocate`/`grow_to`
+  /`free`), the original accounting.
+* **shared** blocks — refcounted groups of pages holding a cached token
+  prefix (serving/prefix_cache.py).  A sequence *acquires* a resident
+  block instead of re-allocating it; freeing the sequence only drops the
+  block's refcount, and the pages themselves stay resident (refcount 0
+  ⇒ *idle*, i.e. evictable by the prefix cache's policy) until
+  ``drop_block`` reclaims them.
+
+Invariant (the hypothesis property tests pin this down):
+
+    free_pages + private_pages + shared_pages == num_pages
 """
 from __future__ import annotations
 
@@ -13,15 +28,39 @@ from dataclasses import dataclass, field
 
 
 @dataclass
+class SharedBlock:
+    """One refcounted shared page group (a cached prefix block)."""
+
+    block_id: str
+    pages: int
+    refs: int = 0
+
+
+@dataclass
 class PageAllocator:
     num_pages: int
     page_size: int = 128
     _used: dict[str, int] = field(default_factory=dict)   # seq -> pages
+    _blocks: dict[str, SharedBlock] = field(default_factory=dict)
+    _seq_blocks: dict[str, list[str]] = field(default_factory=dict)
 
     # -- queries --------------------------------------------------------------
     @property
+    def private_pages(self) -> int:
+        return sum(self._used.values())
+
+    @property
+    def shared_pages(self) -> int:
+        return sum(b.pages for b in self._blocks.values())
+
+    @property
     def free_pages(self) -> int:
-        return self.num_pages - sum(self._used.values())
+        return self.num_pages - self.private_pages - self.shared_pages
+
+    @property
+    def idle_pages(self) -> int:
+        """Shared pages held only by the cache (refcount 0): reclaimable."""
+        return sum(b.pages for b in self._blocks.values() if b.refs == 0)
 
     def pages_for(self, tokens: int) -> int:
         return -(-tokens // self.page_size) if tokens > 0 else 0
@@ -36,7 +75,7 @@ class PageAllocator:
     def utilization(self) -> float:
         return 1.0 - self.free_pages / max(self.num_pages, 1)
 
-    # -- mutation ---------------------------------------------------------------
+    # -- private-page mutation -------------------------------------------------
     def allocate(self, seq_id: str, tokens: int) -> bool:
         need = self.pages_for(tokens)
         have = self._used.get(seq_id, 0)
@@ -51,7 +90,68 @@ class PageAllocator:
         return self.allocate(seq_id, total_tokens)
 
     def free(self, seq_id: str) -> int:
+        """Release a sequence: private pages are returned to the pool;
+        shared blocks are only decref'd — their pages stay resident until
+        the prefix cache evicts them (``drop_block``)."""
+        for bid in self._seq_blocks.pop(seq_id, ()):
+            blk = self._blocks.get(bid)
+            if blk is not None and blk.refs > 0:
+                blk.refs -= 1
         return self._used.pop(seq_id, 0)
+
+    # -- shared-block mutation -------------------------------------------------
+    def share(self, block_id: str, pages: int) -> bool:
+        """Make a block resident with refcount 0 (cache-owned).  No-op if
+        already resident; False if the pool has no room."""
+        if block_id in self._blocks:
+            return True
+        if pages > self.free_pages:
+            return False
+        self._blocks[block_id] = SharedBlock(block_id, pages)
+        return True
+
+    def block_resident(self, block_id: str) -> bool:
+        return block_id in self._blocks
+
+    def block_refs(self, block_id: str) -> int:
+        blk = self._blocks.get(block_id)
+        return blk.refs if blk is not None else 0
+
+    def acquire(self, seq_id: str, block_id: str) -> bool:
+        """Reference a resident block from a sequence (idempotent per
+        seq/block pair)."""
+        blk = self._blocks.get(block_id)
+        if blk is None:
+            return False
+        held = self._seq_blocks.setdefault(seq_id, [])
+        if block_id in held:
+            return True
+        held.append(block_id)
+        blk.refs += 1
+        return True
+
+    def promote(self, seq_id: str, block_id: str, pages: int) -> bool:
+        """Convert ``pages`` of a sequence's *private* pages into a new
+        shared block referenced by that sequence — how freshly-prefilled
+        prefix blocks enter the cache without double-counting."""
+        if block_id in self._blocks:
+            return self.acquire(seq_id, block_id)
+        have = self._used.get(seq_id, 0)
+        if pages > have:
+            return False
+        self._used[seq_id] = have - pages
+        self._blocks[block_id] = SharedBlock(block_id, pages, refs=0)
+        return self.acquire(seq_id, block_id)
+
+    def drop_block(self, block_id: str) -> bool:
+        """Evict an idle (refcount-0) block; its pages return to the pool."""
+        blk = self._blocks.get(block_id)
+        if blk is None or blk.refs > 0:
+            return False
+        del self._blocks[block_id]
+        return True
 
     def reset(self) -> None:
         self._used.clear()
+        self._blocks.clear()
+        self._seq_blocks.clear()

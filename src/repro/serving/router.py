@@ -3,20 +3,24 @@
 Sits between a channel and a group of agent instances.  Routing order:
 
 1. an installed **request-level rule** (controller's ``ctx.route``) wins;
-2. otherwise the router's own fallback policy (`static` session hash or
-   `least_loaded`) applies.
+2. otherwise the router's own fallback policy applies: `static` session
+   hash, `least_loaded`, or `cache_aware` — score instances by the
+   estimated prefix-cache hit (via the controller-visible
+   ``CacheDirectory``) and break ties by load, so fan-out requests land
+   where their shared prefix is already resident.
 
 Session affinity matters because the tester instances hold per-session
 KV state; the controller's LoadBalancePolicy re-pins sessions and pairs
 each re-pin with a KV transfer (serving/kv_transfer.py).
 
 Blocked messages (request rules with ``block=True``) are held and
-re-checked whenever the rule table version changes.
+re-checked whenever the rule table version changes — and whenever an
+instance is removed, so held traffic never targets a dead instance.
 """
 from __future__ import annotations
 
 import zlib
-from typing import Optional
+from typing import Callable, Optional
 
 from repro.core.dataplane import Endpoint
 from repro.core.knobs import ControlSurface, KnobSpec
@@ -29,51 +33,86 @@ class Router(ControlSurface):
     kind = "router"
     CAPABILITIES = ("route",)
     KNOB_SPECS = (
-        KnobSpec("policy", kind="str", choices=("static", "least_loaded"),
+        KnobSpec("policy", kind="str",
+                 choices=("static", "least_loaded", "cache_aware"),
                  doc="fallback routing policy when no rule matches"),
     )
 
     def __init__(self, loop: EventLoop, name: str = "router",
                  rules: Optional[RuleTable] = None, policy: str = "static",
-                 collector=None):
+                 collector=None, cache_dir=None,
+                 prefix_fn: Optional[Callable[[Message], object]] = None):
         self.loop = loop
         self.name = name
         self.rules = rules or RuleTable()
         self.policy = policy
         self.collector = collector
+        self.cache_dir = cache_dir               # CacheDirectory | None
+        self.prefix_fn = prefix_fn               # Message -> prefix source
         self.instances: dict[str, Endpoint] = {}
         self._loads: dict[str, object] = {}      # name -> load() callable
         self._session_pin: dict[str, str] = {}   # fallback stickiness
         self._held: list[Message] = []
         self._rules_seen = -1
         self.routed: dict[str, int] = {}
+        self.cache_routed = 0                    # picks won on prefix score
 
     # -- wiring ----------------------------------------------------------------
     def add_instance(self, agent, load_fn=None) -> None:
         self.instances[agent.name] = agent
         self._loads[agent.name] = load_fn or getattr(agent, "load", None)
         self.routed.setdefault(agent.name, 0)
+        # messages held while the fleet was empty (remove-last-then-add)
+        # get their first chance at the new instance here
+        self._pump()
 
     def remove_instance(self, name: str) -> None:
         self.instances.pop(name, None)
         self._loads.pop(name, None)
+        # stale fallback pins would re-route sessions to the dead name
         self._session_pin = {s: i for s, i in self._session_pin.items()
                              if i != name}
+        # held/blocked messages re-evaluate against the surviving set
+        # (their block rule may have been removed without a new deliver)
+        if self.instances:
+            self._pump()
 
     # -- set/reset shim: derived from ControlSurface -------------------------
     def card_metrics(self) -> tuple:
         return tuple(f"routed.{n}" for n in self.instances)
 
     # -- routing ------------------------------------------------------------------
-    def _fallback(self, session: str) -> str:
+    def _load_of(self, name: str) -> float:
+        fn = self._loads.get(name)
+        return fn() if callable(fn) else 0.0
+
+    def _cache_pick(self, names: list[str], msg: Optional[Message]):
+        """Best estimated prefix hit, ties broken by load; None when the
+        directory has no signal (caller falls back to load)."""
+        if self.cache_dir is None or self.prefix_fn is None or msg is None:
+            return None
+        source = self.prefix_fn(msg)
+        if source is None:
+            return None
+        scores = {n: self.cache_dir.estimate_hit(source, n) for n in names}
+        best = max(scores.values())
+        if best <= 0:
+            return None
+        top = [n for n in names if scores[n] == best]
+        self.cache_routed += 1
+        return min(top, key=self._load_of)
+
+    def _fallback(self, session: str, msg: Optional[Message] = None) -> str:
         names = sorted(self.instances)
         if not names:
             raise RuntimeError(f"{self.name}: no instances")
+        if self.policy == "cache_aware":
+            pick = self._cache_pick(names, msg)
+            if pick is not None:
+                return pick
+            return min(names, key=self._load_of)
         if self.policy == "least_loaded":
-            def load(n):
-                fn = self._loads.get(n)
-                return fn() if callable(fn) else 0.0
-            return min(names, key=load)
+            return min(names, key=self._load_of)
         if session not in self._session_pin:
             h = zlib.crc32(session.encode())        # deterministic hash
             self._session_pin[session] = names[h % len(names)]
@@ -84,7 +123,7 @@ class Router(ControlSurface):
         if ruled is not None and ruled in self.instances:
             return ruled
         session = (msg.payload or {}).get("session") or msg.task_id or ""
-        return self._fallback(session)
+        return self._fallback(session, msg)
 
     def deliver(self, msg: Message) -> None:
         if self._rules_seen != self.rules.version:

@@ -11,6 +11,14 @@ account; decode-time page growth failures preempt the lowest-priority
 youngest sequence (its pages are freed, the request re-queues — or the
 controller migrates it to another instance via kv_transfer first).
 
+When a ``PrefixCache`` (serving/prefix_cache.py) is attached, admission
+consults the prefix index first: resident blocks are acquired (shared,
+refcounted pages), ``req.prefilled`` starts past the cached prefix, and
+only *uncached* prompt tokens are charged against ``max_batch_tokens``
+and allocated privately.  New blocks are registered when prefill
+completes (``commit_prefix``); capacity pressure evicts idle cache
+blocks before preempting running sequences.
+
 All the ``set()``-able knobs the paper's Table-1 interface exposes live
 here: max_num_seqs, max_batch_tokens, prefill_chunk, admit_priority_min.
 """
@@ -79,10 +87,12 @@ class Scheduler(ControlSurface):
                  doc="prioritize decode over new admissions"),
     )
 
-    def __init__(self, cfg: SchedulerConfig, name: str = "scheduler"):
+    def __init__(self, cfg: SchedulerConfig, name: str = "scheduler",
+                 cache=None):
         self.name = name
         self.cfg = cfg
         self.alloc = PageAllocator(cfg.num_pages, cfg.page_size)
+        self.cache = cache               # Optional[PrefixCache] over alloc
         self.waiting: list[Request] = []
         self.running: list[Request] = []
         self._free_slots = list(range(cfg.max_slots))
@@ -117,24 +127,74 @@ class Scheduler(ControlSurface):
         return self.cfg.max_slots - len(self._free_slots)
 
     # -- planning -----------------------------------------------------------------
+    def _cache_limit(self, req: Request) -> int:
+        """Cap on usable cached prefix: never the whole prompt (the last
+        token is always recomputed to produce first-token logits) and
+        never beyond the prompt tokens that have *arrived*."""
+        lim = req.prompt_len - 1
+        if req.available >= 0:
+            lim = min(lim, req.available)
+        return max(lim, 0)
+
+    def _private_need(self, req: Request) -> int:
+        """Tokens that must be privately allocated at admission: the full
+        footprint minus the cached prefix resident in shared blocks."""
+        need = min(req.prompt_len + req.max_new_tokens, self.cfg.max_context)
+        if self.cache is None:
+            return need
+        cached = self.cache.probe_request(req, limit=self._cache_limit(req))
+        return need - min(cached, need)
+
     def _admissible(self, req: Request) -> bool:
         if int(req.priority) < self.cfg.admit_priority_min:
             return False
         if not self._free_slots:
             return False
-        need = min(req.prompt_len + req.max_new_tokens, self.cfg.max_context)
-        return self.alloc.can_allocate(need)
+        need = self._private_need(req)
+        if self.alloc.can_allocate(need):
+            return True
+        # reclaim idle cache blocks before refusing admission
+        return self.cache is not None and self.cache.make_room(need)
 
-    def _admit(self, req: Request) -> None:
+    def _admit(self, req: Request) -> bool:
         req.slot = self._free_slots.pop(0)
         need = min(req.prompt_len + req.max_new_tokens, self.cfg.max_context)
-        ok = self.alloc.allocate(req.req_id, need)
-        assert ok
+        cached = 0
+        if self.cache is not None:
+            cached = self.cache.begin(req, limit=self._cache_limit(req))
+            req.meta["cached_prompt_tokens"] = cached
+        priv = need - min(cached, need)
+        ok = self.alloc.allocate(req.req_id, priv)
+        if not ok and self.cache is not None:
+            # _admissible's probe can go stale — e.g. its make_room call
+            # evicted this very request's idle prefix blocks — so retry
+            # the eviction with the acquired chain now reference-held
+            ok = self.cache.make_room(priv) \
+                and self.alloc.allocate(req.req_id, priv)
+        if not ok:
+            # undo: release acquired blocks + slot, requeue at the front
+            self.alloc.free(req.req_id)
+            if self.cache is not None:
+                self.cache.seq_done(req.req_id)
+            self._free_slots.insert(0, req.slot)
+            req.slot = -1
+            req.state = RequestState.QUEUED
+            self.waiting.insert(0, req)
+            return False
+        req.prefilled = max(req.prefilled, cached)
         req.state = RequestState.PREFILL
         self.running.append(req)
+        return True
+
+    def commit_prefix(self, req: Request) -> None:
+        """Prefill done: register the prompt's new blocks in the cache."""
+        if self.cache is not None:
+            self.cache.commit(req)
 
     def _release(self, req: Request) -> None:
         self.alloc.free(req.req_id)
+        if self.cache is not None:
+            self.cache.seq_done(req.req_id)
         if req.slot >= 0 and req.slot < self.cfg.max_slots:
             self._free_slots.append(req.slot)
         req.slot = -1
@@ -181,7 +241,8 @@ class Scheduler(ControlSurface):
         # 1. admit while capacity
         if not self.cfg.decode_first or not self.running:
             while self.waiting and self._admissible(self.waiting[0]):
-                self._admit(self.waiting.pop(0))
+                if not self._admit(self.waiting.pop(0)):
+                    break
         # 2. prefill work pending?  (only tokens that have *arrived* —
         #    under STREAM granularity the prompt trickles in and prefill
         #    overlaps the upstream agent's generation)
@@ -215,10 +276,14 @@ class Scheduler(ControlSurface):
 
     # -- decode-time growth ----------------------------------------------------------
     def ensure_decode_capacity(self, req: Request) -> bool:
-        """Grow pages for the next token; preempt others if configured."""
-        while not self.alloc.grow_to(req.req_id,
-                                     min(req.total_len + 1,
-                                         self.cfg.max_context)):
+        """Grow pages for the next token; evict idle cache blocks first,
+        then preempt others if configured."""
+        shared = (self.cache.shared_tokens(req.req_id)
+                  if self.cache is not None else 0)
+        target = max(min(req.total_len + 1, self.cfg.max_context) - shared, 0)
+        while not self.alloc.grow_to(req.req_id, target):
+            if self.cache is not None and self.cache.evict_one():
+                continue
             if not self.cfg.preempt:
                 return False
             victim = self.preempt_one()

@@ -89,18 +89,27 @@ class CostModel:
         t_m = bytes_ * self.bytes_scale / (self.chips * HBM_BW)
         return max(t_c, t_m) + STEP_OVERHEAD
 
-    def prefill_time(self, prompt_tokens: int, batch: int = 1) -> float:
+    def prefill_time(self, prompt_tokens: int, batch: int = 1,
+                     context: int = 0) -> float:
+        """Time to prefill ``prompt_tokens`` *new* tokens.  ``context`` is
+        KV already resident (a cached shared prefix, or earlier chunks of
+        a chunked prefill): it is not recomputed, but the new tokens
+        attend over it, so it contributes attention FLOPs and KV reads —
+        this is what makes prefix-cache savings hardware-honest rather
+        than free."""
         n = self.n_active_params()
         toks = prompt_tokens * batch
         flops = 2.0 * n * toks
-        # attention term (quadratic unless windowed)
+        # attention term (quadratic unless windowed); keys span the
+        # resident context plus the new tokens
         cfg = self.cfg
-        s_eff = prompt_tokens
+        s_eff = context + prompt_tokens
         if cfg.window > 0:
-            s_eff = min(prompt_tokens, cfg.window)
+            s_eff = min(s_eff, cfg.window)
         attn_flops = (4.0 * cfg.n_layers * cfg.n_heads * cfg.d_head
                       * prompt_tokens * s_eff * batch)
-        bytes_ = n * BYTES_PER_PARAM + toks * self.kv_bytes_per_token()
+        bytes_ = (n * BYTES_PER_PARAM
+                  + (toks + context * batch) * self.kv_bytes_per_token())
         return self._roofline(flops + attn_flops, bytes_)
 
     def decode_time(self, batch: int, mean_context: float) -> float:

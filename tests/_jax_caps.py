@@ -1,0 +1,42 @@
+"""Capability probes for JAX-environment-dependent test modules.
+
+The Pallas kernels and the launch layer are written against the
+accelerator toolchain's JAX API surface; on an older CPU-only JAX those
+modules fail at the API level (``pltpu.CompilerParams``,
+``jax.sharding.AxisType`` / ``jax.set_mesh``) before any numerics run.
+These probes detect the exact capabilities the modules use so their
+tests gate behind ``pytest.mark.skipif`` — green signal on CPU CI,
+full coverage wherever the real toolchain is installed.
+"""
+from __future__ import annotations
+
+
+def _why_no_pallas() -> str:
+    try:
+        import jax  # noqa: F401
+        from jax.experimental import pallas as pl  # noqa: F401
+        from jax.experimental.pallas import tpu as pltpu
+    except Exception as e:  # pragma: no cover - env dependent
+        return f"pallas import failed: {e!r}"
+    if not hasattr(pltpu, "CompilerParams"):
+        return ("jax too old for kernels API "
+                "(pallas.tpu.CompilerParams missing)")
+    return ""
+
+
+def _why_no_mesh() -> str:
+    try:
+        import jax
+    except Exception as e:  # pragma: no cover - env dependent
+        return f"jax import failed: {e!r}"
+    if not hasattr(jax.sharding, "AxisType"):
+        return "jax too old for launch API (sharding.AxisType missing)"
+    if not hasattr(jax, "set_mesh"):
+        return "jax too old for launch API (jax.set_mesh missing)"
+    return ""
+
+
+PALLAS_SKIP_REASON = _why_no_pallas()
+HAVE_PALLAS_API = not PALLAS_SKIP_REASON
+MESH_SKIP_REASON = _why_no_mesh()
+HAVE_MESH_API = not MESH_SKIP_REASON

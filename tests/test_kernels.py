@@ -4,7 +4,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _jax_caps import HAVE_PALLAS_API, PALLAS_SKIP_REASON
 from repro.kernels import ops, ref
+
+pytestmark = pytest.mark.skipif(not HAVE_PALLAS_API,
+                                reason=PALLAS_SKIP_REASON)
 
 
 def _assert_close(a, b, dtype, tol_f32=2e-5, tol_bf16=2e-2):

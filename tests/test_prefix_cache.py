@@ -1,0 +1,436 @@
+"""Prefix-cache plane: digest chains, refcounted shared pages, admission
+reuse, eviction/pinning knobs, cache-aware routing, and the intent-v2
+``pin`` action end-to-end through the pipeline."""
+import random
+
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                     # pragma: no cover - env dependent
+    HAVE_HYPOTHESIS = False
+
+    def settings(**kw):                 # no-op decorators so module-level
+        return lambda fn: fn            # @settings/@given still evaluate
+
+    def given(*a, **kw):
+        def deco(fn):
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def skipped():              # zero-arg: no fixture resolution
+                pass
+            skipped.__name__ = fn.__name__
+            skipped.__doc__ = fn.__doc__
+            return skipped
+        return deco
+
+    class _AnyStrategy:
+        def __getattr__(self, name):
+            return lambda *a, **kw: None
+
+    st = _AnyStrategy()
+
+from repro.configs import get_config
+from repro.core.types import Message, Request, RequestState
+from repro.serving.engine_sim import SimEngine
+from repro.serving.kv_cache import PageAllocator
+from repro.serving.prefix_cache import (CacheDirectory, PrefixCache,
+                                        chain_for)
+from repro.serving.router import Router
+from repro.serving.scheduler import SchedulerConfig
+from repro.sim.clock import EventLoop
+from repro.sim.costmodel import CostModel
+
+
+# ---------------------------------------------------------------------------
+# digest chains
+# ---------------------------------------------------------------------------
+
+def test_chain_shared_prefix_property():
+    a = chain_for((("sys", 256), ("task:a", 100)), 64)
+    b = chain_for((("sys", 256), ("task:b", 100)), 64)
+    # the 4 blocks fully inside the shared segment agree; the 5th holds
+    # private content and diverges
+    assert len(a) == len(b) == 5
+    assert [x.digest for x in a[:4]] == [y.digest for y in b[:4]]
+    assert a[4].digest != b[4].digest
+    assert a[0].labels == ("sys",)
+    assert a[4].labels == ("task:a",)
+    # an unaligned boundary block carries both covering labels
+    c = chain_for((("sys", 230), ("task:a", 126)), 64)
+    assert set(c[3].labels) == {"sys", "task:a"}
+
+
+def test_chain_tokens_and_segment_offsets():
+    toks = list(range(130))
+    c = chain_for(toks, 64)
+    assert len(c) == 2                   # trailing partial block dropped
+    assert c == chain_for(toks[:128] + [999, 998], 64)[:2]
+    # same label, different segment split points -> different chains
+    x = chain_for((("s", 64), ("t", 64)), 64)
+    y = chain_for((("s", 32), ("t", 96)), 64)
+    assert x[1].digest != y[1].digest
+
+
+# ---------------------------------------------------------------------------
+# PageAllocator refcount invariants
+# ---------------------------------------------------------------------------
+
+def _conserved(a: PageAllocator) -> bool:
+    return (a.free_pages + a.private_pages + a.shared_pages == a.num_pages
+            and a.free_pages >= 0)
+
+
+def test_allocator_share_acquire_free_drop():
+    a = PageAllocator(num_pages=10, page_size=64)
+    assert a.share("b0", 2) and a.block_resident("b0")
+    assert a.idle_pages == 2 and a.shared_pages == 2
+    assert a.acquire("s1", "b0") and a.block_refs("b0") == 1
+    assert a.acquire("s1", "b0") and a.block_refs("b0") == 1   # idempotent
+    assert a.acquire("s2", "b0") and a.block_refs("b0") == 2
+    assert not a.drop_block("b0")        # referenced: not evictable
+    a.free("s1")
+    a.free("s2")
+    assert a.block_refs("b0") == 0 and a.block_resident("b0")
+    assert a.drop_block("b0") and a.free_pages == 10
+    assert _conserved(a)
+
+
+def test_allocator_promote_moves_private_to_shared():
+    a = PageAllocator(num_pages=10, page_size=64)
+    assert a.allocate("s1", 64 * 6)      # 6 private pages
+    assert a.promote("s1", "blk", 2)
+    assert a.holds("s1") == 4 and a.shared_pages == 2
+    assert a.block_refs("blk") == 1 and _conserved(a)
+    # a second promoter of the same block just references it
+    assert a.allocate("s2", 64)
+    assert a.promote("s2", "blk", 2)
+    assert a.holds("s2") == 1 and a.block_refs("blk") == 2
+    assert not a.promote("s2", "blk2", 99)   # more than it holds
+    assert _conserved(a)
+
+
+def _random_walk(a: PageAllocator, ops):
+    blocks = [f"b{i}" for i in range(4)]
+    seqs = [f"s{i}" for i in range(4)]
+    for op, i, n in ops:
+        if op == "alloc":
+            a.allocate(seqs[i % 4], n)
+        elif op == "share":
+            a.share(blocks[i % 4], 1 + n % 3)
+        elif op == "acquire":
+            a.acquire(seqs[i % 4], blocks[n % 4])
+        elif op == "promote":
+            a.promote(seqs[i % 4], blocks[n % 4], 1 + n % 2)
+        elif op == "free":
+            a.free(seqs[i % 4])
+        elif op == "drop":
+            a.drop_block(blocks[i % 4])
+        assert _conserved(a), (op, i, n)
+        for b in blocks:
+            assert a.block_refs(b) >= 0
+
+
+def test_allocator_conservation_random_walk():
+    """Deterministic stand-in for the hypothesis property (runs even
+    where hypothesis is not installed)."""
+    rng = random.Random(7)
+    kinds = ["alloc", "share", "acquire", "promote", "free", "drop"]
+    for trial in range(50):
+        a = PageAllocator(num_pages=12, page_size=64)
+        ops = [(rng.choice(kinds), rng.randrange(4), rng.randrange(500))
+               for _ in range(60)]
+        _random_walk(a, ops)
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.tuples(
+    st.sampled_from(["alloc", "share", "acquire", "promote", "free",
+                     "drop"]),
+    st.integers(0, 3), st.integers(0, 500)), max_size=60))
+def test_allocator_conservation_property(ops):
+    """Total pages conserved under any allocate/share/promote/free/drop
+    interleaving; refcounts never go negative."""
+    _random_walk(PageAllocator(num_pages=12, page_size=64), ops)
+
+
+# ---------------------------------------------------------------------------
+# PrefixCache over a SimEngine: admission reuse
+# ---------------------------------------------------------------------------
+
+def _engine(block_tokens=64, num_pages=1024, reserve_frac=0.5, slots=8,
+            evict_policy="lru"):
+    loop = EventLoop()
+    cm = CostModel(get_config("agent-7b"), chips=4)
+    cfg = SchedulerConfig(max_slots=slots, num_pages=num_pages,
+                          max_context=8192, page_size=64)
+    eng = SimEngine(loop, cm, cfg, name="eng")
+    cache = PrefixCache(eng.scheduler.alloc, name="eng.cache",
+                        instance="eng", block_tokens=block_tokens,
+                        reserve_frac=reserve_frac,
+                        evict_policy=evict_policy, clock=loop.now)
+    eng.attach_cache(cache)
+    return loop, eng, cache
+
+
+def _freq(shared, tag, suffix=64, gen=4):
+    return Request(prompt_len=shared + suffix, max_new_tokens=gen,
+                   meta={"prefix": (("ctx", shared), (f"p:{tag}", suffix))})
+
+
+def test_admission_reuses_committed_prefix():
+    loop, eng, cache = _engine()
+    r0 = _freq(512, "a")
+    eng.submit(r0)
+    loop.run_until(100.0)
+    assert r0.state == RequestState.FINISHED
+    assert r0.meta["cached_prompt_tokens"] == 0
+    r1 = _freq(512, "b")
+    eng.submit(r1)
+    loop.run_until(200.0)
+    assert r1.state == RequestState.FINISHED
+    assert r1.meta["cached_prompt_tokens"] == 512
+    assert cache.saved_prefill_tokens == 512
+    assert 0 < cache.hit_rate < 1
+
+
+def test_cached_fanout_charges_under_70pct_and_is_faster():
+    """The acceptance-bar scenario in miniature: warm prefix, then a
+    fan-out; >=30% of prefill tokens must come from the cache."""
+    def run(enabled):
+        loop, eng, cache = _engine()
+        cache.enabled = enabled
+        warm = _freq(1024, "warm")
+        eng.submit(warm)
+        loop.run_until(100.0)
+        t0 = loop.now()
+        reqs = [_freq(1024, f"w{i}") for i in range(8)]
+        for r in reqs:
+            eng.submit(r)
+        loop.run_until(1e4)
+        assert all(r.done for r in reqs)
+        charged = sum(r.prompt_len - r.meta.get("cached_prompt_tokens", 0)
+                      for r in reqs)
+        return charged, max(r.finish_time for r in reqs) - t0
+
+    charged_off, span_off = run(False)
+    charged_on, span_on = run(True)
+    assert charged_on <= 0.7 * charged_off
+    assert span_on < span_off
+
+
+def test_disabled_cache_never_matches():
+    loop, eng, cache = _engine()
+    cache.set_param("enabled", False)
+    for tag in ("a", "b"):
+        eng.submit(_freq(512, tag))
+    loop.run_until(200.0)
+    assert cache.saved_prefill_tokens == 0
+    assert cache.blocks_resident == 0
+
+
+def test_full_block_aligned_prompt_still_prefils_last_token():
+    """A prompt whose every block is resident must still recompute the
+    final token (first-token logits), never admit at prefilled==prompt."""
+    loop, eng, cache = _engine()
+    r0 = Request(prompt_len=256, max_new_tokens=2,
+                 meta={"prefix": (("ctx", 256),)})
+    eng.submit(r0)
+    loop.run_until(100.0)
+    r1 = Request(prompt_len=256, max_new_tokens=2,
+                 meta={"prefix": (("ctx", 256),)})
+    eng.submit(r1)
+    loop.run_until(200.0)
+    assert r1.state == RequestState.FINISHED
+    assert r1.meta["cached_prompt_tokens"] == 192   # capped < prompt_len
+
+
+# ---------------------------------------------------------------------------
+# eviction, reservation, pinning
+# ---------------------------------------------------------------------------
+
+def test_reserve_frac_caps_idle_pages():
+    loop, eng, cache = _engine(num_pages=64, reserve_frac=0.1)
+    for tag in range(8):
+        eng.submit(_freq(256, str(tag), suffix=64))
+        loop.run_until(loop.now() + 50.0)
+    assert eng.scheduler.alloc.idle_pages <= 0.1 * 64
+    assert cache.evictions > 0
+
+
+def test_lru_vs_lfu_eviction_order():
+    for policy, survivor in (("lru", "hot"), ("lfu", "hot")):
+        loop, eng, cache = _engine(num_pages=4096, reserve_frac=1.0,
+                                   evict_policy=policy)
+        # hot prefix used 3x, cold once
+        for tag in ("h0", "h1", "h2"):
+            eng.submit(Request(prompt_len=128 + 64, max_new_tokens=2,
+                               meta={"prefix": (("hot", 128),
+                                                (f"p:{tag}", 64))}))
+            loop.run_until(loop.now() + 50.0)
+        eng.submit(Request(prompt_len=128 + 64, max_new_tokens=2,
+                           meta={"prefix": (("cold", 128), ("p:c", 64))}))
+        loop.run_until(loop.now() + 50.0)
+        assert cache.evict_one()          # evicts a cold-side block
+        assert cache.probe((("hot", 128),)) == 128
+
+
+def test_pin_blocks_survive_make_room_and_unpin_releases():
+    loop, eng, cache = _engine(num_pages=4096, reserve_frac=1.0)
+    eng.submit(_freq(256, "a"))
+    loop.run_until(100.0)
+    assert cache.pin("ctx") > 0
+    drained = 0
+    while cache.evict_one():
+        drained += 1
+    assert cache.probe((("ctx", 256),)) == 256   # pinned chain intact
+    assert cache.unpin("ctx") > 0
+    while cache.evict_one():
+        pass
+    assert cache.probe((("ctx", 256),)) == 0
+    assert _conserved(eng.scheduler.alloc)
+
+
+def test_admission_survives_evicting_its_own_probed_blocks():
+    """Regression: _admissible's make_room could evict the admitting
+    request's own idle prefix blocks between probe and begin; _admit
+    must degrade (requeue) instead of crashing on the stale estimate."""
+    loop, eng, cache = _engine(num_pages=4, reserve_frac=1.0, slots=4)
+    a = Request(prompt_len=191, max_new_tokens=1,
+                meta={"prefix": (("p", 128), ("a", 63))})
+    eng.submit(a)
+    loop.run_until(100.0)
+    assert a.state == RequestState.FINISHED
+    assert eng.scheduler.alloc.idle_pages == 2          # p's two blocks
+    b = Request(prompt_len=100, max_new_tokens=28)      # occupies the rest
+    eng.submit(b)
+    loop.run_until(loop.now() + 0.05)
+    assert b.state in (RequestState.PREFILL, RequestState.RUNNING)
+    c = Request(prompt_len=191, max_new_tokens=1,
+                meta={"prefix": (("p", 128), ("c", 63))})
+    eng.submit(c)                                        # must not crash
+    loop.run_until(loop.now() + 1000.0)
+    assert b.state == RequestState.FINISHED
+    assert c.state == RequestState.FINISHED
+    assert _conserved(eng.scheduler.alloc)
+
+
+def test_admission_evicts_idle_blocks_when_pool_full():
+    loop, eng, cache = _engine(num_pages=16, reserve_frac=1.0)
+    eng.submit(_freq(512, "a", suffix=64, gen=2))    # 512+64+2 -> 10 pages
+    loop.run_until(100.0)
+    assert eng.scheduler.alloc.idle_pages > 0
+    # a different prefix needs the whole pool: idle blocks must go
+    big = Request(prompt_len=640, max_new_tokens=2,
+                  meta={"prefix": (("other", 640),)})
+    eng.submit(big)
+    loop.run_until(300.0)
+    assert big.state == RequestState.FINISHED
+    assert _conserved(eng.scheduler.alloc)
+
+
+# ---------------------------------------------------------------------------
+# cache-aware routing
+# ---------------------------------------------------------------------------
+
+class _Inst:
+    def __init__(self, name, load=0.0):
+        self.name = name
+        self.msgs = []
+        self._load = load
+
+    def deliver(self, msg):
+        self.msgs.append(msg)
+
+    def load(self):
+        return self._load
+
+
+def test_router_cache_aware_prefers_resident_prefix():
+    loop = EventLoop()
+    directory = CacheDirectory()
+    a0 = PageAllocator(64, 64)
+    a1 = PageAllocator(64, 64)
+    c0 = PrefixCache(a0, name="i0.cache", instance="i0",
+                     directory=directory, block_tokens=64)
+    PrefixCache(a1, name="i1.cache", instance="i1",
+                directory=directory, block_tokens=64)
+    # make the header resident on i1 only
+    seq = Request(prompt_len=129, max_new_tokens=1,
+                  meta={"prefix": (("hdr", 128),)})
+    cache1 = directory.caches["i1"]
+    a1.allocate(seq.req_id, 129)
+    cache1.begin(seq, limit=128)
+    seq.prefilled = 128
+    cache1.commit(seq)
+    assert directory.estimate_hit((("hdr", 128),), "i1") == 128
+    assert directory.estimate_hit((("hdr", 128),), "i0") == 0
+
+    r = Router(loop, policy="cache_aware", cache_dir=directory,
+               prefix_fn=lambda m: (("hdr", 128),))
+    i0, i1 = _Inst("i0", load=0.0), _Inst("i1", load=5.0)
+    r.add_instance(i0)
+    r.add_instance(i1)
+    m = Message(src="s", dst="r", payload={"session": "x"}, task_id="t")
+    r.deliver(m)
+    assert i1.msgs == [m]                # prefix hit beats lower load
+    assert r.cache_routed == 1
+    # no signal -> falls back to least loaded
+    r.prefix_fn = lambda m: None
+    m2 = Message(src="s", dst="r", payload={"session": "x"}, task_id="t2")
+    r.deliver(m2)
+    assert i0.msgs == [m2]
+    assert c0 is directory.caches["i0"]
+
+
+# ---------------------------------------------------------------------------
+# intent v2: pin + cache_aware routing end-to-end
+# ---------------------------------------------------------------------------
+
+def test_default_pipeline_config_actually_shares_blocks():
+    """Regression: the pipeline clamps page/block size to header_tokens,
+    so the default config (64-token header) produces real cache hits and
+    cache-aware routing gets a usable signal."""
+    from repro.agents import AgenticPipeline, PipelineConfig, TaskSpec
+    p = AgenticPipeline(PipelineConfig(n_testers=2,
+                                       router_policy="cache_aware"))
+    for i in range(6):
+        p.submit(TaskSpec(session=f"sess-{i % 2}", n_functions=2))
+    p.run(until=40.0)
+    assert len(p.done) == 6
+    assert sum(c.saved_prefill_tokens
+               for c in p.cache_dir.caches.values()) > 0
+    assert p.router.cache_routed > 0
+
+
+def test_intent_pin_and_cache_aware_routing_end_to_end():
+    from repro.agents import AgenticPipeline, PipelineConfig, TaskSpec
+    from repro.core.intent import compile_intent
+
+    # header_tokens must span full pages (128) to be block-shareable
+    p = AgenticPipeline(PipelineConfig(n_testers=2, header_tokens=256,
+                                       router_policy="cache_aware"))
+    prog = compile_intent(
+        "rule pin_hot: when last(tester-0.cache.hit_rate) < 0.9 "
+        "=> pin system-prompt\n")
+    p.controller.install(prog)
+    for i in range(6):
+        p.submit(TaskSpec(session=f"sess-{i % 2}", n_functions=2))
+    p.run(until=40.0)
+    assert len(p.done) == 6
+    # the rule fired and the pin action reached every registered cache
+    assert prog.rules[0].fire_count >= 1
+    assert p.controller.action_log("pin")
+    pinned = [e for c in p.cache_dir.caches.values()
+              for e in c._entries.values() if e.pinned]
+    assert pinned, "system-prompt blocks should be pinned"
+    assert all("system-prompt" in e.block.labels for e in pinned)
+    # cache-aware routing actually used prefix scores, and the shared
+    # header was served from cache at least once
+    assert p.router.cache_routed > 0
+    saved = sum(c.saved_prefill_tokens for c in p.cache_dir.caches.values())
+    assert saved > 0
+    # knob surface reachable through the registry (Table-1 uniformity)
+    p.registry.set("tester-0.cache", "evict_policy", "lfu")
+    assert p.registry.get_param("tester-0.cache", "evict_policy") == "lfu"

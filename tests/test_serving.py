@@ -211,6 +211,64 @@ def test_router_least_loaded():
     assert b.msgs == [m]
 
 
+def test_router_remove_instance_redispatches_held_and_drops_pins():
+    """Removing an instance must (a) drop stale fallback session pins
+    targeting it and (b) re-dispatch held/blocked messages, even when no
+    new deliver bumps the rule-table version afterwards."""
+    from repro.core.rules import RequestRule
+    loop = EventLoop()
+    r = Router(loop, policy="static")
+    a, b = _Sink("i0"), _Sink("i1")
+    r.add_instance(a)
+    r.add_instance(b)
+    # pin a session to each instance via the fallback hash
+    sessions = [f"s{i}" for i in range(8)]
+    for s in sessions:
+        r.deliver(Message(src="x", dst="r", payload={"session": s},
+                          task_id=s))
+    pinned_to_a = [s for s, i in r._session_pin.items() if i == "i0"]
+    assert pinned_to_a
+    # hold a message behind a block rule
+    r.rules.install(RequestRule(session=pinned_to_a[0], block=True))
+    held = Message(src="x", dst="r", payload={"session": pinned_to_a[0]},
+                   task_id="held")
+    r.deliver(held)
+    assert held in r._held
+    # unblock (version bump happens, but no new deliver arrives) ...
+    r.rules.remove_request_rules(lambda rule: rule.block)
+    # ... then the pinned instance dies
+    n_b = len(b.msgs)
+    r.remove_instance("i0")
+    assert all(i != "i0" for i in r._session_pin.values())
+    assert held not in r._held
+    assert b.msgs[-1] is held and len(b.msgs) == n_b + 1
+    # re-delivery of an old i0 session lands on the survivor
+    r.deliver(Message(src="x", dst="r", payload={"session": pinned_to_a[0]},
+                      task_id="again"))
+    assert b.msgs[-1].task_id == "again"
+
+
+def test_router_held_message_survives_remove_last_then_add():
+    """A message held while the fleet is momentarily empty must be
+    re-dispatched when a replacement instance registers."""
+    from repro.core.rules import RequestRule
+    loop = EventLoop()
+    r = Router(loop, policy="static")
+    a = _Sink("i0")
+    r.add_instance(a)
+    r.rules.install(RequestRule(session="s", block=True))
+    held = Message(src="x", dst="r", payload={"session": "s"},
+                   task_id="held")
+    r.deliver(held)
+    assert held in r._held
+    r.rules.remove_request_rules(lambda rule: rule.block)
+    r.remove_instance("i0")              # fleet empty: nothing to pump to
+    assert held in r._held
+    b = _Sink("i1")
+    r.add_instance(b)                    # replacement arrives
+    assert b.msgs == [held] and not r._held
+
+
 def test_kv_transfer_timing_and_residency():
     loop = EventLoop()
     d = SessionDirectory()
