@@ -30,7 +30,8 @@ def _emit(out_dir: Path, name: str, payload: dict) -> None:
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all",
-                    help="comma list: fig3,fig6,fig7,prefix,kernels,roofline")
+                    help="comma list: fig3,fig6,fig7,prefix,workflow,"
+                         "kernels,roofline")
     ap.add_argument("--out-dir", default="artifacts/bench",
                     help="directory for BENCH_*.json summaries")
     ap.add_argument("--smoke", action="store_true",
@@ -40,8 +41,8 @@ def main() -> int:
     out_dir = Path(args.out_dir)
 
     summary: dict[str, dict] = {}
-    names = [n for n in ("fig3", "fig6", "fig7", "prefix", "kernels",
-                         "roofline")
+    names = [n for n in ("fig3", "fig6", "fig7", "prefix", "workflow",
+                         "kernels", "roofline")
              if want is None or n in want]
     for name in names:
         t0 = time.time()
@@ -59,6 +60,9 @@ def main() -> int:
         elif name == "prefix":
             from benchmarks import bench_prefix
             report = bench_prefix.main(smoke=args.smoke)
+        elif name == "workflow":
+            from benchmarks import bench_workflow
+            report = bench_workflow.main(smoke=args.smoke)
         elif name == "kernels":
             from benchmarks import bench_kernels
             report = bench_kernels.main()

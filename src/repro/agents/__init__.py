@@ -1,8 +1,16 @@
 from repro.agents.agent import DeveloperAgent, TesterAgent, ToolAgent
-from repro.agents.pipeline import AgenticPipeline, PipelineConfig, TaskSpec
-from repro.agents.workloads import ClosedLoopClient, WorkloadConfig
+from repro.agents.graph import (GraphTask, WorkflowGraph, debate,
+                                deep_review, fig1, map_reduce)
+from repro.agents.pipeline import (AgenticPipeline, PipelineConfig, TaskSpec,
+                                   TierSpec, WorkflowConfig, WorkflowPipeline)
+from repro.agents.stage import StageAgent, StageKind, StageSpec
+from repro.agents.workloads import (ClosedLoopClient, GraphBurst,
+                                    WorkloadConfig)
 
 __all__ = [
-    "AgenticPipeline", "ClosedLoopClient", "DeveloperAgent", "PipelineConfig",
-    "TaskSpec", "TesterAgent", "ToolAgent", "WorkloadConfig",
+    "AgenticPipeline", "ClosedLoopClient", "DeveloperAgent", "GraphBurst",
+    "GraphTask", "PipelineConfig", "StageAgent", "StageKind", "StageSpec",
+    "TaskSpec", "TesterAgent", "TierSpec", "ToolAgent", "WorkflowConfig",
+    "WorkflowGraph", "WorkflowPipeline", "WorkloadConfig", "debate",
+    "deep_review", "fig1", "map_reduce",
 ]

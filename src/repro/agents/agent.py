@@ -56,7 +56,7 @@ class DeveloperAgent:
                   (f"task:{spec.task_id}", spec.prompt_tokens - sys_toks))
         req = Request(prompt_len=spec.prompt_tokens,
                       max_new_tokens=spec.n_functions * spec.func_tokens,
-                      priority=spec.priority,
+                      priority=spec.priority, stage="developer",
                       meta={"spec": spec, "prefix": prefix})
         self._active[req.req_id] = spec
         self.out.begin_task(
@@ -255,7 +255,7 @@ class TesterAgent:
         req = Request(
             prompt_len=base + content_tokens,
             max_new_tokens=units * st.test_tokens,
-            priority=priority,
+            priority=priority, stage="tester",
             meta={"task": st.task_id, "units": units, "agent": self.name,
                   "prefix": tuple(prefix)})
         req.available = base + available_content

@@ -1,17 +1,38 @@
-"""Pipeline assembly: one call builds the paper's Fig-1 topology —
+"""Pipeline assembly — the compiler from workflow graphs to wired
+serving topologies.
 
-    clients → developer(engine) → channel(shim) → router → tester[i](engine)
+``AgenticPipeline.build(graph)`` is the general entry point: any
+``WorkflowGraph`` (agents/graph.py) compiles into engines, channels and
+routers with the metrics plane attached to every component and
+everything registered with the controller.
 
-with the metrics plane attached to every component, everything registered
-with the controller, and the KV-transfer fabric wired between tester
-instances.  All benchmarks and the serving examples build through here.
+* Graphs carrying the ``fig1`` template marker compile through the
+  classic ``AgenticPipeline`` — the paper's Fig-1 topology
+
+      clients → developer(engine) → channel(shim) → router → tester[i]
+
+  with its DeveloperAgent/TesterAgent semantics, KV-transfer fabric,
+  prefix-cache plane and elastic tester group.  All pre-graph
+  ``PipelineConfig`` callers (benchmarks, examples) keep building this
+  path unmodified.
+
+* Every other graph compiles into a ``WorkflowPipeline``: a shared,
+  tier-labelled engine pool behind one router (``stage_aware`` policy
+  routes each stage's calls to its ``model_tier``), one ``StageAgent``
+  per stage registered as a ``stage.<name>`` controllable, and one
+  data-plane ``Channel`` per graph edge.  The graph is a control-plane
+  object: the scheduler consumes critical-path-derived deadlines and
+  longest-remaining-path boosts propagated along its edges.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 from typing import Optional
 
-from repro.agents.agent import DeveloperAgent, TesterAgent
+from repro.agents.agent import DeveloperAgent, TesterAgent, ToolAgent
+from repro.agents.graph import GraphTask, WorkflowGraph, fig1
+from repro.agents.stage import EngineWorker, StageAgent, StageKind
 from repro.configs import get_config
 from repro.core.controller import Controller
 from repro.core.dataplane import Channel
@@ -30,7 +51,13 @@ from repro.sim.network import Link
 
 @dataclass
 class TaskSpec:
-    """One MetaGPT-style task: write n functions, each gets tests."""
+    """One MetaGPT-style task: write n functions, each gets tests.
+
+    ``speculative`` flows onto the outbound channel's messages (the
+    shim's speculative gate holds them while gated); ``finished_at`` is
+    stamped by the pipeline's single completion path (``_task_done``)
+    and backs ``throughput()``/``latencies()``.
+    """
 
     session: str
     prompt_tokens: int = 192
@@ -70,9 +97,14 @@ class PipelineConfig:
     cache_evict_policy: str = "lru"
 
 
-class AgenticPipeline:
-    def __init__(self, cfg: PipelineConfig, loop: Optional[EventLoop] = None):
-        self.cfg = cfg
+class ServingFabric:
+    """Shared control/metrics fabric every compiled topology stands on:
+    metric bus + collector + central poller + registry + controller,
+    plus the task-completion bookkeeping (``done``/``latencies``/
+    ``throughput``) both pipeline flavors report through."""
+
+    def __init__(self, loop: Optional[EventLoop] = None,
+                 interval: float = 0.05):
         self.loop = loop or EventLoop()
         self.bus = MetricBus()
         self.collector = Collector("pipeline", bus=self.bus)
@@ -81,8 +113,35 @@ class AgenticPipeline:
         self.poller.attach(self.collector)
         self.registry = Registry()
         self.controller = Controller(self.loop, self.registry, self.poller,
-                                     interval=cfg.controller_interval,
-                                     bus=self.bus)
+                                     interval=interval, bus=self.bus)
+        self.done: list = []
+        self.on_task_done = None
+
+    def run(self, until: float) -> None:
+        self.controller.start()
+        self.loop.run_until(until)
+
+    def throughput(self, t0: float = 0.0, t1: Optional[float] = None) -> float:
+        t1 = t1 if t1 is not None else self.loop.now()
+        n = sum(1 for s in self.done if t0 <= s.finished_at <= t1)
+        return n / max(t1 - t0, 1e-9)
+
+    def latencies(self) -> list[float]:
+        return [s.finished_at - s.submitted_at for s in self.done]
+
+
+class AgenticPipeline(ServingFabric):
+    """The classic Fig-1 pipeline (see module docstring)."""
+
+    def __init__(self, cfg: PipelineConfig, loop: Optional[EventLoop] = None,
+                 graph: Optional[WorkflowGraph] = None):
+        self.cfg = cfg
+        super().__init__(loop, interval=cfg.controller_interval)
+        # the fig1 topology as a graph: the same control-plane object
+        # generic workflows get, so policies can read stage structure
+        # (build() threads a caller-customized fig1 graph through here)
+        self.graph = graph if graph is not None else fig1()
+        self.controller.attach_graph(self.graph)
 
         model_cfg = get_config(cfg.model)
         self.costmodel = CostModel(model_cfg, chips=cfg.tester_chips)
@@ -160,11 +219,27 @@ class AgenticPipeline:
 
         # --- bookkeeping -------------------------------------------------------
         self._inflight: dict[str, TaskSpec] = {}
-        self.done: list[TaskSpec] = []
-        self.on_task_done = None
         self.collector.describe(
             "pipeline.task_latency",
             "End-to-end pipeline task latency in seconds; lower is better.")
+
+    # -- graph entry point --------------------------------------------------
+    @classmethod
+    def build(cls, graph: WorkflowGraph, cfg=None,
+              loop: Optional[EventLoop] = None):
+        """Compile a workflow graph into a wired serving topology.
+
+        ``fig1``-template graphs build the classic pipeline (pass a
+        ``PipelineConfig``); everything else builds a
+        ``WorkflowPipeline`` (pass a ``WorkflowConfig``)."""
+        graph.validate()
+        if graph.template == "fig1":
+            if cfg is not None and not isinstance(cfg, PipelineConfig):
+                raise TypeError("fig1 graphs take a PipelineConfig")
+            return cls(cfg or PipelineConfig(), loop, graph=graph)
+        if cfg is not None and not isinstance(cfg, WorkflowConfig):
+            raise TypeError(f"graph {graph.name!r} takes a WorkflowConfig")
+        return WorkflowPipeline(graph, cfg, loop)
 
     # -- prefix-cache wiring ------------------------------------------------------
     def attach_prefix_cache(self, eng):
@@ -212,15 +287,212 @@ class AgenticPipeline:
         if self.on_task_done is not None:
             self.on_task_done(spec)
 
-    # -- results ---------------------------------------------------------------------
-    def run(self, until: float) -> None:
-        self.controller.start()
-        self.loop.run_until(until)
 
-    def throughput(self, t0: float = 0.0, t1: Optional[float] = None) -> float:
-        t1 = t1 if t1 is not None else self.loop.now()
-        n = sum(1 for s in self.done if t0 <= s.finished_at <= t1)
-        return n / max(t1 - t0, 1e-9)
+# ---------------------------------------------------------------------------
+# Generic workflow pipeline
+# ---------------------------------------------------------------------------
 
-    def latencies(self) -> list[float]:
-        return [s.finished_at - s.submitted_at for s in self.done]
+
+@dataclass
+class TierSpec:
+    """One model-size tier of the shared engine pool."""
+
+    model: str                           # configs/ architecture name
+    chips: int = 4                       # TP degree per instance
+    replicas: int = 2                    # instances of this tier
+    slots: int = 16                      # continuous-batching slots
+
+
+@dataclass
+class WorkflowConfig:
+    """Compilation parameters for non-fig1 graphs."""
+
+    tiers: dict[str, TierSpec] = field(default_factory=lambda: {
+        "large": TierSpec("agent-7b", chips=4, replicas=2, slots=16),
+        "small": TierSpec("agent-1b", chips=1, replicas=2, slots=16),
+    })
+    router_policy: str = "stage_aware"   # static | least_loaded | stage_aware
+    critical_path: bool = True           # stamp deadlines + admission boost
+    deadline_slack: float = 2.0          # deadline = slack x cp estimate
+    est_prompt_tokens: int = 128         # nominal task prompt for cp math
+    granularity: Granularity = Granularity.PIPELINE
+    stream_chunk: int = 8
+    num_pages: int = 4096
+    max_context: int = 8192
+    page_size: int = 64
+    msg_bandwidth: float = 1.25e9
+    msg_proc_time: float = 1.0e-3
+    controller_interval: float = 0.05
+
+
+class WorkflowPipeline(ServingFabric):
+    """A compiled workflow graph: shared tier-labelled engine pool
+    behind one router, a StageAgent per stage, a Channel per edge."""
+
+    def __init__(self, graph: WorkflowGraph,
+                 cfg: Optional[WorkflowConfig] = None,
+                 loop: Optional[EventLoop] = None):
+        cfg = cfg or WorkflowConfig()
+        self.cfg = cfg
+        super().__init__(loop, interval=cfg.controller_interval)
+        self.graph = graph.validate()
+
+        # --- shared engine pool, one router over every tier ----------------
+        self.costmodels = {
+            tier: CostModel(get_config(ts.model), chips=ts.chips)
+            for tier, ts in cfg.tiers.items()}
+        self.router = Router(self.loop, "workflow-router",
+                             policy=cfg.router_policy,
+                             collector=self.collector)
+        self.workers: list[EngineWorker] = []
+        for tier, ts in cfg.tiers.items():
+            for i in range(ts.replicas):
+                eng = SimEngine(
+                    self.loop, self.costmodels[tier],
+                    SchedulerConfig(max_slots=ts.slots,
+                                    num_pages=cfg.num_pages,
+                                    max_context=cfg.max_context,
+                                    page_size=cfg.page_size),
+                    name=f"wf-{tier}-{i}", collector=self.collector)
+                w = EngineWorker(eng, tier)
+                self.workers.append(w)
+                self.router.add_instance(w, tier=tier)
+                self.registry.register(eng)
+        self.registry.register(self.router)
+        self.router.rules = self.controller.rules
+
+        # --- one StageAgent per stage, registered as stage.<name> ----------
+        self.stages: dict[str, StageAgent] = {}
+        for name, spec in graph.stages.items():
+            ag = StageAgent(spec, self.loop, self, collector=self.collector)
+            if spec.kind is StageKind.TOOL:
+                ag.tool = ToolAgent(f"{name}.tool", self.loop,
+                                    latency=spec.tool_latency,
+                                    collector=self.collector)
+                self.registry.register(ag.tool)
+            self.stages[name] = ag
+            self.registry.register(ag)
+
+        # --- one data-plane channel per graph edge -------------------------
+        self.channels: dict[tuple[str, str], Channel] = {}
+        for (u, v) in graph.edges:
+            link = Link(self.loop, bandwidth=cfg.msg_bandwidth,
+                        proc_time=cfg.msg_proc_time, name=f"{u}->{v}.link")
+            ch = Channel(self.loop, link, u, self.stages[v],
+                         name=f"{u}->{v}", collector=self.collector,
+                         granularity=cfg.granularity,
+                         stream_chunk=cfg.stream_chunk)
+            self.channels[(u, v)] = ch
+            self.registry.register(ch)
+            self.stages[u].succs.append((v, ch))
+        for name, ag in self.stages.items():
+            ag.n_preds = len(graph.preds(name))
+
+        self.controller.attach_graph(graph)
+        self._pending: dict[str, int] = {}    # task -> activation refcount
+        self._inflight: dict[str, GraphTask] = {}
+        self._cp: dict[str, float] = {}
+        self._cp_total = 0.0
+        self._recompute_cp()
+        self.collector.describe(
+            "workflow.task_latency",
+            "End-to-end workflow task latency in seconds; lower is better.")
+
+    # -- critical path ------------------------------------------------------
+    def tier_names(self) -> tuple[str, ...]:
+        return tuple(self.cfg.tiers)
+
+    def _stage_cost(self, spec, est_in: float) -> float:
+        ag = self.stages.get(spec.name)
+        tier = ag.model_tier if ag is not None else spec.model_tier
+        if spec.kind is StageKind.TOOL:
+            return spec.tool_latency
+        cm = self.costmodels.get(tier)
+        ts = self.cfg.tiers.get(tier)
+        if cm is None:                    # tier not in this pool: calls
+            first = next(iter(self.cfg.tiers))   # fall back to the
+            cm, ts = self.costmodels[first], self.cfg.tiers[first]  # default
+        if spec.kind is StageKind.FAN_OUT:
+            width = ag.width if ag is not None else spec.width
+            serial = math.ceil(width / max(ts.replicas, 1))
+            return serial * cm.call_time(
+                spec.prompt_tokens + int(est_in // max(width, 1)),
+                spec.out_tokens)
+        return cm.call_time(spec.prompt_tokens + int(est_in),
+                            spec.out_tokens)
+
+    def _recompute_cp(self) -> None:
+        self._cp = self.graph.critical_path(
+            self._stage_cost, prompt_tokens=self.cfg.est_prompt_tokens)
+        self._cp_total = self.graph.cp_total(self._cp)
+        # per-stage deadline anchors, cached: dispatch is the hot path
+        # and these only move when a tier/width knob does
+        est_in = self.graph.est_inputs(self.cfg.est_prompt_tokens)
+        self._through = {
+            n: self._cp_total - max(
+                self._cp[n] - self._stage_cost(spec, est_in[n]), 0.0)
+            for n, spec in self.graph.stages.items()}
+
+    def on_stage_retier(self, name: str) -> None:
+        """A stage's model_tier/width knob moved: cost estimates — and
+        therefore every propagated deadline — shift."""
+        self._recompute_cp()
+
+    def cp_enabled(self) -> bool:
+        return self.cfg.critical_path
+
+    def cp_remaining(self, stage: str) -> float:
+        return self._cp.get(stage, 0.0)
+
+    def cp_through(self, stage: str) -> float:
+        """Critical-path work through the *end* of ``stage`` — the
+        deadline anchor propagated along edges."""
+        return self._through.get(stage, 0.0)
+
+    # -- stage runtime hooks ------------------------------------------------
+    def route_call(self, msg) -> None:
+        self.router.deliver(msg)
+
+    def task_merge(self, task: GraphTask, arrived: int) -> None:
+        """A stage dispatched after absorbing ``arrived`` input
+        activations: they merge into the stage's single activation."""
+        if arrived > 1:
+            self._bump(task, -(arrived - 1))
+
+    def task_advance(self, task: GraphTask, forwarded: int) -> None:
+        """A stage completed: its activation ends, ``forwarded``
+        successor activations begin."""
+        self._bump(task, forwarded - 1)
+
+    def task_drop(self, task: GraphTask) -> None:
+        """A straggler input arrived after its join already fired."""
+        self._bump(task, -1)
+
+    def _bump(self, task: GraphTask, delta: int) -> None:
+        tid = task.task_id
+        if tid not in self._pending:
+            return
+        self._pending[tid] += delta
+        if self._pending[tid] <= 0:
+            del self._pending[tid]
+            self._inflight.pop(tid, None)
+            t = self.loop.now()
+            task.finished_at = t
+            self.done.append(task)
+            self.collector.observe("workflow.task_latency",
+                                   t - task.submitted_at, t)
+            self.collector.counter("workflow.tasks_done", 1, t)
+            if self.on_task_done is not None:
+                self.on_task_done(task)
+
+    # -- workload entry -----------------------------------------------------
+    def submit(self, task: GraphTask) -> None:
+        task.submitted_at = self.loop.now()
+        if self.cfg.critical_path and task.deadline == math.inf:
+            task.deadline = (task.submitted_at
+                             + self.cfg.deadline_slack * self._cp_total)
+        sources = self.graph.sources()
+        self._pending[task.task_id] = len(sources)
+        self._inflight[task.task_id] = task
+        for s in sources:
+            self.stages[s].inject(task, task.prompt_tokens)

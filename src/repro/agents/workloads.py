@@ -7,6 +7,10 @@ at high N engine efficiency dominates (batching wins).
 
 ``PhasedLoad`` — drives the client count through phases (low → high →
 low) for the Fig-6 adaptive-switching experiment.
+
+``GraphBurst`` — the workflow-plane arrival pattern: N ``GraphTask``s
+submitted to a ``WorkflowPipeline`` in a (possibly staggered) burst, so
+queues form and cross-stage scheduling order actually matters.
 """
 from __future__ import annotations
 
@@ -14,6 +18,7 @@ import random
 from dataclasses import dataclass, field
 from typing import Optional
 
+from repro.agents.graph import GraphTask
 from repro.agents.pipeline import AgenticPipeline, TaskSpec
 from repro.core.types import Priority
 
@@ -43,15 +48,23 @@ class ClosedLoopClient:
         self.submitted = 0
         self.completed = 0
         self.active = False
+        self._timer = None               # pending think/start event
 
     def start(self, delay: float = 0.0) -> None:
         self.active = True
-        self.p.loop.call_after(delay, self._next)
+        self._timer = self.p.loop.call_after(delay, self._next)
 
     def stop(self) -> None:
+        """Deactivate AND cancel the pending think-timer, so a stopped
+        client leaves nothing on the event loop (a bare flag would let
+        an in-flight timer fire one more ``_next``)."""
         self.active = False
+        if self._timer is not None:
+            self.p.loop.cancel(self._timer)
+            self._timer = None
 
     def _next(self) -> None:
+        self._timer = None
         if not self.active or self.p.loop.now() >= self.stop_at:
             return
         if self.cfg.tasks_per_client and self.submitted >= self.cfg.tasks_per_client:
@@ -67,9 +80,13 @@ class ClosedLoopClient:
 
     def _on_done(self) -> None:
         self.completed += 1
+        if not self.active:
+            return        # stopped with a task in flight: stay quiescent
+                          # (re-arming here would leave an untracked timer
+                          # that a later start() could double up with)
         think = self.cfg.think_time * (
             1 + self.rng.uniform(-self.cfg.jitter, self.cfg.jitter))
-        self.p.loop.call_after(max(think, 0.0), self._next)
+        self._timer = self.p.loop.call_after(max(think, 0.0), self._next)
 
 
 def _dispatch_done(spec: TaskSpec) -> None:
@@ -125,6 +142,29 @@ class OpenLoopSource:
         self.submitted += 1
         self.p.submit(spec)
         self._schedule(session, self.rng.expovariate(self.rate))
+
+
+class GraphBurst:
+    """Open-loop burst of workflow tasks against a WorkflowPipeline."""
+
+    def __init__(self, pipeline, n_tasks: int, prompt_tokens: int = 128,
+                 stagger: float = 0.0, seed: int = 0):
+        self.p = pipeline
+        self.n_tasks = n_tasks
+        self.prompt_tokens = prompt_tokens
+        self.stagger = stagger           # mean inter-arrival gap (0 = all at t0)
+        self.rng = random.Random(seed)
+        self.tasks: list[GraphTask] = []
+
+    def start(self) -> None:
+        t = self.p.loop.now()
+        for i in range(self.n_tasks):
+            task = GraphTask(session=f"wf-sess-{i}",
+                             prompt_tokens=self.prompt_tokens)
+            self.tasks.append(task)
+            self.p.loop.call_at(t, lambda task=task: self.p.submit(task))
+            if self.stagger > 0:
+                t += self.rng.expovariate(1.0 / self.stagger)
 
 
 @dataclass

@@ -25,7 +25,7 @@ ARCHS: tuple[str, ...] = (
     "seamless-m4t-large-v2",
 )
 
-_EXTRA = ("tiny-agent", "lm-100m", "agent-7b")
+_EXTRA = ("tiny-agent", "lm-100m", "agent-7b", "agent-1b")
 
 
 def _module(name: str) -> str:
@@ -38,7 +38,7 @@ def get_config(name: str) -> ModelConfig:
     mod = importlib.import_module(_module(name))
     if name in _EXTRA:
         attr = {"tiny-agent": "TINY_AGENT", "lm-100m": "LM_100M",
-                "agent-7b": "AGENT_7B"}[name]
+                "agent-7b": "AGENT_7B", "agent-1b": "AGENT_1B"}[name]
         return getattr(mod, attr)
     cfg = mod.CONFIG
     assert cfg.name == name, (cfg.name, name)

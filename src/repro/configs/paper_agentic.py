@@ -37,6 +37,21 @@ LM_100M = ModelConfig(
     rope_theta=10_000.0,
 )
 
+# Small serving tier (~1B-class dense): the workflow plane's Aragog-style
+# per-stage tiering routes cheap stages (map workers, summarizers) here
+# instead of the 7B tier — same architecture family, ~1/6 the weights.
+AGENT_1B = ModelConfig(
+    name="agent-1b",
+    family="dense",
+    n_layers=16,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=8,
+    d_ff=5632,
+    vocab=32000,
+    rope_theta=10_000.0,
+)
+
 # Paper-scale serving agent (7B-class dense) — used by the sim cost model.
 AGENT_7B = ModelConfig(
     name="agent-7b",

@@ -52,6 +52,13 @@ class ControlContext:
     def now(self) -> float:
         return self._c.loop.now()
 
+    @property
+    def graph(self):
+        """The serving topology's workflow graph (agents/graph.py), when
+        one is attached — policies can read stage structure, e.g. to
+        walk a breaching stage's successors before re-tiering it."""
+        return self._c.graph
+
     # -- metric sugar -----------------------------------------------------------
     def metric(self, name: str, agg: Optional[str] = None,
                window: float = float("inf"), default: float = 0.0) -> float:
@@ -180,6 +187,7 @@ class Controller:
         self.policies: list[Policy] = []
         self.actions: list[Action] = []
         self.transfer_fn: Optional[Callable] = None
+        self.graph = None                # workflow graph (control-plane view)
         self._running = False
         self.ticks = 0
         self.events_handled = 0
@@ -193,6 +201,12 @@ class Controller:
 
     def attach_transfer(self, fn: Callable) -> None:
         self.transfer_fn = fn
+
+    def attach_graph(self, graph) -> None:
+        """Register the serving topology's workflow graph as a
+        control-plane object: policies and intent programs see the same
+        DAG the scheduler derives critical-path priorities from."""
+        self.graph = graph
 
     # -- loop ------------------------------------------------------------------
     def start(self) -> None:

@@ -14,6 +14,10 @@ internals; the compiler turns them into a closed-loop ``Policy``:
     # (or named controller events) BETWEEN interval polls
     rule burst on tester-0.queue_len > 12 hold 4:
         => scale tester-group +1; gate dev->tester on
+    # workflow plane: `stage NAME` selects a registered stage.<NAME>
+    # controllable / its exported stage.<NAME>.* gauges
+    rule slow_review on stage reviewer.p95 > 2 hold 3:
+        => set stage reviewer.model_tier small
 
 Grammar (line oriented; '#' comments):
 
@@ -27,8 +31,10 @@ Grammar (line oriented; '#' comments):
     COND   := TERM (('and'|'or') TERM)*
     TERM   := AGG '(' METRIC [',' WINDOW] ')' CMP NUMBER
     METRIC := exact series name, or a glob (``tester-*.queue_len``)
-              pooling every matching series fleet-wide
-    ACTION := set TARGET.KNOB VALUE | reset TARGET.KNOB
+              pooling every matching series fleet-wide;
+              ``stage NAME.METRIC`` sugars to ``stage.NAME.METRIC``
+              (the workflow plane's per-stage gauge namespace)
+    ACTION := set [stage] TARGET.KNOB VALUE | reset [stage] TARGET.KNOB
             | granularity CHANNEL (batch|pipeline|stream)
             | route SESSION INSTANCE | pace CHANNEL SECONDS
             | scale GROUP (+N|-N|N) | gate CHANNEL (on|off)
@@ -134,8 +140,19 @@ def _parse_value(s: str):
         return s
 
 
+# workflow-plane selector sugar: `stage reviewer.p95` names the series
+# `stage.reviewer.p95` (and, in set/reset, the `stage.reviewer`
+# controllable) — the grammar keeps the paper's "stage" vocabulary
+# while the planes keep plain dotted names
+_STAGE_SEL_RE = re.compile(r"\bstage\s+(?=[\w\-]+\.)")
+
+
+def _desugar_stage(text: str) -> str:
+    return _STAGE_SEL_RE.sub("stage.", text)
+
+
 def _parse_cond(text: str, lineno: int) -> Cond:
-    parts = re.split(r"\s+(and|or)\s+", text)
+    parts = re.split(r"\s+(and|or)\s+", _desugar_stage(text))
     terms, ops = [], []
     for i, p in enumerate(parts):
         if i % 2 == 1:
@@ -154,7 +171,7 @@ def _parse_cond(text: str, lineno: int) -> Cond:
 
 
 def _parse_action(text: str, lineno: int) -> Callable[[ControlContext], None]:
-    toks = text.split()
+    toks = _desugar_stage(text).split()
     if not toks:
         raise IntentError(f"line {lineno}: empty action")
     op, args = toks[0], toks[1:]
@@ -236,7 +253,7 @@ class Trigger:
 
 
 def _parse_trigger(text: str, lineno: int) -> Trigger:
-    text = text.strip()
+    text = _desugar_stage(text.strip())
     m = _TRIGGER_RE.match(text)
     if m:
         return Trigger(metric=m.group("metric"), cmp=m.group("cmp"),

@@ -218,6 +218,35 @@ def register_aggregation(name: str,
     AGGREGATIONS[name] = fn
 
 
+class RollingStat:
+    """Bounded rolling sample window for components that export a
+    *derived* gauge — e.g. a workflow stage publishing its own p95 call
+    latency as ``stage.<name>.p95`` so MetricBus threshold triggers
+    (``on stage reviewer.p95 > 2``) can subscribe to a plain series
+    instead of re-aggregating rings on every push."""
+
+    def __init__(self, cap: int = 128):
+        self.cap = cap
+        self._xs: list[float] = []
+        self._idx = 0
+
+    def add(self, x: float) -> None:
+        if len(self._xs) < self.cap:
+            self._xs.append(x)
+        else:
+            self._xs[self._idx] = x
+        self._idx = (self._idx + 1) % self.cap
+
+    def pctl(self, q: float) -> float:
+        return _percentile(self._xs, q)
+
+    def mean(self) -> float:
+        return sum(self._xs) / len(self._xs) if self._xs else math.nan
+
+    def __len__(self) -> int:
+        return len(self._xs)
+
+
 def ewma(alpha: float = 0.3) -> Callable[[list[float]], float]:
     def _fn(xs: list[float]) -> float:
         acc = math.nan

@@ -242,6 +242,54 @@ class SLOGuardPolicy(Policy):
             self.tightened = False
 
 
+class StageTierPolicy(Policy):
+    """Workflow-plane tiering (Aragog-style): when a stage's p95 call
+    latency breaches, shift its calls to the smaller model tier; when
+    it stays calm, shift back up.  Acts only through the stage's
+    registered ``stage.<name>.model_tier`` knob, so the same behaviour
+    is expressible in intent as
+
+        rule slow on stage reviewer.p95 > 2 hold 3:
+            => set stage reviewer.model_tier small
+    """
+
+    name = "stage-tier"
+
+    def __init__(self, stages: list[str], slow_above: float,
+                 fast_below: Optional[float] = None,
+                 small: str = "small", large: str = "large",
+                 dwell: float = 2.0):
+        self.stages = stages
+        self.slow_above = slow_above
+        self.fast_below = (fast_below if fast_below is not None
+                           else slow_above * 0.4)
+        self.small = small
+        self.large = large
+        self.dwell = dwell               # min residency per tier (anti-flap)
+        self._moved: dict[str, float] = {}
+        self.shifts: list[tuple[float, str, str]] = []
+
+    def on_tick(self, ctx: ControlContext) -> None:
+        for s in self.stages:
+            p95 = ctx.metric(f"stage.{s}.p95", "last",
+                             default=float("nan"))
+            if p95 != p95:
+                continue
+            cur = ctx.get(f"stage.{s}", "model_tier")
+            want = cur
+            if p95 > self.slow_above and cur != self.small:
+                want = self.small
+            elif p95 < self.fast_below and cur != self.large:
+                want = self.large
+            if want == cur:
+                continue
+            if ctx.now - self._moved.get(s, -1e18) < self.dwell:
+                continue
+            ctx.set(f"stage.{s}", "model_tier", want)
+            self._moved[s] = ctx.now
+            self.shifts.append((ctx.now, s, want))
+
+
 class AutoscalePolicy(Policy):
     """Elastic-scaling hook (§4 posture): ask the runtime to add/remove
     instances when sustained load crosses thresholds.  The actual

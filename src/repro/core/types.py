@@ -49,6 +49,12 @@ class Request:
     req_id: str = field(default_factory=lambda: fresh_id("req"))
     priority: Priority = Priority.NORMAL
     arrival_time: float = 0.0
+    # workflow-plane metadata: the stage that issued the call and its
+    # propagated finish deadline (inf = none).  The scheduler orders the
+    # waiting queue EDF-within-priority over ``deadline``, so defaults
+    # leave every pre-graph call site's behaviour untouched.
+    deadline: float = float("inf")
+    stage: Optional[str] = None
     # engine-assigned
     state: RequestState = RequestState.QUEUED
     slot: int = -1

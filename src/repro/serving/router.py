@@ -4,10 +4,15 @@ Sits between a channel and a group of agent instances.  Routing order:
 
 1. an installed **request-level rule** (controller's ``ctx.route``) wins;
 2. otherwise the router's own fallback policy applies: `static` session
-   hash, `least_loaded`, or `cache_aware` — score instances by the
+   hash, `least_loaded`, `cache_aware` — score instances by the
    estimated prefix-cache hit (via the controller-visible
    ``CacheDirectory``) and break ties by load, so fan-out requests land
-   where their shared prefix is already resident.
+   where their shared prefix is already resident — or `stage_aware` —
+   Aragog-style per-stage model tiering: instances register with a
+   model-size ``tier`` label, messages carry the desired tier (stamped
+   from the issuing stage's ``model_tier`` knob), and the router keeps
+   the call on a matching-tier instance (least-loaded within the tier,
+   full least-loaded fallback when no instance of that tier exists).
 
 Session affinity matters because the tester instances hold per-session
 KV state; the controller's LoadBalancePolicy re-pins sessions and pairs
@@ -34,7 +39,8 @@ class Router(ControlSurface):
     CAPABILITIES = ("route",)
     KNOB_SPECS = (
         KnobSpec("policy", kind="str",
-                 choices=("static", "least_loaded", "cache_aware"),
+                 choices=("static", "least_loaded", "cache_aware",
+                          "stage_aware"),
                  doc="fallback routing policy when no rule matches"),
     )
 
@@ -51,16 +57,21 @@ class Router(ControlSurface):
         self.prefix_fn = prefix_fn               # Message -> prefix source
         self.instances: dict[str, Endpoint] = {}
         self._loads: dict[str, object] = {}      # name -> load() callable
+        self._tiers: dict[str, str] = {}         # name -> model-size tier
         self._session_pin: dict[str, str] = {}   # fallback stickiness
         self._held: list[Message] = []
         self._rules_seen = -1
         self.routed: dict[str, int] = {}
         self.cache_routed = 0                    # picks won on prefix score
+        self.tier_routed = 0                     # picks won on tier match
 
     # -- wiring ----------------------------------------------------------------
-    def add_instance(self, agent, load_fn=None) -> None:
+    def add_instance(self, agent, load_fn=None,
+                     tier: Optional[str] = None) -> None:
         self.instances[agent.name] = agent
         self._loads[agent.name] = load_fn or getattr(agent, "load", None)
+        if tier is not None:
+            self._tiers[agent.name] = tier
         self.routed.setdefault(agent.name, 0)
         # messages held while the fleet was empty (remove-last-then-add)
         # get their first chance at the new instance here
@@ -69,6 +80,7 @@ class Router(ControlSurface):
     def remove_instance(self, name: str) -> None:
         self.instances.pop(name, None)
         self._loads.pop(name, None)
+        self._tiers.pop(name, None)
         # stale fallback pins would re-route sessions to the dead name
         self._session_pin = {s: i for s, i in self._session_pin.items()
                              if i != name}
@@ -102,10 +114,28 @@ class Router(ControlSurface):
         self.cache_routed += 1
         return min(top, key=self._load_of)
 
+    def _tier_pick(self, names: list[str], msg: Optional[Message]):
+        """Least-loaded instance of the tier the message asks for; None
+        when the message carries no tier or no instance matches (caller
+        falls back to plain least-loaded)."""
+        want = (msg.payload or {}).get("tier") if msg is not None else None
+        if want is None:
+            return None
+        match = [n for n in names if self._tiers.get(n) == want]
+        if not match:
+            return None
+        self.tier_routed += 1
+        return min(match, key=self._load_of)
+
     def _fallback(self, session: str, msg: Optional[Message] = None) -> str:
         names = sorted(self.instances)
         if not names:
             raise RuntimeError(f"{self.name}: no instances")
+        if self.policy == "stage_aware":
+            pick = self._tier_pick(names, msg)
+            if pick is not None:
+                return pick
+            return min(names, key=self._load_of)
         if self.policy == "cache_aware":
             pick = self._cache_pick(names, msg)
             if pick is not None:

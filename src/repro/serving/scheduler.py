@@ -113,7 +113,14 @@ class Scheduler(ControlSurface):
         self._sort_waiting()
 
     def _sort_waiting(self) -> None:
-        self.waiting.sort(key=lambda r: (-int(r.priority), r.arrival_time))
+        # Priority first; within a priority class EDF over the workflow
+        # plane's edge-propagated deadlines, then longest-remaining-
+        # critical-path, then FIFO.  Requests without a graph behind
+        # them keep deadline=inf / cp=0, so the order degenerates to the
+        # original (-priority, arrival) for every pre-graph caller.
+        self.waiting.sort(key=lambda r: (
+            -int(r.priority), r.deadline,
+            -float(r.meta.get("cp_remaining", 0.0)), r.arrival_time))
 
     @property
     def queue_len(self) -> int:

@@ -123,6 +123,19 @@ class CostModel:
         bytes_ = n * BYTES_PER_PARAM + kv_read + batch * self.state_bytes()
         return self._roofline(flops, bytes_)
 
+    def call_time(self, prompt_tokens: int, new_tokens: int,
+                  context: int = 0, batch: int = 1) -> float:
+        """Estimated end-to-end time of one agent call: prefill the
+        prompt, then decode ``new_tokens`` one step each at the mean
+        context reached while generating.  The workflow graph plane uses
+        this as the per-stage cost when deriving critical-path
+        priorities and edge-propagated deadlines — an *estimate* (real
+        steps batch with co-resident requests), but the relative stage
+        weights are what the scheduler needs."""
+        t = self.prefill_time(prompt_tokens, batch=batch, context=context)
+        mean_ctx = context + prompt_tokens + new_tokens / 2.0
+        return t + new_tokens * self.decode_time(batch, mean_ctx)
+
     # -- calibration -----------------------------------------------------------
     @classmethod
     def from_dryrun(cls, cfg: ModelConfig, chips: int,

@@ -1,0 +1,212 @@
+"""Workflow graph plane: DAG structure, critical-path computation, and
+deadline propagation — including a property test that topological
+priority never inverts across an edge (skipped without hypothesis)."""
+import math
+
+import pytest
+
+from repro.agents.graph import (GraphError, GraphTask, WorkflowGraph,
+                                debate, deep_review, fig1, map_reduce)
+from repro.agents.stage import StageKind, StageSpec
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYP = True
+except ImportError:                      # pragma: no cover - env dependent
+    HAVE_HYP = False
+
+
+def unit_cost(spec, est_in):
+    """Deterministic hand-checkable cost: 1s per stage + 0.01s/out tok."""
+    if spec.kind is StageKind.TOOL:
+        return spec.tool_latency
+    return 1.0 + 0.01 * spec.out_tokens
+
+
+# ---------------------------------------------------------------------------
+# structure + validation
+# ---------------------------------------------------------------------------
+
+
+def test_construction_and_topo():
+    g = WorkflowGraph("t")
+    g.stage("a")
+    g.stage("b")
+    g.stage("c")
+    g.chain("a", "b", "c")
+    assert g.sources() == ["a"] and g.sinks() == ["c"]
+    assert g.topo_order() == ["a", "b", "c"]
+    assert g.preds("b") == ["a"] and g.succs("b") == ["c"]
+
+
+def test_validation_errors():
+    g = WorkflowGraph("bad")
+    with pytest.raises(GraphError):
+        g.validate()                     # empty
+    g.stage("a")
+    with pytest.raises(GraphError):
+        g.add_edge("a", "zzz")           # unknown stage
+    with pytest.raises(GraphError):
+        g.add_edge("a", "a")             # self-edge
+    g.stage("a2")
+    g.add_edge("a", "a2")
+    with pytest.raises(GraphError):
+        g.add_edge("a", "a2")            # duplicate edge
+    with pytest.raises(GraphError):
+        g.stage("a")                     # duplicate stage
+
+    cyc = WorkflowGraph("cycle")
+    cyc.stage("x")
+    cyc.stage("y")
+    cyc.add_edge("x", "y")
+    cyc.add_edge("y", "x")
+    with pytest.raises(GraphError):
+        cyc.validate()
+
+    br = WorkflowGraph("branch1")
+    br.stage("b", kind=StageKind.BRANCH)
+    br.stage("only")
+    br.add_edge("b", "only")
+    with pytest.raises(GraphError):
+        br.validate()                    # BRANCH needs >= 2 successors
+
+
+def test_validate_rejects_branch_starved_fanin():
+    """branch -> arm_a | arm_b -> merge: only one arm runs per task, so
+    a merge that waits for ALL inputs can never fire — validate() must
+    reject it unless join_k or join_timeout provides an escape."""
+    def build(join_kw):
+        g = WorkflowGraph("ifelse")
+        g.stage("verdict", kind=StageKind.BRANCH)
+        g.stage("arm_a")
+        g.stage("arm_b")
+        g.stage("merge", kind=StageKind.JOIN, **join_kw)
+        g.add_edge("verdict", "arm_a")
+        g.add_edge("verdict", "arm_b")
+        g.add_edge("arm_a", "merge")
+        g.add_edge("arm_b", "merge")
+        return g
+
+    with pytest.raises(GraphError, match="may never fire"):
+        build({}).validate()
+    build({"join_k": 1}).validate()            # escapes are accepted
+    build({"join_timeout": 1.0}).validate()
+
+
+def test_prebuilt_graphs_validate():
+    for g in (fig1(), map_reduce(width=3), deep_review(depth=2), debate()):
+        g.validate()
+    assert fig1().template == "fig1"
+    assert debate().stages["factcheck"].kind is StageKind.TOOL
+
+
+# ---------------------------------------------------------------------------
+# critical path: hand-built DAGs with known longest paths
+# ---------------------------------------------------------------------------
+
+
+def test_critical_path_chain():
+    g = WorkflowGraph("chain")
+    for n in ("a", "b", "c"):
+        g.stage(n, out_tokens=0)        # unit_cost -> exactly 1.0 each
+    g.chain("a", "b", "c")
+    cp = g.critical_path(unit_cost)
+    assert cp == {"a": 3.0, "b": 2.0, "c": 1.0}
+    assert g.cp_total(cp) == 3.0
+
+
+def test_critical_path_diamond_takes_heavier_arm():
+    #      /-- fat (out 100) --\
+    #  src                      sink     longest path = src+fat+sink
+    #      \-- thin (out 0) ---/
+    g = WorkflowGraph("diamond")
+    g.stage("src", out_tokens=0)
+    g.stage("fat", out_tokens=100)      # cost 2.0
+    g.stage("thin", out_tokens=0)       # cost 1.0
+    g.stage("sink", kind=StageKind.JOIN, out_tokens=0)
+    g.add_edge("src", "fat")
+    g.add_edge("src", "thin")
+    g.add_edge("fat", "sink")
+    g.add_edge("thin", "sink")
+    cp = g.critical_path(unit_cost)
+    assert cp["sink"] == 1.0
+    assert cp["fat"] == 3.0 and cp["thin"] == 2.0
+    assert cp["src"] == pytest.approx(1.0 + 3.0)    # via the fat arm
+
+
+def test_critical_path_join_and_fanout_inputs():
+    """est_inputs: a join sees the sum of its predecessors' outputs; a
+    fan-out multiplies its per-call output by its width."""
+    g = map_reduce(width=5, out_tokens=10)
+    est = g.est_inputs(prompt_tokens=64)
+    assert est["planner"] == 64.0
+    assert est["map"] == float(g.stages["planner"].out_tokens)
+    assert est["reduce"] == 5 * 10.0    # width x out_tokens
+    # tool stages pass tokens through
+    d = debate()
+    est_d = d.est_inputs()
+    assert est_d["judge"] == est_d["factcheck"]
+
+
+def test_deadline_propagation_monotone_along_edges():
+    """deadline(s) = submit + slack * (cp_total - cp_after(s)) must be
+    non-decreasing along every edge; cp_remaining strictly decreases."""
+    for g in (map_reduce(width=4), deep_review(depth=5), debate()):
+        cp = g.critical_path(unit_cost)
+        est = g.est_inputs()
+        total = g.cp_total(cp)
+        through = {n: total - (cp[n] - unit_cost(g.stages[n], est[n]))
+                   for n in g.stages}
+        for (u, v) in g.edges:
+            assert cp[u] > cp[v], (g.name, u, v)
+            assert through[u] <= through[v] + 1e-9, (g.name, u, v)
+
+
+def test_graph_task_defaults():
+    t = GraphTask(session="s")
+    assert t.deadline == math.inf and t.finished_at == 0.0
+    assert t.task_id.startswith("wtask")
+
+
+# ---------------------------------------------------------------------------
+# property: topological priority never inverts across an edge
+# ---------------------------------------------------------------------------
+
+
+if HAVE_HYP:
+
+    @st.composite
+    def random_dags(draw):
+        n = draw(st.integers(min_value=2, max_value=8))
+        g = WorkflowGraph("rand")
+        for i in range(n):
+            g.stage(f"s{i}",
+                    out_tokens=draw(st.integers(min_value=0, max_value=200)))
+        # edges only i -> j with i < j: acyclic by construction
+        for i in range(n):
+            for j in range(i + 1, n):
+                if draw(st.booleans()):
+                    g.add_edge(f"s{i}", f"s{j}")
+        return g
+
+    @settings(max_examples=60, deadline=None)
+    @given(random_dags())
+    def test_priority_never_inverts_across_edges(g):
+        cp = g.critical_path(unit_cost)
+        est = g.est_inputs()
+        total = g.cp_total(cp)
+        for (u, v) in g.edges:
+            # longest-remaining-path priority: upstream of an edge always
+            # carries strictly more remaining work ...
+            assert cp[u] > cp[v]
+            # ... and its propagated finish-deadline is never later
+            du = total - (cp[u] - unit_cost(g.stages[u], est[u]))
+            dv = total - (cp[v] - unit_cost(g.stages[v], est[v]))
+            assert du <= dv + 1e-9
+
+else:                                    # pragma: no cover - env dependent
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_priority_never_inverts_across_edges():
+        pass

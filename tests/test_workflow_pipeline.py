@@ -1,0 +1,249 @@
+"""Integration: workflow graphs compiled into serving topologies —
+stage runtime semantics (fan-out, join, branch, tool), critical-path
+deadlines on real requests, stage-aware tier routing, and the stage
+knob/intent surface."""
+import math
+
+import pytest
+
+from repro.agents import (AgenticPipeline, GraphBurst, GraphTask,
+                          PipelineConfig, StageKind, TierSpec,
+                          WorkflowConfig, WorkflowGraph, WorkflowPipeline,
+                          debate, deep_review, fig1, map_reduce)
+from repro.core import compile_intent
+
+SMALL_POOL = {"large": TierSpec("agent-7b", chips=4, replicas=2, slots=16),
+              "small": TierSpec("agent-1b", chips=1, replicas=2, slots=16)}
+
+
+def build(graph, **kw):
+    kw.setdefault("tiers", dict(SMALL_POOL))
+    return AgenticPipeline.build(graph, WorkflowConfig(**kw))
+
+
+def run_tasks(wp, n=4, until=120.0):
+    burst = GraphBurst(wp, n)
+    burst.start()
+    wp.run(until=until)
+    return burst
+
+
+# ---------------------------------------------------------------------------
+# build() dispatch + compilation
+# ---------------------------------------------------------------------------
+
+
+def test_build_dispatches_fig1_to_classic_pipeline():
+    p = AgenticPipeline.build(fig1())
+    assert isinstance(p, AgenticPipeline)
+    assert p.graph.template == "fig1"
+    assert p.controller.graph is p.graph
+    with pytest.raises(TypeError):
+        AgenticPipeline.build(fig1(), WorkflowConfig())
+    with pytest.raises(TypeError):
+        AgenticPipeline.build(map_reduce(), PipelineConfig())
+
+
+def test_compiled_topology_registers_everything():
+    wp = build(map_reduce(width=3))
+    names = set(wp.registry.names())
+    # stage controllables, channels, pool engines, router
+    assert {"stage.planner", "stage.map", "stage.reduce"} <= names
+    assert {"planner->map", "map->reduce"} <= names
+    assert "workflow-router" in names and "wf-large-0" in names
+    card = wp.registry.card("stage.map")
+    assert card.kind == "stage"
+    assert set(card.knobs) == {"model_tier", "deadline_slack",
+                               "join_timeout", "width"}
+
+
+# ---------------------------------------------------------------------------
+# stage runtime semantics
+# ---------------------------------------------------------------------------
+
+
+def test_all_prebuilt_graphs_complete_tasks():
+    for g in (map_reduce(width=4), deep_review(depth=3), debate()):
+        wp = build(g)
+        run_tasks(wp, n=5)
+        assert len(wp.done) == 5, g.name
+        assert all(t.finished_at > t.submitted_at for t in wp.done)
+
+
+def test_fanout_issues_width_calls_and_join_waits():
+    wp = build(map_reduce(width=6))
+    run_tasks(wp, n=2)
+    assert wp.stages["map"].calls == 2 * 6
+    assert wp.stages["reduce"].calls == 2      # one joined call per task
+
+
+def test_branch_routes_to_exactly_one_successor():
+    g = debate()
+    g.stages["verdict"].branch_fn = lambda tid: 0   # always "accept"
+    wp = build(g)
+    run_tasks(wp, n=4)
+    assert len(wp.done) == 4
+    assert wp.stages["accept"].calls == 4
+    assert wp.stages["revise"].calls == 0
+
+
+def test_tool_stage_runs_through_tool_agent():
+    wp = build(debate())
+    run_tasks(wp, n=3)
+    assert wp.stages["factcheck"].tool.calls == 3
+    assert wp.registry.get("factcheck.tool").kind == "tool"
+
+
+def test_join_timeout_releases_partial_fanin():
+    """A join whose second input is very slow dispatches after
+    join_timeout with what arrived — and the straggler's late arrival
+    doesn't wedge the task's completion refcount."""
+    g = WorkflowGraph("straggle")
+    g.stage("fast", out_tokens=8)
+    g.stage("slow", out_tokens=2048)     # decodes far longer than fast
+    g.stage("join", kind=StageKind.JOIN, join_timeout=0.5, out_tokens=8)
+    g.add_edge("fast", "join")
+    g.add_edge("slow", "join")
+    wp = build(g)
+    wp.submit(GraphTask(session="s", prompt_tokens=32))
+    wp.run(until=300.0)
+    assert len(wp.done) == 1
+    assert not wp._pending                     # refcount fully drained
+    assert wp.stages["join"].calls == 1
+
+
+def test_join_k_fires_on_first_input():
+    g = WorkflowGraph("k1")
+    g.stage("a", out_tokens=8)
+    g.stage("b", out_tokens=8)
+    g.stage("j", kind=StageKind.JOIN, join_k=1, out_tokens=8)
+    g.add_edge("a", "j")
+    g.add_edge("b", "j")
+    wp = build(g)
+    run_tasks(wp, n=3)
+    assert len(wp.done) == 3
+    assert wp.stages["j"].calls == 3           # ran once per task, not twice
+
+
+# ---------------------------------------------------------------------------
+# critical-path scheduling
+# ---------------------------------------------------------------------------
+
+
+def test_requests_carry_propagated_deadlines():
+    seen = {}
+    wp = build(deep_review(depth=2))
+    orig = wp.route_call
+
+    def spy(msg):
+        req = msg.payload["request"]
+        seen.setdefault(req.stage, req.deadline)
+        orig(msg)
+
+    wp.route_call = spy
+    run_tasks(wp, n=1)
+    assert len(wp.done) == 1
+    # deadlines are finite and monotone along the chain
+    order = ["author", "reviewer-0", "reviewer-1", "editor"]
+    assert all(math.isfinite(seen[s]) for s in order)
+    assert all(seen[a] <= seen[b] for a, b in zip(order, order[1:]))
+
+
+def test_critical_path_off_leaves_defaults():
+    wp = build(map_reduce(width=2), critical_path=False)
+    reqs = []
+    orig = wp.route_call
+    wp.route_call = lambda m: (reqs.append(m.payload["request"]), orig(m))
+    run_tasks(wp, n=2)
+    assert all(r.deadline == math.inf for r in reqs)
+    assert all(r.meta.get("cp_remaining", 0.0) == 0.0 for r in reqs)
+
+
+def test_scheduler_orders_edf_within_priority():
+    from repro.core.types import Request
+    from repro.serving.scheduler import Scheduler, SchedulerConfig
+    s = Scheduler(SchedulerConfig(max_slots=1))
+    late = Request(prompt_len=8, max_new_tokens=1, deadline=9.0)
+    soon = Request(prompt_len=8, max_new_tokens=1, deadline=1.0)
+    nodl = Request(prompt_len=8, max_new_tokens=1)
+    for r in (nodl, late, soon):
+        s.submit(r)
+    assert s.waiting == [soon, late, nodl]
+    # cp_remaining breaks deadline ties toward the longest remaining path
+    a = Request(prompt_len=8, max_new_tokens=1, deadline=5.0)
+    b = Request(prompt_len=8, max_new_tokens=1, deadline=5.0)
+    b.meta["cp_remaining"] = 10.0
+    s2 = Scheduler(SchedulerConfig(max_slots=1))
+    s2.submit(a)
+    s2.submit(b)
+    assert s2.waiting == [b, a]
+
+
+# ---------------------------------------------------------------------------
+# stage-aware tiering + the knob/intent surface
+# ---------------------------------------------------------------------------
+
+
+def test_stage_aware_routing_honors_model_tier_knob():
+    wp = build(map_reduce(width=4, worker_tier="small"))
+    run_tasks(wp, n=4)
+    small = {w.name for w in wp.workers if w.tier == "small"}
+    small_calls = sum(wp.router.routed[n] for n in small)
+    assert wp.router.tier_routed > 0
+    assert small_calls >= 4 * 4                # every map call landed small
+    # re-tier through the registry: planner calls move tiers too
+    wp2 = build(map_reduce(width=2))
+    wp2.registry.set("stage.planner", "model_tier", "small")
+    assert wp2.registry.get_param("stage.planner", "model_tier") == "small"
+    with pytest.raises(ValueError):
+        wp2.registry.set("stage.planner", "model_tier", "gigantic")
+
+
+def test_retier_shifts_critical_path_estimates():
+    wp = build(deep_review(depth=3))
+    before = wp._cp_total
+    for i in range(3):
+        wp.registry.set(f"stage.reviewer-{i}", "model_tier", "small")
+    assert wp._cp_total != before              # estimates recomputed
+
+
+def test_intent_stage_selectors_end_to_end():
+    wp = build(map_reduce(width=6))
+    intent = compile_intent("""
+objective: minimize p95(workflow.task_latency)
+rule slow on stage map.p95 > 0.01 hold 1:
+    => set stage map.model_tier small
+rule unused: when p95(stage map.latency, 5.0) > 1e9
+    => reset stage map.model_tier
+""")
+    wp.controller.install(intent)
+    run_tasks(wp, n=6)
+    assert intent.stats()["slow"] >= 1
+    assert wp.registry.get_param("stage.map", "model_tier") == "small"
+    sets = [a for a in wp.controller.action_log("set")
+            if a.target == "stage.map"]
+    assert sets and "model_tier=small" in sets[0].detail
+
+
+def test_stage_tier_policy_downshifts_on_breach():
+    from repro.core.policies import StageTierPolicy
+    wp = build(map_reduce(width=6))
+    pol = StageTierPolicy(["map"], slow_above=0.01, dwell=0.0)
+    wp.controller.install(pol)
+    run_tasks(wp, n=6)
+    assert any(tier == "small" for _, _, tier in pol.shifts)
+    assert wp.registry.get_param("stage.map", "model_tier") == "small"
+
+
+def test_fig1_requests_are_stage_stamped():
+    from repro.agents import TaskSpec
+    p = AgenticPipeline(PipelineConfig())
+    p.submit(TaskSpec(session="s", n_functions=2, func_tokens=16,
+                      test_tokens=8))
+    p.run(until=15.0)
+    assert len(p.done) == 1
+    assert p.done[0].finished_at > p.done[0].submitted_at
+    dev = p.developer.engine.finished
+    tst = p.testers[0].engine.finished
+    assert dev and all(r.stage == "developer" for r in dev)
+    assert tst and all(r.stage == "tester" for r in tst)

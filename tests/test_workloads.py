@@ -1,0 +1,156 @@
+"""Direct coverage for the workload generators (agents/workloads.py):
+closed-loop client lifecycle, phased ramp, open-loop arrivals, and the
+workflow burst driver."""
+import random
+
+from repro.agents import AgenticPipeline, PipelineConfig
+from repro.agents.workloads import (ClosedLoopClient, GraphBurst,
+                                    OpenLoopSource, Phase, PhasedLoad,
+                                    WorkloadConfig, launch_clients)
+
+
+def small_pipeline(**kw):
+    kw.setdefault("n_testers", 1)
+    return AgenticPipeline(PipelineConfig(**kw))
+
+
+def quick_cfg(**kw):
+    kw.setdefault("n_functions", 2)
+    kw.setdefault("func_tokens", 16)
+    kw.setdefault("test_tokens", 8)
+    kw.setdefault("think_time", 0.2)
+    return WorkloadConfig(**kw)
+
+
+# ---------------------------------------------------------------------------
+# ClosedLoopClient
+# ---------------------------------------------------------------------------
+
+
+def test_closed_loop_start_stop_lifecycle():
+    p = small_pipeline()
+    c = ClosedLoopClient(p, "sess", quick_cfg(), random.Random(0))
+    assert not c.active and c._timer is None
+    c.start(delay=0.1)
+    assert c.active and c._timer is not None
+    p.run(until=10.0)
+    assert c.submitted >= 1
+    c.stop()
+    assert not c.active
+
+
+def test_stop_cancels_pending_timer():
+    """stop() must cancel the in-flight think-timer, not just flip the
+    flag — a stopped client leaves nothing live on the event loop."""
+    p = small_pipeline()
+    c = ClosedLoopClient(p, "sess", quick_cfg(think_time=5.0),
+                         random.Random(0))
+    c.start(delay=3.0)                 # pending start-timer, not yet fired
+    ev = c._timer
+    assert ev is not None and not ev.cancelled
+    c.stop()
+    assert c._timer is None and ev.cancelled
+    p.run(until=30.0)
+    assert c.submitted == 0            # the cancelled timer never fired
+
+
+def test_stop_with_task_in_flight_does_not_rearm():
+    """A client stopped while its task is still in flight must stay
+    quiescent when the completion lands — no stray think-timer that a
+    later start() could double up with."""
+    p = small_pipeline()
+    # default-size tasks take ~1s+; client start delay is <= 0.101s,
+    # so at t=0.3 exactly one task is submitted and still in flight
+    cs = launch_clients(p, WorkloadConfig(n_clients=1, think_time=0.1))
+    p.run(until=0.3)
+    c = cs[0]
+    assert c.submitted >= 1 and c.completed == 0
+    c.stop()
+    p.run(until=60.0)                  # in-flight task completes
+    assert c.completed >= 1
+    assert c._timer is None            # _on_done did not re-arm
+    assert c.submitted == 1            # and no further submissions
+
+
+def test_closed_loop_respects_tasks_per_client():
+    p = small_pipeline()
+    cs = launch_clients(p, quick_cfg(n_clients=2, tasks_per_client=3))
+    p.run(until=120.0)
+    assert all(c.submitted == 3 for c in cs)
+    assert all(c.completed == 3 for c in cs)
+    assert len(p.done) == 6
+
+
+def test_closed_loop_stops_at_stop_at():
+    p = small_pipeline()
+    cs = launch_clients(p, quick_cfg(), stop_at=5.0)
+    p.run(until=40.0)
+    assert all(c.submitted >= 1 for c in cs)
+    # nothing was submitted after the cutoff
+    assert all(t.submitted_at < 5.0 for t in p.done)
+
+
+# ---------------------------------------------------------------------------
+# PhasedLoad
+# ---------------------------------------------------------------------------
+
+
+def test_phased_load_ramps_clients_up_and_down():
+    p = small_pipeline()
+    load = PhasedLoad(p, quick_cfg(),
+                      [Phase(4.0, 1), Phase(4.0, 4), Phase(4.0, 1)])
+    load.start()
+    active_at = {}
+    for t in (2.0, 6.0, 10.0):
+        p.loop.call_at(t, lambda t=t: active_at.__setitem__(
+            t, sum(1 for c in load.clients if c.active)))
+    p.run(until=13.0)
+    assert active_at[2.0] == 1
+    assert active_at[6.0] == 4
+    assert active_at[10.0] == 1        # ramp back down deactivates 3
+    assert load.boundaries == [0.0, 4.0, 8.0]
+    assert len(p.done) > 0
+
+
+def test_phased_load_stopped_clients_leave_no_timers():
+    p = small_pipeline()
+    load = PhasedLoad(p, quick_cfg(),
+                      [Phase(3.0, 3), Phase(3.0, 1)])
+    load.start()
+    p.run(until=6.5)
+    stopped = [c for c in load.clients if not c.active]
+    assert stopped
+    assert all(c._timer is None for c in stopped)
+
+
+# ---------------------------------------------------------------------------
+# OpenLoopSource
+# ---------------------------------------------------------------------------
+
+
+def test_open_loop_source_poisson_arrivals_bounded_by_t_end():
+    p = small_pipeline()
+    src = OpenLoopSource(p, ["a", "b"], rate_per_session=2.0,
+                         cfg=quick_cfg(), t_end=6.0, seed=1)
+    src.start()
+    p.run(until=60.0)
+    assert src.submitted > 0
+    assert len(p.done) == src.submitted          # open loop fully drains
+    assert all(t.submitted_at < 6.0 for t in p.done)
+
+
+# ---------------------------------------------------------------------------
+# GraphBurst
+# ---------------------------------------------------------------------------
+
+
+def test_graph_burst_submits_n_tasks():
+    from repro.agents import map_reduce
+    wp = AgenticPipeline.build(map_reduce(width=2))
+    burst = GraphBurst(wp, n_tasks=5, stagger=0.1, seed=3)
+    burst.start()
+    wp.run(until=120.0)
+    assert len(burst.tasks) == 5
+    assert len(wp.done) == 5
+    stamps = sorted(t.submitted_at for t in wp.done)
+    assert stamps[0] < stamps[-1]                # staggered, not a spike
