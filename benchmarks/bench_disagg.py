@@ -1,0 +1,270 @@
+"""Disaggregation plane benchmark: does making *engine role* a runtime
+knob pay under bursty agentic traffic?
+
+Three fleets at an EQUAL chip budget (4 engines x 4 chips), three
+traffic shapes, measuring the two numbers the disaggregation literature
+argues about:
+
+* **p95 TTFT** — fan-out prefill bursts from the workflow plane queue
+  behind long-lived decode sequences on unified engines (slots held by
+  decoders block admission; prefill steps and decode steps contend for
+  the same step loop);
+* **decode throughput** — tokens/s the fleet sustains for the
+  latency-sensitive decode streams while bursts land.
+
+Arms:
+
+* ``unified``       — every engine runs the classic prefill+decode loop
+  (the pre-disagg posture); routing by shallowest prefill queue.
+* ``static_disagg`` — a fixed 1-prefill / 3-decode split wired through
+  the DisaggPool's chunk-streamed KV handoff fabric.
+* ``adaptive_role`` — same starting split plus a ``RoleBalancerPolicy``
+  flipping roles at runtime from the fleet's ``cluster.*`` gauges (the
+  software-defined arm: role assignment follows queue pressure).
+
+Acceptance (ISSUE 4): adaptive_role beats unified on p95 TTFT by >=15%
+on >=2 of the 3 shapes AND keeps decode throughput within 5% of
+unified on every shape.
+
+    PYTHONPATH=src python benchmarks/bench_disagg.py [--smoke]
+"""
+from __future__ import annotations
+
+import random
+import sys
+from pathlib import Path
+
+_ROOT = Path(__file__).resolve().parent.parent
+for p in (str(_ROOT), str(_ROOT / "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+from benchmarks.common import Report, pctl  # noqa: E402
+from repro.configs import get_config  # noqa: E402
+from repro.core.controller import Controller  # noqa: E402
+from repro.core.metrics import (CentralPoller, Collector, MetricBus,  # noqa: E402
+                                StateStore)
+from repro.core.policies import RoleBalancerPolicy  # noqa: E402
+from repro.core.registry import Registry  # noqa: E402
+from repro.core.types import Priority, Request  # noqa: E402
+from repro.serving.disagg import DisaggPool  # noqa: E402
+from repro.serving.engine_sim import SimEngine  # noqa: E402
+from repro.serving.kv_transfer import (KVTransferManager,  # noqa: E402
+                                       SessionDirectory)
+from repro.serving.scheduler import SchedulerConfig  # noqa: E402
+from repro.sim.clock import EventLoop  # noqa: E402
+from repro.sim.costmodel import CostModel  # noqa: E402
+
+N_ENGINES = 4
+CHIPS_PER_ENGINE = 4                  # 16-chip budget per arm
+PHYSICAL_SLOTS = 16                   # hardware batch ceiling per engine
+# Role-coupled batch shape: a unified (prefill-capable) engine reserves
+# activation memory for 2048-token prefill chunks, capping its decode
+# batch; a decode-only engine spends that headroom on extra decode
+# slots.  The RoleBalancerPolicy co-flips max_num_seqs with the role,
+# so the fleet's decode capacity follows the partition at runtime.
+SLOT_PROFILE = {"unified": 12, "prefill": PHYSICAL_SLOTS,
+                "decode": PHYSICAL_SLOTS}
+ROLE_SPLITS = {
+    "unified": ("unified",) * N_ENGINES,
+    "static_disagg": ("prefill", "decode", "decode", "decode"),
+    "adaptive_role": ("prefill", "decode", "decode", "decode"),
+}
+
+
+class _Fleet:
+    """One arm: engines + DisaggPool + control plane."""
+
+    def __init__(self, roles, adaptive: bool):
+        self.loop = EventLoop()
+        self.bus = MetricBus()
+        self.collector = Collector("bench", bus=self.bus)
+        self.store = StateStore()
+        self.poller = CentralPoller(self.store)
+        self.poller.attach(self.collector)
+        self.registry = Registry()
+        self.controller = Controller(self.loop, self.registry, self.poller,
+                                     interval=0.05, bus=self.bus)
+        cm = CostModel(get_config("agent-7b"), chips=CHIPS_PER_ENGINE)
+        self.engines = []
+        for i, role in enumerate(roles):
+            eng = SimEngine(
+                self.loop, cm,
+                SchedulerConfig(max_slots=PHYSICAL_SLOTS, num_pages=4096,
+                                max_context=4096, max_batch_tokens=2048,
+                                prefill_chunk=512, role=role),
+                name=f"e{i}", collector=self.collector)
+            eng.set_param("max_num_seqs", SLOT_PROFILE[role])
+            self.engines.append(eng)
+            self.registry.register(eng)
+        directory = SessionDirectory()
+        kvx = KVTransferManager(self.loop, directory,
+                                bytes_fn=cm.kv_transfer_bytes,
+                                collector=self.collector)
+        self.pool = DisaggPool(self.loop, self.engines, kvx,
+                               collector=self.collector)
+        if adaptive:
+            self.controller.install(RoleBalancerPolicy(
+                [e.name for e in self.engines],
+                pressure_hi=1.0, pressure_lo=0.1,
+                min_prefill=1, min_decode=1, dwell=1.25,
+                release_dwell=0.25, window=1.0,
+                slot_profile=SLOT_PROFILE))
+        self.reqs: list[Request] = []
+
+    def submit(self, prompt: int, gen: int, session: str,
+               priority: Priority = Priority.NORMAL) -> Request:
+        r = Request(prompt_len=prompt, max_new_tokens=gen,
+                    priority=priority)
+        self.reqs.append(r)
+        self.pool.submit(r, session=session)
+        return r
+
+
+class _DecodeSession:
+    """Closed-loop chat session: long decode streams that keep slots
+    occupied (the latency-sensitive traffic bursts interfere with)."""
+
+    def __init__(self, fleet: _Fleet, name: str, prompt: int, gen: int,
+                 think: float, rng: random.Random, stop_at: float):
+        self.f = fleet
+        self.name = name
+        self.prompt, self.gen = prompt, gen
+        self.think, self.rng, self.stop_at = think, rng, stop_at
+
+    def start(self, delay: float) -> None:
+        self.f.loop.call_after(delay, self._fire)
+
+    def _fire(self) -> None:
+        if self.f.loop.now() >= self.stop_at:
+            return
+        # interactive decode streams outrank background fan-out bursts
+        # (same priority split in every arm)
+        r = self.f.submit(self.prompt, self.gen, self.name,
+                          priority=Priority.HIGH)
+        r.meta["on_done"] = self._done
+
+    def _done(self) -> None:
+        self.f.loop.call_after(
+            self.think * (1 + self.rng.uniform(-0.3, 0.3)), self._fire)
+
+
+def _drive(fleet: _Fleet, shape: str, horizon: float, smoke: bool) -> None:
+    rng = random.Random(0)
+    n_sessions = 52 if smoke else 56
+    chat = dict(prompt=128, gen=224, think=0.05)
+    burst_every, burst_k = 2.0, (20 if smoke else 24)
+
+    def dispatch_done(req: Request, t: float) -> None:
+        cb = req.meta.get("on_done")
+        if cb is not None:
+            cb()
+    fleet.pool.on_finish = dispatch_done
+
+    def start_sessions(n, stop_at=horizon):
+        for i in range(n):
+            s = _DecodeSession(fleet, f"chat-{i}", chat["prompt"],
+                               chat["gen"], chat["think"], rng, stop_at)
+            s.start(delay=rng.uniform(0, 0.5))
+
+    def burst(k, prompt=768, gen=8):
+        for i in range(k):
+            fleet.submit(prompt, gen, f"burst-{fleet.loop.now():.1f}-{i}")
+
+    if shape == "bursty_fanout":
+        # steady chat floor + periodic wide fan-out prefill bursts
+        start_sessions(n_sessions)
+        t = 1.0
+        while t < horizon:
+            fleet.loop.call_at(t, lambda k=burst_k: burst(k))
+            t += burst_every
+    elif shape == "steady_mix":
+        # open-loop Poisson mix: mostly prefill-heavy agentic calls over
+        # a decode floor — no bursts, pure sustained contention
+        start_sessions(int(n_sessions * 0.7))
+        t, rate = 0.5, (10.0 if smoke else 16.0)
+        while t < horizon:
+            fleet.loop.call_at(t, lambda: burst(1, prompt=1024, gen=8))
+            t += rng.expovariate(rate)
+    elif shape == "phase_shift":
+        # prefill-heavy first half, decode-heavy second half: the shape
+        # static splits cannot be right for on both sides
+        t = 0.5
+        while t < horizon * 0.5:
+            fleet.loop.call_at(t, lambda k=burst_k: burst(k))
+            t += burst_every * 0.75
+        fleet.loop.call_at(horizon * 0.45,
+                           lambda: start_sessions(n_sessions))
+    else:
+        raise ValueError(shape)
+
+
+def run_arm(arm: str, shape: str, smoke: bool) -> dict:
+    horizon = 10.0 if smoke else 20.0
+    fleet = _Fleet(ROLE_SPLITS[arm], adaptive=(arm == "adaptive_role"))
+    _drive(fleet, shape, horizon, smoke)
+    fleet.controller.start()
+    fleet.loop.run_until(horizon)
+    now = fleet.loop.now()
+    ttfts = []
+    for r in fleet.reqs:
+        if r.first_token_time is not None:
+            ttfts.append(r.first_token_time - r.arrival_time)
+        else:
+            ttfts.append(now - r.arrival_time)   # censored: still waiting
+    decode_tokens = sum(e.tokens_generated for e in fleet.engines)
+    return {
+        "p95_ttft": pctl(ttfts, 0.95),
+        "mean_ttft": sum(ttfts) / max(len(ttfts), 1),
+        "decode_tput": decode_tokens / horizon,
+        "requests": len(fleet.reqs),
+        "handoffs": fleet.pool.handoffs,
+        "migrations": fleet.pool.migrations,
+        "role_flips": sum(len(p.flips) for p in fleet.controller.policies
+                          if isinstance(p, RoleBalancerPolicy)),
+    }
+
+
+def main(smoke: bool = False):
+    report = Report("disaggregation plane: unified vs static-disagg vs "
+                    "adaptive-role (equal 16-chip budget)")
+    shapes = ("bursty_fanout", "steady_mix", "phase_shift")
+    ttft_wins, tput_ok = [], []
+    for shape in shapes:
+        res = {arm: run_arm(arm, shape, smoke) for arm in ROLE_SPLITS}
+        base = res["unified"]
+        for arm in ROLE_SPLITS:
+            r = res[arm]
+            report.add(
+                f"{shape}/{arm}",
+                p95_ttft_s=round(r["p95_ttft"], 4),
+                mean_ttft_s=round(r["mean_ttft"], 4),
+                decode_tok_s=round(r["decode_tput"], 1),
+                requests=r["requests"],
+                handoffs=r["handoffs"],
+                role_flips=r["role_flips"],
+                ttft_gain_pct=round(
+                    100 * (1 - r["p95_ttft"] / base["p95_ttft"]), 1),
+                tput_vs_unified_pct=round(
+                    100 * (r["decode_tput"] / base["decode_tput"] - 1), 1))
+        ad = res["adaptive_role"]
+        gain = 1 - ad["p95_ttft"] / base["p95_ttft"]
+        keeps = ad["decode_tput"] >= 0.95 * base["decode_tput"]
+        ttft_wins.append((shape, gain))
+        tput_ok.append((shape, keeps))
+    passing = [s for s, g in ttft_wins if g >= 0.15]
+    report.note("adaptive p95-TTFT gain vs unified: "
+                + ", ".join(f"{s}={g*100:.1f}%" for s, g in ttft_wins))
+    report.note("decode throughput within 5% of unified: "
+                + ", ".join(f"{s}={'yes' if k else 'NO'}"
+                            for s, k in tput_ok))
+    ok = len(passing) >= 2 and all(k for _, k in tput_ok)
+    report.note(f"acceptance (>=15% p95-TTFT on >=2/3 shapes, decode "
+                f"tput within 5%): {'PASS' if ok else 'FAIL'} "
+                f"({len(passing)}/3 TTFT: {passing})")
+    return report
+
+
+if __name__ == "__main__":
+    rep = main(smoke="--smoke" in sys.argv)
+    print(rep.render())

@@ -1,7 +1,6 @@
 """Shared benchmark utilities: workload builders + reporting."""
 from __future__ import annotations
 
-import statistics
 from dataclasses import dataclass, field
 
 

@@ -21,8 +21,7 @@ from typing import Callable, Optional
 
 from repro.core.dataplane import Channel
 from repro.core.knobs import ControlSurface, KnobSpec
-from repro.core.types import (Message, Priority, Request, RequestState,
-                              fresh_id)
+from repro.core.types import Message, Priority, Request
 from repro.serving.engine_base import EngineCore
 from repro.serving.kv_transfer import KVTransferManager, SessionDirectory
 from repro.sim.clock import EventLoop

@@ -31,7 +31,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Callable, Optional
+from typing import Callable
 
 from repro.agents.stage import StageKind, StageSpec
 from repro.core.types import Priority, fresh_id

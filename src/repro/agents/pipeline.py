@@ -39,6 +39,7 @@ from repro.core.dataplane import Channel
 from repro.core.metrics import CentralPoller, Collector, MetricBus, StateStore
 from repro.core.registry import Registry
 from repro.core.types import Granularity, Priority, fresh_id
+from repro.serving.disagg import DisaggPool
 from repro.serving.engine_sim import SimEngine
 from repro.serving.kv_transfer import KVTransferManager, SessionDirectory
 from repro.serving.prefix_cache import CacheDirectory, PrefixCache
@@ -301,6 +302,12 @@ class TierSpec:
     chips: int = 4                       # TP degree per instance
     replicas: int = 2                    # instances of this tier
     slots: int = 16                      # continuous-batching slots
+    # disaggregation plane: per-replica engine roles, cycled over the
+    # replicas (e.g. ("prefill", "decode", "decode")).  Any non-unified
+    # role makes the tier a role-typed pool: a DisaggPool wires the
+    # prefill→decode handoff fabric over the tier's engines, and the
+    # controller can re-partition it at runtime through the role knob.
+    roles: tuple = ()
 
 
 @dataclass
@@ -323,6 +330,9 @@ class WorkflowConfig:
     msg_bandwidth: float = 1.25e9
     msg_proc_time: float = 1.0e-3
     controller_interval: float = 0.05
+    kv_bandwidth: float = 12.5e9         # disagg handoff interconnect
+    adaptive_roles: bool = False         # install a RoleBalancerPolicy
+                                         # per role-typed tier
 
 
 class WorkflowPipeline(ServingFabric):
@@ -345,21 +355,51 @@ class WorkflowPipeline(ServingFabric):
                              policy=cfg.router_policy,
                              collector=self.collector)
         self.workers: list[EngineWorker] = []
+        tier_engines: dict[str, list[SimEngine]] = {}
         for tier, ts in cfg.tiers.items():
             for i in range(ts.replicas):
+                role = ts.roles[i % len(ts.roles)] if ts.roles else "unified"
                 eng = SimEngine(
                     self.loop, self.costmodels[tier],
                     SchedulerConfig(max_slots=ts.slots,
                                     num_pages=cfg.num_pages,
                                     max_context=cfg.max_context,
-                                    page_size=cfg.page_size),
+                                    page_size=cfg.page_size,
+                                    role=role),
                     name=f"wf-{tier}-{i}", collector=self.collector)
                 w = EngineWorker(eng, tier)
                 self.workers.append(w)
-                self.router.add_instance(w, tier=tier)
+                self.router.add_instance(w, tier=tier, engine=eng)
                 self.registry.register(eng)
+                tier_engines.setdefault(tier, []).append(eng)
         self.registry.register(self.router)
         self.router.rules = self.controller.rules
+
+        # --- role-typed pools: tiers whose replicas carry prefill/decode
+        # roles get a DisaggPool (prefill→decode handoff fabric over the
+        # tier's engines); the role knob stays live, so the controller —
+        # or a RoleBalancerPolicy, when cfg.adaptive_roles — can
+        # re-partition each tier from queue pressure at runtime
+        self.disagg_pools: dict[str, DisaggPool] = {}
+        for tier, ts in cfg.tiers.items():
+            if not ts.roles or set(ts.roles) == {"unified"}:
+                continue
+            directory = SessionDirectory()
+            kvx = KVTransferManager(
+                self.loop, directory,
+                bytes_fn=self.costmodels[tier].kv_transfer_bytes,
+                bandwidth=cfg.kv_bandwidth, collector=self.collector,
+                name=f"{tier}-kvx")
+            pool = DisaggPool(self.loop, tier_engines[tier], kvx,
+                              collector=self.collector,
+                              name=f"{tier}-disagg",
+                              cluster_prefix=f"cluster.{tier}")
+            self.disagg_pools[tier] = pool
+            if cfg.adaptive_roles:
+                from repro.core.policies import RoleBalancerPolicy
+                self.controller.install(RoleBalancerPolicy(
+                    [e.name for e in tier_engines[tier]],
+                    prefix=f"cluster.{tier}"))
 
         # --- one StageAgent per stage, registered as stage.<name> ----------
         self.stages: dict[str, StageAgent] = {}

@@ -13,11 +13,11 @@ protocol layer stays familiar while control moves out of the app.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Callable, Optional
+from dataclasses import dataclass
+from typing import Optional
 
 from repro.core.dataplane import Channel
-from repro.core.types import AgentCard, Granularity, Message, fresh_id
+from repro.core.types import AgentCard, Granularity, fresh_id
 
 
 @dataclass

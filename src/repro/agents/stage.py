@@ -31,7 +31,7 @@ from __future__ import annotations
 import enum
 import math
 import zlib
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Optional
 
 from repro.core.knobs import ControlSurface, KnobSpec

@@ -15,12 +15,10 @@ queues form and cross-stage scheduling order actually matters.
 from __future__ import annotations
 
 import random
-from dataclasses import dataclass, field
-from typing import Optional
+from dataclasses import dataclass
 
 from repro.agents.graph import GraphTask
 from repro.agents.pipeline import AgenticPipeline, TaskSpec
-from repro.core.types import Priority
 
 
 @dataclass

@@ -11,8 +11,7 @@ what makes 126-layer dry-runs tractable, and lets heterogeneous stacks
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Any, Optional
+from dataclasses import dataclass
 
 # ---------------------------------------------------------------------------
 # Block specs

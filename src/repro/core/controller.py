@@ -21,12 +21,12 @@ print).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Optional
 
 from repro.core.metrics import CentralPoller, MetricBus, StateStore
 from repro.core.registry import Registry
-from repro.core.rules import AgentRule, RequestRule, RuleTable
+from repro.core.rules import RequestRule, RuleTable
 from repro.core.types import Granularity
 from repro.sim.clock import EventLoop
 
@@ -130,6 +130,17 @@ class ControlContext:
         """Gate/release a channel's speculative traffic
         (intent ``gate CHANNEL on|off``)."""
         self.set(channel, "gate_speculative", bool(on))
+
+    def role(self, engine: str, role: str) -> None:
+        """Flip an engine's phase role (disaggregation plane; intent
+        ``set engine NAME.role unified|prefill|decode``).  The engine's
+        fabric drains role-inconsistent work on the flip; audited
+        distinctly from plain knob sets so role churn is greppable."""
+        cur = self.get(engine, "role")
+        if cur == role:
+            return
+        self._c.registry.set(engine, "role", role)
+        self._c._log("role", engine, f"{cur}->{role}")
 
     def pin(self, prefix: str) -> int:
         """Pin a named prefix in every registered cache plane (intent

@@ -23,7 +23,7 @@ integration.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, Optional, Protocol
+from typing import Optional, Protocol
 
 from repro.core.knobs import ControlSurface, KnobSpec
 from repro.core.types import Granularity, Message, Priority

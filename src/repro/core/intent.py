@@ -18,6 +18,10 @@ internals; the compiler turns them into a closed-loop ``Policy``:
     # controllable / its exported stage.<NAME>.* gauges
     rule slow_review on stage reviewer.p95 > 2 hold 3:
         => set stage reviewer.model_tier small
+    # disaggregation plane: flip an engine's phase role from fleet
+    # pressure (`engine NAME` selects the engine's registered knobs)
+    rule surge on cluster.prefill_pressure > 2 hold 1:
+        => set engine e3.role prefill
 
 Grammar (line oriented; '#' comments):
 
@@ -33,8 +37,11 @@ Grammar (line oriented; '#' comments):
     METRIC := exact series name, or a glob (``tester-*.queue_len``)
               pooling every matching series fleet-wide;
               ``stage NAME.METRIC`` sugars to ``stage.NAME.METRIC``
-              (the workflow plane's per-stage gauge namespace)
-    ACTION := set [stage] TARGET.KNOB VALUE | reset [stage] TARGET.KNOB
+              (the workflow plane's per-stage gauge namespace);
+              ``engine NAME.METRIC`` sugars to ``NAME.METRIC``
+              (engines register unprefixed)
+    ACTION := set [stage|engine] TARGET.KNOB VALUE
+            | reset [stage|engine] TARGET.KNOB
             | granularity CHANNEL (batch|pipeline|stream)
             | route SESSION INSTANCE | pace CHANNEL SECONDS
             | scale GROUP (+N|-N|N) | gate CHANNEL (on|off)
@@ -64,7 +71,7 @@ both control-plane generations.
 from __future__ import annotations
 
 import re
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Optional
 
 from repro.core.controller import ControlContext, Policy
@@ -145,10 +152,15 @@ def _parse_value(s: str):
 # controllable) — the grammar keeps the paper's "stage" vocabulary
 # while the planes keep plain dotted names
 _STAGE_SEL_RE = re.compile(r"\bstage\s+(?=[\w\-]+\.)")
+# disaggregation-plane sugar: `engine e3.role` names the engine's plain
+# registered name (`e3.role`) — engines register unprefixed, so the
+# selector word simply drops, keeping rules like
+# `on cluster.prefill_pressure > 2 => set engine e3.role prefill` readable
+_ENGINE_SEL_RE = re.compile(r"\bengine\s+(?=[\w\-]+\.)")
 
 
 def _desugar_stage(text: str) -> str:
-    return _STAGE_SEL_RE.sub("stage.", text)
+    return _ENGINE_SEL_RE.sub("", _STAGE_SEL_RE.sub("stage.", text))
 
 
 def _parse_cond(text: str, lineno: int) -> Cond:

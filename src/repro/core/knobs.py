@@ -24,7 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Any, Callable, Optional
+from typing import Optional
 
 from repro.core.types import AgentCard
 

@@ -247,6 +247,43 @@ class RollingStat:
         return len(self._xs)
 
 
+class FleetAggregate:
+    """Fleet-level derived gauges (§3.2's flexible aggregation, pushed
+    down to the collector tier).  ``watch`` re-publishes an aggregate of
+    per-member series as a ``<prefix>.<name>`` gauge on every member
+    write, so MetricBus threshold rules and intent programs (``on
+    cluster.prefill_pressure > 2 => set engine e2.role prefill``)
+    subscribe to one plain series instead of re-aggregating windows —
+    the disaggregation plane's RoleBalancerPolicy reads exactly these.
+    """
+
+    def __init__(self, collector: "Collector", prefix: str = "cluster"):
+        if collector.bus is None:
+            raise ValueError("FleetAggregate needs a Collector with a "
+                             "MetricBus attached")
+        self.collector = collector
+        self.prefix = prefix
+        self.watches: list[str] = []
+
+    def watch(self, name: str, members: list[str], how: str = "sum",
+              scale: float = 1.0) -> None:
+        """Publish ``AGGREGATIONS[how]`` over the members' freshest
+        values (times ``scale``) whenever any member is written."""
+        agg = AGGREGATIONS[how]
+        out = f"{self.prefix}.{name}"
+
+        def _update(_name: str, _value: float, t: float) -> None:
+            xs = [v for v in (self.collector.last(m) for m in members)
+                  if v is not None]
+            if xs:
+                self.collector.gauge(out, agg(xs) * scale, t)
+
+        for m in members:
+            self.collector.bus.subscribe(m, predicate=lambda v: True,
+                                         edge=False, fn=_update)
+        self.watches.append(out)
+
+
 def ewma(alpha: float = 0.3) -> Callable[[list[float]], float]:
     def _fn(xs: list[float]) -> float:
         acc = math.nan
@@ -353,6 +390,12 @@ _builtin("bytes_sent", "Cumulative number of bytes sent on a channel.")
 _builtin("link_delay", "Current queueing delay of the link in seconds; lower is better.")
 _builtin("transfer_bytes", "Cumulative bytes of KV-cache state moved between instances.")
 _builtin("hit_rate", "Prefix-cache token hit fraction; higher is better.")
+_builtin("prefill_queue_tokens", "Current number of prompt tokens backed up behind prefill; lower is better under latency goals.")
+_builtin("decode_slot_util", "Decoding-slot occupancy as a fraction; higher is better for throughput.")
+_builtin("prefill_pressure", "Fleet prefill backlog relative to the per-step prefill budget; lower is better.")
+_builtin("held_count", "Current number of messages held in the router (blocked or fleet-empty); lower is better.")
+_builtin("handoffs", "Cumulative number of prefill-to-decode KV handoffs.")
+_builtin("handoff_bytes", "Cumulative bytes of KV state moved by prefill-to-decode handoffs.")
 _builtin("saved_prefill_tokens", "Cumulative number of prompt tokens served from the prefix cache instead of re-prefilled.")
 _builtin("shared_pages", "Current number of KV pages held in shared (refcounted) prefix blocks.")
 

@@ -11,7 +11,7 @@ commands the language targets.
 from __future__ import annotations
 
 import zlib
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 from repro.core.controller import ControlContext, Policy
@@ -288,6 +288,96 @@ class StageTierPolicy(Policy):
             ctx.set(f"stage.{s}", "model_tier", want)
             self._moved[s] = ctx.now
             self.shifts.append((ctx.now, s, want))
+
+
+class RoleBalancerPolicy(Policy):
+    """Disaggregation plane (ISSUE 4): flip engine *roles* from fleet
+    pressure — the SDN-native version of disaggregated serving.  Reads
+    the ``FleetAggregate`` gauges the DisaggPool publishes
+    (``cluster.prefill_pressure``, ``cluster.decode_slot_util``) and
+    acts only through each engine's registered ``role`` knob, so the
+    same behaviour is expressible in intent as
+
+        rule surge on cluster.prefill_pressure > 2 hold 1:
+            => set engine e2.role prefill
+
+    Guard rails: the fleet always keeps at least one prefill-capable
+    and at least one decode-capable engine (``unified`` counts as
+    both), and ``dwell`` rate-limits flips so the fleet doesn't thrash
+    around a pressure boundary.
+    """
+
+    name = "role-balancer"
+
+    def __init__(self, engines: list[str], pressure_hi: float = 2.0,
+                 pressure_lo: float = 0.25, min_prefill: int = 0,
+                 min_decode: int = 1, dwell: float = 0.5,
+                 release_dwell: Optional[float] = None,
+                 window: float = 1.0, prefix: str = "cluster",
+                 slot_profile: Optional[dict] = None):
+        assert pressure_lo <= pressure_hi
+        self.engines = engines
+        self.pressure_hi = pressure_hi
+        self.pressure_lo = pressure_lo
+        self.min_prefill = min_prefill
+        self.min_decode = min_decode
+        self.dwell = dwell
+        # asymmetric residency: conscripting a prefill engine migrates
+        # its running decodes (disruptive — deliberate), releasing one
+        # back to decode duty drains nothing (cheap — prompt), so the
+        # two directions get separate dwells
+        self.release_dwell = (release_dwell if release_dwell is not None
+                              else dwell / 3.0)
+        self.window = window        # sustained-pressure window: a role
+        self.prefix = prefix        # flip drains real work, so transient
+                                    # spikes must not trigger one
+        # role -> max_num_seqs co-flip: a decode-only engine spends the
+        # activation memory a unified engine reserves for prefill chunks
+        # on extra decode slots instead, so flipping the role also
+        # reshapes the batch (both through the same Table-1 surface)
+        self.slot_profile = slot_profile or {}
+        self._last_flip = -1e18
+        self.flips: list[tuple[float, str, str]] = []
+
+    def _flip(self, ctx: ControlContext, engine: str, role: str) -> None:
+        ctx.role(engine, role)
+        if role in self.slot_profile:
+            ctx.set(engine, "max_num_seqs", self.slot_profile[role])
+        self._last_flip = ctx.now
+        self.flips.append((ctx.now, engine, role))
+
+    def on_tick(self, ctx: ControlContext) -> None:
+        since_flip = ctx.now - self._last_flip
+        if since_flip < min(self.dwell, self.release_dwell):
+            return
+        pressure = ctx.metric(f"{self.prefix}.prefill_pressure", "mean",
+                              self.window, default=float("nan"))
+        if pressure != pressure:
+            return                       # fleet gauges not flowing yet
+        roles = {e: ctx.get(e, "role") for e in self.engines}
+        n_prefill = sum(1 for r in roles.values() if r == "prefill")
+        decode_capable = sum(1 for r in roles.values() if r != "prefill")
+        prefill_capable = len(roles) - sum(1 for r in roles.values()
+                                           if r == "decode")
+        if pressure > self.pressure_hi and since_flip >= self.dwell:
+            # prefill starved: conscript the least decode-utilized
+            # non-prefill engine — but never drain the decode fleet
+            if decode_capable - 1 < max(self.min_decode, 1):
+                return
+            cand = [e for e in self.engines if roles[e] != "prefill"]
+            pick = min(cand, key=lambda e: ctx.metric(
+                f"{e}.decode_slot_util", "last", default=0.0))
+            self._flip(ctx, pick, "prefill")
+        elif (pressure < self.pressure_lo and n_prefill > self.min_prefill
+                and since_flip >= self.release_dwell):
+            # prefill idle: return the emptiest prefill engine to
+            # decode duty — but keep a prefill path alive
+            if prefill_capable - 1 < 1:
+                return
+            cand = [e for e in self.engines if roles[e] == "prefill"]
+            pick = min(cand, key=lambda e: ctx.metric(
+                f"{e}.prefill_queue_tokens", "last", default=0.0))
+            self._flip(ctx, pick, "decode")
 
 
 class AutoscalePolicy(Policy):

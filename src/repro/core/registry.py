@@ -14,7 +14,6 @@ the vLLM ``max_num_seqs`` example from the paper).
 """
 from __future__ import annotations
 
-from typing import Optional
 
 from repro.core.types import AgentCard
 

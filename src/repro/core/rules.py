@@ -13,7 +13,7 @@ the data plane:
 from __future__ import annotations
 
 import fnmatch
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 from repro.core.types import Granularity, Message

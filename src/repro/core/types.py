@@ -36,6 +36,7 @@ class RequestState(str, enum.Enum):
     PREFILL = "prefill"
     RUNNING = "running"
     PREEMPTED = "preempted"
+    HANDOFF = "handoff"      # prefill done; KV in flight to a decode engine
     FINISHED = "finished"
     FAILED = "failed"
 

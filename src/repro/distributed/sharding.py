@@ -20,7 +20,7 @@ used at most once per tensor.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 import jax

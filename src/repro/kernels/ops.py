@@ -8,7 +8,6 @@ to Mosaic).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -29,7 +29,6 @@ import traceback
 from pathlib import Path
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ARCHS, SHAPES, get_config, shape_applicable
 from repro.launch import specs as specs_mod
@@ -37,7 +36,6 @@ from repro.launch.mesh import make_production_mesh
 from repro.launch.serve import make_prefill_step, make_serve_step
 from repro.launch.train import (AdamWConfig, TrainPlan, abstract_state,
                                 default_plan, make_train_step)
-from repro.models import transformer
 
 # ---------------------------------------------------------------------------
 # HLO collective parsing

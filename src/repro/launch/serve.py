@@ -4,11 +4,9 @@ KV cache.  Lowered by the dry-run for the ``prefill_*`` / ``decode_*`` /
 1-device mesh)."""
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec
+from jax.sharding import NamedSharding
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.distributed import sharding as shd

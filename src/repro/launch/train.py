@@ -16,9 +16,8 @@ and the 256/512-chip dry-run (abstract lowering only).
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

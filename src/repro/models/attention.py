@@ -21,7 +21,7 @@ The pure-jnp path here is also the oracle for the Pallas kernels in
 from __future__ import annotations
 
 import math
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -17,14 +17,14 @@ import jax.numpy as jnp
 
 from repro.configs.base import BlockSpec, ModelConfig
 from repro.models import ssm
-from repro.models.attention import (CrossKV, KVCache, attn_defs,
+from repro.models.attention import (CrossKV, attn_defs,
                                     cross_attention, cross_attention_cached,
                                     cross_kv_precompute, init_kv_cache,
                                     kv_cache_size, self_attention,
                                     self_attention_cached,
                                     self_attention_prefill)
 from repro.models.layers import mlp, mlp_defs, rmsnorm, rmsnorm_defs
-from repro.models.moe import MoEStats, moe_defs, moe_ffn
+from repro.models.moe import moe_defs, moe_ffn
 
 
 # ---------------------------------------------------------------------------

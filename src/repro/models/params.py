@@ -12,8 +12,8 @@ this module is mesh-agnostic.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Any, Callable, Optional
+from dataclasses import dataclass
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

@@ -11,9 +11,8 @@ of 8 — the difference between fitting and not fitting a 405B model on a
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
-from typing import Any, NamedTuple, Optional
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

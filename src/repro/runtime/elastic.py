@@ -13,7 +13,6 @@ action and plain ``registry.set(group, "replicas", n)`` both reach it
 through the same Table-1 surface as every other knob."""
 from __future__ import annotations
 
-from typing import Callable, Optional
 
 from repro.agents.agent import TesterAgent
 from repro.core.knobs import ControlSurface, KnobSpec

@@ -10,7 +10,6 @@ re-prefill (correct, just slower — exactly what a real pod failure
 costs)."""
 from __future__ import annotations
 
-from dataclasses import dataclass, field
 from typing import Callable, Optional
 
 from repro.sim.clock import EventLoop

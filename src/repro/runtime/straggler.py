@@ -12,7 +12,6 @@ expressed entirely through the paper's control surface: metrics in,
 rules + ``set()`` out."""
 from __future__ import annotations
 
-from typing import Optional
 
 from repro.core.controller import ControlContext, Policy
 

@@ -13,7 +13,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro import models
 from repro.configs.base import ModelConfig

@@ -9,9 +9,7 @@ serving/cache_utils; KV migration uses serving/kv_transfer.
 """
 from __future__ import annotations
 
-import functools
 import time
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,7 @@ from __future__ import annotations
 from typing import Callable, Optional
 
 from repro.core.knobs import ControlSurface, KnobSpec
-from repro.core.types import Priority, Request, RequestState, fresh_id
+from repro.core.types import Request, RequestState
 from repro.serving.scheduler import (PrefillWork, Scheduler, SchedulerConfig,
                                      StepKind, StepPlan)
 
@@ -27,9 +27,10 @@ class EngineCore(ControlSurface):
     """
 
     kind = "llm"
-    CAPABILITIES = ("kv_transfer", "pause", "priority")
+    CAPABILITIES = ("kv_transfer", "pause", "priority", "role")
     METRICS = ("queue_len", "num_running", "page_util", "step_time",
-               "ttft", "latency", "tpt", "throughput")
+               "ttft", "latency", "tpt", "throughput",
+               "prefill_queue_tokens", "decode_slot_util")
     KNOB_SPECS = tuple(
         s.delegated("scheduler", clamp="_clamp_max_num_seqs")
         if s.name == "max_num_seqs" else s.delegated("scheduler")
@@ -51,10 +52,18 @@ class EngineCore(ControlSurface):
         self.temperature = 0.0
         self.paused = False
         self.steps = 0
+        self.prefill_steps = 0
+        self.decode_steps = 0
         self.tokens_generated = 0
         self.finished: list[Request] = []
         self.on_finish: Optional[Callable[[Request, float], None]] = None
         self.on_token: Optional[Callable[[Request, int, float], None]] = None
+        # -- disaggregation plane hooks (wired by a DisaggPool) ------------
+        self.disagg = None                          # owning handoff fabric
+        self.kv_ready_fn: Optional[Callable[[Request], float]] = None
+        self.on_prefill_progress: Optional[
+            Callable[[Request, float], None]] = None
+        self.on_prefill_done: Optional[Callable[[Request, float], None]] = None
 
     # ------------------------------------------------------------------ knobs
     def _clamp_max_num_seqs(self, value: int) -> int:
@@ -65,7 +74,27 @@ class EngineCore(ControlSurface):
             self.kick()
 
     def on_knob_set(self, name: str, old, new) -> None:
+        if name == "role" and old != new:
+            self._role_changed(old, new)
         self.kick()                     # new headroom may unblock work
+
+    @property
+    def role(self) -> str:
+        return self.scheduler.cfg.role
+
+    def _role_changed(self, old: str, new: str) -> None:
+        """Runtime role flip.  Specialized roles only make sense inside
+        a disaggregation fabric (something must carry sequences across
+        the prefill/decode boundary); the fabric drains this engine's
+        now-role-inconsistent work — no request is lost, and no decode
+        ever runs on a prefill-role engine."""
+        if new != "unified" and self.disagg is None:
+            self.scheduler.cfg.role = old           # revert before failing
+            raise RuntimeError(
+                f"{self.name}: role {new!r} needs a disaggregation "
+                "fabric attached (see serving/disagg.py)")
+        if self.disagg is not None:
+            self.disagg.on_role_change(self, old, new)
 
     def physical_slots(self) -> int:
         return self._physical_slots
@@ -82,10 +111,60 @@ class EngineCore(ControlSurface):
 
     # ---------------------------------------------------------------- queue
     def submit(self, req: Request) -> None:
-        req.arrival_time = self.now()
+        if self.role == "decode":
+            if self.disagg is None:
+                # no fabric to bounce through: the waiting queue would
+                # never drain (decode role blocks admission) — fail loud
+                raise RuntimeError(
+                    f"{self.name}: decode-role engine cannot take fresh "
+                    "prompts without a disaggregation fabric")
+            # decode engines take no fresh prompts: bounce back through
+            # the fabric's router to a prefill-capable engine
+            self.disagg.resubmit(req)
+            return
+        req.meta.pop("disagg_reroutes", None)   # accepted: reset loop guard
+        # stamp arrival only once: a preemption victim bounced back
+        # through the fabric re-enters submit, and restamping would
+        # erase its pre-preemption queueing from every latency metric
+        if not req.meta.get("arrived"):
+            req.meta["arrived"] = True
+            req.arrival_time = self.now()
         self.scheduler.submit(req)
         self._gauge("queue_len", self.scheduler.queue_len)
+        self._gauge("prefill_queue_tokens",
+                    self.scheduler.prefill_queue_tokens)
         self.kick()
+
+    def admit_handoff(self, req: Request) -> bool:
+        """Decode-side admission of a prefill→decode handoff: the
+        generalized ``admit_direct`` path, gated on KV residency — the
+        request is only admitted once its transferred state has landed
+        (``kv_ready_fn``, usually ``KVTransferManager.handoff_wait``)."""
+        if self.kv_ready_fn is not None and self.kv_ready_fn(req) > 0:
+            return False
+        if not self.scheduler.admit_direct(req):
+            return False
+        self._gauge("num_running", self.scheduler.num_running)
+        self.kick()
+        return True
+
+    def receive_handoff(self, req: Request, state: dict) -> bool:
+        """Full decode-side arrival: residency-gated admission plus the
+        subclass's state install (sim: bookkeeping; real engine: the
+        transferred KV slice lands in the granted slot).  The
+        DisaggPool's arrival/backlog paths route through here, so sim
+        and real engines share one handoff admission sequence."""
+        if not self.admit_handoff(req):
+            return False
+        self.inject_state(req, state)
+        return True
+
+    def release_for_handoff(self, req: Request) -> None:
+        """Source-side release at prefill completion (or a role flip):
+        slot and pages free immediately; the request's state rides the
+        handoff transfer to its decode engine."""
+        self.scheduler.release_for_handoff(req)
+        self._gauge("num_running", self.scheduler.num_running)
 
     # -------------------------------------------------------------- metrics
     def _gauge(self, name: str, value: float) -> None:
@@ -103,27 +182,61 @@ class EngineCore(ControlSurface):
         self._gauge("page_util", s.alloc.utilization)
         self._observe("step_time", duration)
         self._gauge("tokens_total", self.tokens_generated)
+        self._gauge("prefill_queue_tokens", s.prefill_queue_tokens)
+        self._gauge("decode_slot_util", s.decode_slot_util)
 
     # ------------------------------------------------------ plan bookkeeping
     def apply_prefill(self, works: list[PrefillWork], first_tokens,
                       t: float) -> None:
         """first_tokens: per-work sampled token or None (chunk not final)."""
+        self.prefill_steps += 1
         for work, tok in zip(works, first_tokens):
             r = work.req
+            if r not in self.scheduler.running:
+                continue          # preempted / drained mid-flight
             r.prefilled += work.chunk
-            if r.prefilled >= r.prompt_len:
-                r.state = RequestState.RUNNING
-                self.scheduler.commit_prefix(r)
-                if tok is not None:
-                    self._emit_token(r, int(tok), t)
-                    if r.first_token_time is None:
-                        r.first_token_time = t
+            if r.prefilled < r.prompt_len:
+                if self.on_prefill_progress is not None:
+                    # chunk-streamed handoff: push the KV computed so far
+                    # while the rest of the prompt is still prefilling
+                    self.on_prefill_progress(r, t)
+                continue
+            r.state = RequestState.RUNNING
+            self.scheduler.commit_prefix(r)
+            if tok is not None:
+                self._emit_token(r, int(tok), t)
+                if r.first_token_time is None:
+                    r.first_token_time = t
+                    # one ttft sample per request: a preempted victim
+                    # resets first_token_time (its output restarts) but
+                    # must not contribute a second observation
+                    if not r.meta.get("ttft_observed"):
+                        r.meta["ttft_observed"] = True
                         self._observe("ttft", t - r.arrival_time)
+            if r.state is RequestState.RUNNING and self.role == "prefill":
+                if self.on_prefill_done is None:
+                    # no handoff sink: the sequence could never decode
+                    # (prefill role plans no DECODE steps) — fail loud
+                    # instead of holding its slot forever
+                    raise RuntimeError(
+                        f"{self.name}: prefill-role engine finished "
+                        f"{r.req_id} with no disaggregation fabric "
+                        "attached to hand it to")
+                # first token came from prefill; the decode tail belongs
+                # to the paired decode engine — release and hand off
+                self.on_prefill_done(r, t)
 
     def apply_decode(self, reqs: list[Request], tokens, t: float) -> None:
+        self.decode_steps += 1
         for r, tok in zip(reqs, tokens):
-            if r.state != RequestState.RUNNING:
-                continue          # preempted mid-flight
+            if r.state != RequestState.RUNNING \
+                    or r not in self.scheduler.running:
+                # preempted or handed off mid-flight — the state check
+                # alone is not enough: a migrated request can already be
+                # RUNNING again on its *destination* engine by the time
+                # this stale step lands, and emitting here would decode
+                # on an engine that no longer owns the sequence
+                continue
             self._emit_token(r, int(tok), t)
 
     def _emit_token(self, r: Request, tok: int, t: float) -> None:

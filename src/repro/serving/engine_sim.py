@@ -9,7 +9,6 @@ the CPU container.  The controller cannot tell sim and real engines apart
 """
 from __future__ import annotations
 
-from typing import Optional
 
 from repro.core.types import Request, RequestState
 from repro.serving.engine_base import EngineCore

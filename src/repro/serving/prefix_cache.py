@@ -30,7 +30,7 @@ prompts share exactly the blocks whose covering spans agree.
 from __future__ import annotations
 
 import hashlib
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Iterable, Optional, Sequence
 
 from repro.core.knobs import ControlSurface, KnobSpec

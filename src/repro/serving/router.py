@@ -7,12 +7,21 @@ Sits between a channel and a group of agent instances.  Routing order:
    hash, `least_loaded`, `cache_aware` — score instances by the
    estimated prefix-cache hit (via the controller-visible
    ``CacheDirectory``) and break ties by load, so fan-out requests land
-   where their shared prefix is already resident — or `stage_aware` —
+   where their shared prefix is already resident — `stage_aware` —
    Aragog-style per-stage model tiering: instances register with a
    model-size ``tier`` label, messages carry the desired tier (stamped
    from the issuing stage's ``model_tier`` knob), and the router keeps
    the call on a matching-tier instance (least-loaded within the tier,
-   full least-loaded fallback when no instance of that tier exists).
+   full least-loaded fallback when no instance of that tier exists) —
+   or `disagg` — disaggregation-aware: pick the prefill-capable engine
+   with the shallowest prefill queue, and when that engine is
+   prefill-role, *pre-pin* the paired decode engine (lowest decode slot
+   utilization) so the fabric can open the KV handoff before the first
+   token exists (``pair_for`` hands the pin to the DisaggPool).
+
+Messages delivered while the fleet is empty are held (with the blocked
+ones) and re-dispatched on the next ``add_instance`` — the
+``<router>.held_count`` gauge makes that window observable.
 
 Session affinity matters because the tester instances hold per-session
 KV state; the controller's LoadBalancePolicy re-pins sessions and pairs
@@ -34,13 +43,32 @@ from repro.core.types import Message
 from repro.sim.clock import EventLoop
 
 
+def pick_decode_engine(engines: dict, exclude: Optional[str] = None):
+    """Shared decode-placement criterion for the disaggregation plane:
+    the non-prefill engine minimizing (decode_slot_util, load).  Used
+    by both the router's ``disagg`` pre-pin and the DisaggPool's
+    reactive handoff/re-home paths, so the pinned pair and the fallback
+    can never disagree.  ``exclude`` is soft: it falls back to the
+    excluded engine when nothing else can decode.  None when no engine
+    is decode-capable."""
+    cand = [(n, e) for n, e in engines.items()
+            if getattr(e, "role", "unified") != "prefill" and n != exclude]
+    if not cand:
+        cand = [(n, e) for n, e in engines.items()
+                if getattr(e, "role", "unified") != "prefill"]
+    if not cand:
+        return None
+    return min(cand, key=lambda ne: (ne[1].scheduler.decode_slot_util,
+                                     ne[1].load()))[0]
+
+
 class Router(ControlSurface):
     kind = "router"
     CAPABILITIES = ("route",)
     KNOB_SPECS = (
         KnobSpec("policy", kind="str",
                  choices=("static", "least_loaded", "cache_aware",
-                          "stage_aware"),
+                          "stage_aware", "disagg"),
                  doc="fallback routing policy when no rule matches"),
     )
 
@@ -58,20 +86,25 @@ class Router(ControlSurface):
         self.instances: dict[str, Endpoint] = {}
         self._loads: dict[str, object] = {}      # name -> load() callable
         self._tiers: dict[str, str] = {}         # name -> model-size tier
+        self._engines: dict[str, object] = {}    # name -> engine (disagg)
         self._session_pin: dict[str, str] = {}   # fallback stickiness
         self._held: list[Message] = []
+        self._pairs: dict[str, tuple[str, str]] = {}  # task -> (src, dst)
         self._rules_seen = -1
         self.routed: dict[str, int] = {}
         self.cache_routed = 0                    # picks won on prefix score
         self.tier_routed = 0                     # picks won on tier match
+        self.disagg_routed = 0                   # picks won on role/depth
 
     # -- wiring ----------------------------------------------------------------
-    def add_instance(self, agent, load_fn=None,
-                     tier: Optional[str] = None) -> None:
+    def add_instance(self, agent, load_fn=None, tier: Optional[str] = None,
+                     engine=None) -> None:
         self.instances[agent.name] = agent
         self._loads[agent.name] = load_fn or getattr(agent, "load", None)
         if tier is not None:
             self._tiers[agent.name] = tier
+        if engine is not None:
+            self._engines[agent.name] = engine   # live role/depth source
         self.routed.setdefault(agent.name, 0)
         # messages held while the fleet was empty (remove-last-then-add)
         # get their first chance at the new instance here
@@ -81,6 +114,7 @@ class Router(ControlSurface):
         self.instances.pop(name, None)
         self._loads.pop(name, None)
         self._tiers.pop(name, None)
+        self._engines.pop(name, None)
         # stale fallback pins would re-route sessions to the dead name
         self._session_pin = {s: i for s, i in self._session_pin.items()
                              if i != name}
@@ -88,6 +122,8 @@ class Router(ControlSurface):
         # (their block rule may have been removed without a new deliver)
         if self.instances:
             self._pump()
+        else:
+            self._gauge_held()
 
     # -- set/reset shim: derived from ControlSurface -------------------------
     def card_metrics(self) -> tuple:
@@ -114,6 +150,51 @@ class Router(ControlSurface):
         self.cache_routed += 1
         return min(top, key=self._load_of)
 
+    def _role_of(self, name: str) -> str:
+        eng = self._engines.get(name)
+        if eng is None:
+            return "unified"
+        try:
+            return eng.get_param("role")
+        except (KeyError, AttributeError):
+            return "unified"
+
+    def _prefill_depth(self, name: str) -> float:
+        eng = self._engines.get(name)
+        if eng is None:
+            return self._load_of(name)
+        return float(eng.scheduler.prefill_queue_tokens)
+
+    def _disagg_pick(self, names: list[str], msg: Optional[Message]):
+        """Shallowest prefill queue among prefill-capable engines; when
+        the pick is a dedicated prefill engine, pre-pin its decode pair
+        (lowest decode slot utilization) so the handoff can start
+        streaming before the first token.  None when no engine can
+        prefill (caller falls back to plain least-loaded)."""
+        pre = [n for n in names if self._role_of(n) != "decode"]
+        if not pre:
+            return None
+        src = min(pre, key=lambda n: (self._prefill_depth(n),
+                                      self._load_of(n)))
+        if self._role_of(src) == "prefill":
+            dst = pick_decode_engine(
+                {n: self._engines[n] for n in names if n in self._engines},
+                exclude=src)
+            if dst is not None and msg is not None and msg.task_id:
+                self._pairs[msg.task_id] = (src, dst)
+                # pins are consumed by pair_for right after deliver;
+                # bound the table so a caller that never consumes them
+                # (e.g. this policy on a plain router) cannot leak
+                while len(self._pairs) > 512:
+                    self._pairs.pop(next(iter(self._pairs)))
+        self.disagg_routed += 1
+        return src
+
+    def pair_for(self, task_id: str):
+        """Consume the (prefill, decode) pre-pin made for a task by the
+        ``disagg`` policy; None when the pick decodes in place."""
+        return self._pairs.pop(task_id, None)
+
     def _tier_pick(self, names: list[str], msg: Optional[Message]):
         """Least-loaded instance of the tier the message asks for; None
         when the message carries no tier or no instance matches (caller
@@ -131,6 +212,11 @@ class Router(ControlSurface):
         names = sorted(self.instances)
         if not names:
             raise RuntimeError(f"{self.name}: no instances")
+        if self.policy == "disagg":
+            pick = self._disagg_pick(names, msg)
+            if pick is not None:
+                return pick
+            return min(names, key=self._load_of)
         if self.policy == "stage_aware":
             pick = self._tier_pick(names, msg)
             if pick is not None:
@@ -159,8 +245,11 @@ class Router(ControlSurface):
         if self._rules_seen != self.rules.version:
             self._rules_seen = self.rules.version
             self._pump()
-        if self.rules.blocked(msg):
+        if self.rules.blocked(msg) or not self.instances:
+            # blocked by rule, or the fleet is momentarily empty
+            # (remove-last-then-add): hold until something can take it
             self._held.append(msg)
+            self._gauge_held()
             return
         inst = self.pick(msg)
         self.routed[inst] += 1
@@ -171,5 +260,15 @@ class Router(ControlSurface):
 
     def _pump(self) -> None:
         held, self._held = self._held, []
+        self._gauge_held()
         for msg in held:
             self.deliver(msg)
+
+    @property
+    def held_count(self) -> int:
+        return len(self._held)
+
+    def _gauge_held(self) -> None:
+        if self.collector is not None:
+            self.collector.gauge(f"{self.name}.held_count",
+                                 len(self._held), self.loop.now())

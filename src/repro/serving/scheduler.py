@@ -26,7 +26,7 @@ from __future__ import annotations
 
 import enum
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Callable, Optional
 
 from repro.core.knobs import ControlSurface, KnobSpec
 from repro.core.types import Priority, Request, RequestState
@@ -64,13 +64,20 @@ class SchedulerConfig:
     preempt: bool = True
     decode_first: bool = False        # prioritize decode over admission
     require_complete_prompt: bool = False  # real engine: no partial prefill
+    # disaggregation plane: the engine's phase role.  `prefill` engines
+    # never plan decode steps (sequences are released at prefill
+    # completion and handed to a decode engine); `decode` engines never
+    # admit from the waiting queue (arrivals come through the handoff
+    # `admit_direct` path); `unified` is the classic both-phases loop.
+    role: str = "unified"             # unified | prefill | decode
 
 
 class Scheduler(ControlSurface):
     # -- knobs (set()/reset() surface, derived from ControlSurface) --------
     kind = "scheduler"
     CAPABILITIES = ("priority", "preempt")
-    METRICS = ("queue_len", "num_running", "page_util")
+    METRICS = ("queue_len", "num_running", "page_util",
+               "prefill_queue_tokens", "decode_slot_util")
     KNOB_SPECS = (
         KnobSpec("max_num_seqs", kind="int", lo=1, attr="cfg.max_slots",
                  on_change="_resize_slots",
@@ -85,6 +92,9 @@ class Scheduler(ControlSurface):
                  doc="admission floor: requests below are not admitted"),
         KnobSpec("decode_first", kind="bool", attr="cfg.decode_first",
                  doc="prioritize decode over new admissions"),
+        KnobSpec("role", kind="str",
+                 choices=("unified", "prefill", "decode"), attr="cfg.role",
+                 doc="engine phase role: unified | prefill | decode"),
     )
 
     def __init__(self, cfg: SchedulerConfig, name: str = "scheduler",
@@ -97,6 +107,10 @@ class Scheduler(ControlSurface):
         self.running: list[Request] = []
         self._free_slots = list(range(cfg.max_slots))
         self.preempt_count = 0
+        # disaggregation fabric hook: where a decode-role scheduler
+        # sends preempted victims (it can never re-admit them itself —
+        # they need a fresh prefill on a prefill-capable engine)
+        self.bounce_fn: Optional[Callable[[Request], None]] = None
 
     def _resize_slots(self, old: int, new: int) -> None:
         if new > old:
@@ -132,6 +146,25 @@ class Scheduler(ControlSurface):
 
     def slots_in_use(self) -> int:
         return self.cfg.max_slots - len(self._free_slots)
+
+    # -- disaggregation gauges (fleet policies aggregate these) -------------
+    @property
+    def prefill_queue_tokens(self) -> int:
+        """Prompt tokens backed up behind prefill: everything waiting,
+        plus the un-prefilled remainder of admitted PREFILL sequences."""
+        backlog = sum(max(r.prompt_len - r.prefilled, 0)
+                      for r in self.waiting)
+        backlog += sum(max(r.prompt_len - r.prefilled, 0)
+                       for r in self.running
+                       if r.state == RequestState.PREFILL)
+        return backlog
+
+    @property
+    def decode_slot_util(self) -> float:
+        """Fraction of batching slots occupied by decoding sequences."""
+        running = sum(1 for r in self.running
+                      if r.state == RequestState.RUNNING)
+        return running / max(self.cfg.max_slots, 1)
 
     # -- planning -----------------------------------------------------------------
     def _cache_limit(self, req: Request) -> int:
@@ -214,8 +247,12 @@ class Scheduler(ControlSurface):
         self._release(req)
 
     def admit_direct(self, req: Request) -> bool:
-        """Admit a migrated request straight into RUNNING (its decode state
-        arrives via kv_transfer inject, no prefill)."""
+        """Admit a request straight into RUNNING, no local prefill: its
+        decode state arrives from elsewhere (a kv_transfer migration, or
+        the disaggregation plane's prefill→decode handoff — engines gate
+        this call on KV residency via ``EngineCore.admit_handoff``)."""
+        if self.cfg.role == "prefill":
+            return False              # prefill engines never decode
         if not self._free_slots:
             return False
         need = min(req.total_len + (req.max_new_tokens - req.generated),
@@ -227,6 +264,13 @@ class Scheduler(ControlSurface):
         self.running.append(req)
         return True
 
+    def release_for_handoff(self, req: Request) -> None:
+        """Prefill complete on a prefill-role engine: free the slot and
+        pages here — the KV rides the handoff pipeline to the paired
+        decode engine, which re-admits via ``admit_direct``."""
+        self._release(req)
+        req.state = RequestState.HANDOFF
+
     def preempt_one(self) -> Optional[Request]:
         """Evict lowest-priority, youngest running sequence."""
         candidates = [r for r in self.running
@@ -237,16 +281,29 @@ class Scheduler(ControlSurface):
                      key=lambda r: (int(r.priority), -r.arrival_time))
         self._release(victim)
         victim.state = RequestState.PREEMPTED
-        victim.prefilled = 0          # cache dropped; re-prefill on re-admit
+        # cache dropped: the victim restarts from scratch on re-admit, so
+        # every per-request emission record resets with it — leaving
+        # output_tokens/first_token_time populated would re-emit the same
+        # tokens (duplicate output, double-counted ttft) after re-admission
+        victim.prefilled = 0
         victim.generated = 0
+        victim.output_tokens.clear()
+        victim.first_token_time = None
+        self.preempt_count += 1
+        if self.cfg.role == "decode" and self.bounce_fn is not None:
+            # this scheduler never admits from waiting: re-route the
+            # victim to a prefill-capable engine instead of stranding it
+            self.bounce_fn(victim)
+            return victim
         self.waiting.append(victim)
         self._sort_waiting()
-        self.preempt_count += 1
         return victim
 
     def plan_step(self) -> StepPlan:
-        # 1. admit while capacity
-        if not self.cfg.decode_first or not self.running:
+        # 1. admit while capacity (decode engines only admit through the
+        #    handoff path — their waiting queue is bounced by the fabric)
+        if self.cfg.role != "decode" and (not self.cfg.decode_first
+                                          or not self.running):
             while self.waiting and self._admissible(self.waiting[0]):
                 if not self._admit(self.waiting.pop(0)):
                     break
@@ -275,7 +332,11 @@ class Scheduler(ControlSurface):
                 budget -= chunk
             if plan.prefills:
                 return plan
-        # 3. decode everyone running
+        # 3. decode everyone running — never on a prefill-role engine:
+        #    its RUNNING sequences are awaiting handoff release, not a
+        #    decode step (ISSUE 4's "prefill-only engines never decode")
+        if self.cfg.role == "prefill":
+            return StepPlan(StepKind.IDLE)
         decodes = [r for r in self.running if r.state == RequestState.RUNNING]
         if decodes:
             return StepPlan(StepKind.DECODE, decodes=decodes)

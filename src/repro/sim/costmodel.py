@@ -14,12 +14,11 @@ benchmarks.
 from __future__ import annotations
 
 import json
-import math
 from dataclasses import dataclass
 from pathlib import Path
 from typing import Optional
 
-from repro.configs.base import FULL_ATTENTION, ModelConfig
+from repro.configs.base import ModelConfig
 
 PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip (TPU v5e)
 HBM_BW = 819e9             # B/s per chip
@@ -82,6 +81,19 @@ class CostModel:
         if cfg.window > 0 and not cfg.local_global_ratio:
             eff = min(context_len, cfg.window)
         return self.kv_bytes_per_token() * eff + self.state_bytes()
+
+    def handoff_time(self, context_len: int, bandwidth: float = 12.5e9,
+                     latency: float = 1.0e-3, overlap_s: float = 0.0) -> float:
+        """Critical-path cost of a prefill→decode KV handoff.  The raw
+        transfer moves ``kv_transfer_bytes(context_len)`` over the
+        interconnect; ``overlap_s`` is the window the transfer ran
+        concurrently with something useful (chunk-streamed handoffs
+        overlap the tail of prefill), so only the non-overlapped
+        remainder — floored at one link latency — is exposed to TTFT.
+        Role-balancing policies consume this number when deciding
+        whether flipping an engine's role pays."""
+        raw = self.kv_transfer_bytes(context_len) / bandwidth + latency
+        return max(raw - overlap_s, latency)
 
     # -- step times -----------------------------------------------------------
     def _roofline(self, flops: float, bytes_: float) -> float:

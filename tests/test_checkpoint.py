@@ -1,7 +1,4 @@
 """Checkpoint manager: atomicity, keep-K GC, async writes, resharding."""
-import json
-import shutil
-from pathlib import Path
 
 import jax.numpy as jnp
 import numpy as np

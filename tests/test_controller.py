@@ -3,7 +3,6 @@ import pytest
 
 from repro.core import (AgentRule, Controller, Granularity, IntentError,
                         Registry, RequestRule, RuleTable, compile_intent)
-from repro.core.controller import ControlContext
 from repro.core.metrics import CentralPoller, Collector, StateStore
 from repro.core.types import Message
 from repro.sim.clock import EventLoop

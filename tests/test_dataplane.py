@@ -1,7 +1,7 @@
 """Data plane shim: granularity buffering, runtime switching, pacing,
 speculative gating."""
 from repro.core.dataplane import Channel
-from repro.core.types import Granularity, Message, Priority
+from repro.core.types import Granularity, Message
 from repro.sim.clock import EventLoop
 from repro.sim.network import Link
 

@@ -1,0 +1,501 @@
+"""Disaggregation plane: role knob semantics, the prefill→decode
+handoff pipeline, runtime role transitions (the ISSUE-4 acceptance
+test), the disagg router policy, the RoleBalancerPolicy, and the
+`engine` intent selector."""
+import pytest
+
+from repro.configs import get_config
+from repro.core.controller import Controller
+from repro.core.intent import compile_intent
+from repro.core.metrics import (CentralPoller, Collector, FleetAggregate,
+                                MetricBus, StateStore)
+from repro.core.policies import RoleBalancerPolicy
+from repro.core.registry import Registry
+from repro.core.types import Request, RequestState
+from repro.serving.disagg import DisaggPool
+from repro.serving.engine_sim import SimEngine
+from repro.serving.kv_transfer import KVTransferManager, SessionDirectory
+from repro.serving.scheduler import Scheduler, SchedulerConfig, StepKind
+from repro.sim.clock import EventLoop
+from repro.sim.costmodel import CostModel
+
+
+def _fleet(roles, slots=8, with_controller=False):
+    loop = EventLoop()
+    bus = MetricBus()
+    col = Collector("t", bus=bus)
+    cm = CostModel(get_config("agent-7b"), chips=4)
+    engines = [
+        SimEngine(loop, cm,
+                  SchedulerConfig(max_slots=slots, num_pages=2048,
+                                  max_context=4096, role=r),
+                  name=f"e{i}", collector=col)
+        for i, r in enumerate(roles)]
+    kvx = KVTransferManager(loop, SessionDirectory(),
+                            bytes_fn=cm.kv_transfer_bytes, collector=col)
+    pool = DisaggPool(loop, engines, kvx, collector=col)
+    if not with_controller:
+        return loop, engines, kvx, pool
+    store = StateStore()
+    poller = CentralPoller(store)
+    poller.attach(col)
+    registry = Registry()
+    for e in engines:
+        registry.register(e)
+    controller = Controller(loop, registry, poller, interval=0.05, bus=bus)
+    return loop, engines, kvx, pool, controller
+
+
+def _guard_no_decode_on_prefill_role(engines):
+    """Wrap every scheduler's plan_step with the acceptance invariant:
+    a prefill-role engine never plans a decode step."""
+    for e in engines:
+        orig = e.scheduler.plan_step
+
+        def checked(e=e, orig=orig):
+            plan = orig()
+            assert not (plan.kind == StepKind.DECODE
+                        and e.role == "prefill"), \
+                f"{e.name}: decode planned while role=prefill"
+            return plan
+        e.scheduler.plan_step = checked
+
+
+# ---------------------------------------------------------------------------
+# Scheduler-level role semantics
+# ---------------------------------------------------------------------------
+
+def test_scheduler_prefill_role_never_plans_decode():
+    s = Scheduler(SchedulerConfig(max_slots=4, num_pages=256,
+                                  role="prefill"))
+    r = Request(prompt_len=32, max_new_tokens=8)
+    s.submit(r)
+    plan = s.plan_step()
+    assert plan.kind == StepKind.PREFILL
+    r.prefilled = r.prompt_len
+    r.state = RequestState.RUNNING
+    assert s.plan_step().kind == StepKind.IDLE     # never DECODE
+
+
+def test_scheduler_decode_role_never_admits_from_waiting():
+    s = Scheduler(SchedulerConfig(max_slots=4, num_pages=256,
+                                  role="decode"))
+    s.submit(Request(prompt_len=32, max_new_tokens=8))
+    assert s.plan_step().kind == StepKind.IDLE
+    # ... but the admit_direct (handoff) path works
+    r = Request(prompt_len=32, max_new_tokens=8)
+    r.prefilled = r.prompt_len
+    r.generated = 1
+    assert s.admit_direct(r)
+    assert s.plan_step().kind == StepKind.DECODE
+
+
+def test_admit_direct_refused_on_prefill_role():
+    s = Scheduler(SchedulerConfig(max_slots=4, num_pages=256,
+                                  role="prefill"))
+    r = Request(prompt_len=32, max_new_tokens=8)
+    assert not s.admit_direct(r)
+
+
+def test_role_gauges():
+    s = Scheduler(SchedulerConfig(max_slots=4, num_pages=256))
+    a = Request(prompt_len=100, max_new_tokens=4)
+    s.submit(a)
+    assert s.prefill_queue_tokens == 100
+    s.plan_step()                    # admits; still unprefilled
+    assert s.prefill_queue_tokens == 100
+    a.prefilled = a.prompt_len
+    a.state = RequestState.RUNNING
+    assert s.prefill_queue_tokens == 0
+    assert s.decode_slot_util == pytest.approx(0.25)
+
+
+def test_role_knob_requires_fabric():
+    loop = EventLoop()
+    cm = CostModel(get_config("agent-7b"), chips=4)
+    eng = SimEngine(loop, cm, SchedulerConfig(max_slots=4, num_pages=256))
+    with pytest.raises(RuntimeError, match="fabric"):
+        eng.set_param("role", "prefill")
+    assert eng.role == "unified"     # reverted, not half-set
+
+
+def test_fabricless_specialized_engines_fail_loud():
+    """An engine *constructed* with a specialized role but never wired
+    into a DisaggPool must raise instead of silently stranding work."""
+    loop = EventLoop()
+    cm = CostModel(get_config("agent-7b"), chips=4)
+    pre = SimEngine(loop, cm, SchedulerConfig(max_slots=4, num_pages=256,
+                                              role="prefill"))
+    pre.submit(Request(prompt_len=32, max_new_tokens=8))
+    with pytest.raises(RuntimeError, match="no disaggregation fabric"):
+        loop.run_until(10.0)         # prefill completes -> no sink
+    dec = SimEngine(loop, cm, SchedulerConfig(max_slots=4, num_pages=256,
+                                              role="decode"))
+    with pytest.raises(RuntimeError, match="fabric"):
+        dec.submit(Request(prompt_len=32, max_new_tokens=8))
+
+
+def test_preempt_on_decode_engine_bounces_victim():
+    """A victim preempted on a decode-role engine cannot be re-admitted
+    there (decode role never admits from waiting): it must bounce back
+    through the fabric, re-prefill elsewhere, and still finish."""
+    loop, engines, kvx, pool = _fleet(("prefill", "decode"))
+    r = Request(prompt_len=128, max_new_tokens=64)
+    pool.submit(r)
+    arrival = r.arrival_time
+    dec = engines[1]
+
+    def evict():
+        assert r in dec.scheduler.running     # decoding on the decode eng
+        v = dec.scheduler.preempt_one()
+        assert v is r
+        assert r not in dec.scheduler.waiting  # bounced, not stranded
+    loop.call_at(0.15, evict)
+    loop.run_until(120.0)
+    assert r.state == RequestState.FINISHED
+    assert len(r.output_tokens) == r.max_new_tokens
+    assert pool.handoffs >= 2        # original + post-bounce re-handoff
+    # the bounce re-enters submit, but latency still counts from the
+    # ORIGINAL arrival — restamping would hide pre-preemption queueing
+    assert r.arrival_time == arrival
+
+
+def test_one_token_requests_leave_no_handoff_records():
+    """A pre-pinned request that finishes at its first token never
+    reaches the handoff path; its record must still be cleaned up."""
+    loop, engines, kvx, pool = _fleet(("prefill", "decode"))
+    reqs = [Request(prompt_len=64, max_new_tokens=1) for _ in range(5)]
+    for r in reqs:
+        pool.submit(r)
+    assert kvx.handoff_records           # pre-pins opened at submit
+    loop.run_until(30.0)
+    assert all(r.state == RequestState.FINISHED for r in reqs)
+    assert pool.handoffs == 0            # done at first token: no handoff
+    assert not kvx.handoff_records       # ... and no leaked records
+
+
+def test_stale_decode_step_never_emits_for_migrated_request():
+    """A decode step in flight when its requests migrate must not emit
+    tokens for them on the old engine — even if the destination has
+    already re-admitted them to RUNNING (the state check alone cannot
+    tell the two engines apart)."""
+    loop, engines, kvx, pool = _fleet(("unified", "unified"))
+    # near-instant transfers so re-admission can beat the stale step
+    kvx.bandwidth = 1e15
+    kvx.latency = 1e-7
+    e0, e1 = engines
+    reqs = [Request(prompt_len=32, max_new_tokens=400) for _ in range(4)]
+    for r in reqs:
+        e0.submit(r)                     # all decode on e0
+    loop.run_until(0.05)
+    decoding = [r for r in reqs if r.state == RequestState.RUNNING
+                and r in e0.scheduler.running]
+    assert decoding                      # mid-flight on e0
+    e0.set_param("role", "prefill")      # drains them to e1
+    before = e0.tokens_generated
+    loop.run_until(0.2)                  # stale e0 step lands in here
+    assert e0.tokens_generated == before  # no emission post-migration
+    for r in decoding:
+        assert r in e1.scheduler.running or r.state == RequestState.FINISHED
+    loop.run_until(120.0)
+    assert all(r.state == RequestState.FINISHED for r in reqs)
+    assert all(len(r.output_tokens) == r.max_new_tokens for r in reqs)
+    # e0's slots were never corrupted by a stale finish
+    assert e0.scheduler.slots_in_use() == 0
+
+
+def test_arrival_rehomes_when_pinned_engine_left_decode_duty():
+    """A handoff whose pinned decode engine flips to prefill while the
+    KV tail is on the wire must re-home to another decode engine, not
+    strand in that engine's backlog forever."""
+    loop, engines, kvx, pool = _fleet(("prefill", "decode", "decode"))
+    _guard_no_decode_on_prefill_role(engines)
+    r = Request(prompt_len=2048, max_new_tokens=8)
+    pool.submit(r)
+    rec = kvx.handoff_records[r.req_id]
+    pinned = rec.dst
+
+    def flip_pinned():
+        # flip the pinned target while the request is still in flight
+        # (prefilling or mid-transfer)
+        assert r.state != RequestState.FINISHED
+        self_eng = pool.engines[pinned]
+        self_eng.set_param("role", "prefill")
+    loop.call_at(0.01, flip_pinned)
+    loop.run_until(120.0)
+    assert r.state == RequestState.FINISHED
+    assert len(r.output_tokens) == r.max_new_tokens
+    assert not pool._backlog.get(pinned)       # nothing stranded there
+
+
+def test_flip_to_decode_drops_stale_handoff_records():
+    """A prefill engine flipped to decode grandfathers its mid-prefill
+    sequences (they decode in place); their open handoff sessions must
+    be dropped, not kept streaming to a stale destination."""
+    loop, engines, kvx, pool = _fleet(("prefill", "decode", "decode"))
+    engines[0].set_param("prefill_chunk", 64)
+    r = Request(prompt_len=4096, max_new_tokens=4)
+    pool.submit(r)
+    assert r.req_id in kvx.handoff_records
+
+    def flip():
+        assert 0 < r.prefilled < r.prompt_len   # genuinely mid-prefill
+        engines[0].set_param("role", "decode")
+        assert r.req_id not in kvx.handoff_records
+    loop.call_at(0.03, flip)
+    loop.run_until(120.0)
+    assert r.state == RequestState.FINISHED
+    assert not kvx.handoff_records
+
+
+def test_flip_to_unified_drops_stale_handoff_records():
+    """A prefill engine re-unified mid-prefill decodes its sequences in
+    place; their open handoff sessions must not leak records."""
+    loop, engines, kvx, pool = _fleet(("prefill", "decode"))
+    engines[0].set_param("prefill_chunk", 64)
+    r = Request(prompt_len=4096, max_new_tokens=4)
+    pool.submit(r)
+    assert r.req_id in kvx.handoff_records    # pre-pinned at submit
+
+    def reunify():
+        assert r.prefilled < r.prompt_len     # genuinely mid-prefill
+        engines[0].set_param("role", "unified")
+        assert r.req_id not in kvx.handoff_records
+    loop.call_at(0.02, reunify)
+    loop.run_until(60.0)
+    assert r.state == RequestState.FINISHED
+    assert not kvx.handoff_records
+
+
+# ---------------------------------------------------------------------------
+# Handoff pipeline end-to-end
+# ---------------------------------------------------------------------------
+
+def test_disagg_pool_end_to_end():
+    loop, engines, kvx, pool = _fleet(("prefill", "decode", "decode"))
+    _guard_no_decode_on_prefill_role(engines)
+    reqs = [Request(prompt_len=256, max_new_tokens=16) for _ in range(8)]
+    for r in reqs:
+        pool.submit(r)
+    loop.run_until(60.0)
+    assert all(r.state == RequestState.FINISHED for r in reqs)
+    assert all(len(r.output_tokens) == 16 for r in reqs)
+    assert pool.handoffs == 8
+    assert kvx.handoffs >= 8
+    # first token (TTFT) produced by the prefill engine
+    assert engines[0].tokens_generated == 8
+    assert engines[0].decode_steps == 0
+    # decode tail ran on the decode engines
+    assert engines[1].prefill_steps == 0 and engines[2].prefill_steps == 0
+    assert engines[1].tokens_generated + engines[2].tokens_generated \
+        == 8 * 15
+    # records are cleaned up after admission
+    assert not kvx.handoff_records
+
+
+def test_handoff_chunk_streaming_overlaps_prefill():
+    """With chunked prefill, KV chunks stream while later chunks are
+    still prefilling, so most bytes are on the wire before finish."""
+    loop, engines, kvx, pool = _fleet(("prefill", "decode"))
+    engines[0].set_param("prefill_chunk", 128)
+    streamed_at_finish = {}
+    orig = kvx.finish_handoff
+
+    def spy(req_id, src, dst, total, on_ready):
+        rec = kvx.handoff_records.get(req_id)
+        streamed_at_finish[req_id] = rec.streamed_tokens if rec else 0
+        return orig(req_id, src, dst, total, on_ready)
+    kvx.finish_handoff = spy
+    r = Request(prompt_len=1024, max_new_tokens=4)
+    pool.submit(r)
+    loop.run_until(30.0)
+    assert r.state == RequestState.FINISHED
+    # chunks for everything but the last prefill chunk streamed early
+    assert streamed_at_finish[r.req_id] >= 1024 - 128
+
+
+def test_unified_fleet_decodes_in_place():
+    loop, engines, kvx, pool = _fleet(("unified", "unified"))
+    reqs = [Request(prompt_len=64, max_new_tokens=8) for _ in range(4)]
+    for r in reqs:
+        pool.submit(r)
+    loop.run_until(30.0)
+    assert all(r.state == RequestState.FINISHED for r in reqs)
+    assert pool.handoffs == 0 and kvx.handoffs == 0
+
+
+def test_disagg_router_prepins_decode_engine():
+    loop, engines, kvx, pool = _fleet(("prefill", "decode", "decode"))
+    r = Request(prompt_len=128, max_new_tokens=4)
+    pool.submit(r)
+    # pre-pin opened a handoff session before any prefill happened
+    rec = kvx.handoff_records.get(r.req_id)
+    assert rec is not None and rec.src == "e0"
+    assert rec.dst in ("e1", "e2")
+    assert pool.router.disagg_routed == 1
+    loop.run_until(30.0)
+    assert r.state == RequestState.FINISHED
+
+
+# ---------------------------------------------------------------------------
+# Runtime role transitions (the dedicated ISSUE-4 acceptance test)
+# ---------------------------------------------------------------------------
+
+def test_role_transition_drains_safely_via_set():
+    """Flip roles mid-flight through set(): no request lost, no decode
+    on a prefill-role engine, every token emitted exactly once."""
+    loop, engines, kvx, pool = _fleet(("unified", "unified", "unified"))
+    _guard_no_decode_on_prefill_role(engines)
+    reqs = [Request(prompt_len=128, max_new_tokens=48) for _ in range(12)]
+    for i, r in enumerate(reqs):
+        loop.call_at(0.005 * i, lambda r=r: pool.submit(r))
+    # mid-flight: specialize the fleet, then re-unify one engine
+    loop.call_at(0.1, lambda: engines[0].set_param("role", "prefill"))
+    loop.call_at(0.2, lambda: engines[1].set_param("role", "decode"))
+    loop.call_at(0.6, lambda: engines[1].set_param("role", "unified"))
+    loop.run_until(120.0)
+    assert all(r.state == RequestState.FINISHED for r in reqs)
+    # exactly-once token emission (no duplicates from drains/migrations)
+    assert all(len(r.output_tokens) == r.max_new_tokens for r in reqs)
+    assert all(r.generated == r.max_new_tokens for r in reqs)
+    assert pool.migrations > 0       # the flip really drained decodes
+
+
+def test_role_transition_via_intent_rule():
+    """The ISSUE-4 grammar: an event rule flips a role from a fleet
+    gauge, through the same knob surface."""
+    loop, engines, kvx, pool, controller = _fleet(
+        ("prefill", "decode", "decode"), with_controller=True)
+    _guard_no_decode_on_prefill_role(engines)
+    policy = compile_intent(
+        "rule surge on cluster.prefill_pressure > 2 hold 1:\n"
+        "    => set engine e1.role prefill\n")
+    controller.install(policy)
+    controller.start()
+    reqs = [Request(prompt_len=2048, max_new_tokens=8) for _ in range(24)]
+    loop.call_at(0.5, lambda: [pool.submit(r) for r in reqs])
+    loop.run_until(120.0)
+    assert policy.rules[0].fire_count >= 1
+    assert engines[1].role == "prefill"           # rule flipped it
+    assert all(r.state == RequestState.FINISHED for r in reqs)
+    assert all(len(r.output_tokens) == r.max_new_tokens for r in reqs)
+
+
+def test_flip_to_decode_bounces_waiting_prompts():
+    loop, engines, kvx, pool = _fleet(("unified", "unified"))
+    e0, e1 = engines
+    e0.set_param("paused", True)     # let work pile up un-admitted
+    # fill e0's waiting queue directly (bypassing the router)
+    reqs = [Request(prompt_len=64, max_new_tokens=4) for _ in range(3)]
+    for r in reqs:
+        e0.submit(r)
+    assert e0.scheduler.queue_len == 3
+    e0.set_param("role", "decode")   # waiting prompts bounce to e1
+    assert e0.scheduler.queue_len == 0
+    e0.set_param("paused", False)
+    loop.run_until(30.0)
+    assert all(r.state == RequestState.FINISHED for r in reqs)
+    assert e0.prefill_steps == 0     # e1 prefilled everything
+
+
+# ---------------------------------------------------------------------------
+# RoleBalancerPolicy
+# ---------------------------------------------------------------------------
+
+def test_role_balancer_conscripts_and_releases():
+    loop, engines, kvx, pool, controller = _fleet(
+        ("prefill", "decode", "decode"), with_controller=True)
+    pol = RoleBalancerPolicy(
+        [e.name for e in engines], pressure_hi=1.0, pressure_lo=0.05,
+        min_prefill=1, min_decode=1, dwell=0.2, release_dwell=0.2,
+        window=0.3, slot_profile={"prefill": 8, "decode": 8})
+    controller.install(pol)
+    controller.start()
+    # sustained prefill flood: pressure >> hi
+    reqs = [Request(prompt_len=2048, max_new_tokens=4) for _ in range(64)]
+    for i, r in enumerate(reqs):
+        loop.call_at(0.02 * i, lambda r=r: pool.submit(r))
+    loop.run_until(8.0)
+    ups = [f for f in pol.flips if f[2] == "prefill"]
+    assert ups, "sustained pressure must conscript a prefill engine"
+    loop.run_until(120.0)
+    assert all(r.state == RequestState.FINISHED for r in reqs)
+    downs = [f for f in pol.flips if f[2] == "decode"]
+    assert downs, "cleared pressure must release it back to decode"
+    # guard rails held throughout: fleet never lost its decode path
+    roles = pool.roles()
+    assert any(r != "prefill" for r in roles.values())
+
+
+def test_fleet_aggregate_publishes_cluster_gauges():
+    bus = MetricBus()
+    col = Collector("t", bus=bus)
+    agg = FleetAggregate(col, prefix="cluster")
+    agg.watch("q", ["a.x", "b.x"], how="sum")
+    agg.watch("m", ["a.x", "b.x"], how="mean", scale=2.0)
+    col.gauge("a.x", 3.0, 1.0)
+    assert col.last("cluster.q") == 3.0
+    col.gauge("b.x", 5.0, 2.0)
+    assert col.last("cluster.q") == 8.0
+    assert col.last("cluster.m") == 8.0          # mean 4 * scale 2
+    # cluster gauges themselves ride the bus (intent triggers see them)
+    fired = []
+    bus.subscribe("cluster.q", above=7.0, fn=lambda n, v, t: fired.append(v))
+    col.gauge("a.x", 4.0, 3.0)
+    assert fired == [9.0]
+
+
+def test_fleet_aggregate_requires_bus():
+    with pytest.raises(ValueError):
+        FleetAggregate(Collector("t"))
+
+
+# ---------------------------------------------------------------------------
+# intent selector sugar
+# ---------------------------------------------------------------------------
+
+def test_intent_engine_selector_desugars():
+    pol = compile_intent(
+        "rule r1: when last(engine e3.prefill_queue_tokens) > 5 "
+        "=> set engine e3.role prefill; reset engine e3.max_num_seqs\n")
+    term = pol.rules[0].cond.terms[0]
+    assert term.metric == "e3.prefill_queue_tokens"   # selector dropped
+
+
+def test_workflow_pipeline_builds_role_typed_pool():
+    """TierSpec.roles turns a tier into a role-typed pool: stage calls
+    prefill on the prefill replica and decode elsewhere, end to end
+    through the workflow plane."""
+    from repro.agents.graph import map_reduce
+    from repro.agents.pipeline import (AgenticPipeline, TierSpec,
+                                       WorkflowConfig)
+    from repro.agents.workloads import GraphBurst
+    cfg = WorkflowConfig(tiers={
+        "large": TierSpec("agent-7b", chips=4, replicas=3, slots=16,
+                          roles=("prefill", "decode", "decode"))},
+        router_policy="least_loaded")
+    wp = AgenticPipeline.build(map_reduce(width=4), cfg)
+    _guard_no_decode_on_prefill_role(
+        [w.engine for w in wp.workers])
+    burst = GraphBurst(wp, 6, prompt_tokens=128, stagger=0.05)
+    burst.start()
+    wp.run(until=300.0)
+    assert len(wp.done) == 6
+    pool = wp.disagg_pools["large"]
+    assert pool.handoffs > 0
+    assert wp.workers[0].engine.decode_steps == 0     # prefill replica
+    # the pool's cluster gauges are namespaced per tier
+    assert pool.fleet is not None
+    assert all(w.startswith("cluster.large.") for w in pool.fleet.watches)
+
+
+def test_costmodel_handoff_time_overlap():
+    cm = CostModel(get_config("agent-7b"), chips=4)
+    raw = cm.handoff_time(2048, bandwidth=1e9, latency=1e-3)
+    assert raw > 1e-3
+    overlapped = cm.handoff_time(2048, bandwidth=1e9, latency=1e-3,
+                                 overlap_s=raw)
+    assert overlapped == pytest.approx(1e-3)      # floored at link latency
+    assert cm.handoff_time(2048, bandwidth=1e9, latency=1e-3,
+                           overlap_s=raw / 2) \
+        == pytest.approx(raw / 2, rel=1e-6)

@@ -9,7 +9,7 @@ import pytest
 
 from repro.agents import AgenticPipeline, PipelineConfig, ToolAgent
 from repro.core.dataplane import Channel
-from repro.core.knobs import ControlSurface, KnobSpec
+from repro.core.knobs import ControlSurface
 from repro.core.types import Granularity, Priority
 from repro.serving.engine_sim import SimEngine
 from repro.serving.router import Router

@@ -15,7 +15,7 @@ from repro import models
 from repro.configs import get_config, get_smoke
 from repro.configs.base import ShapeConfig
 from repro.launch import specs as specs_mod
-from repro.launch.dryrun import (_lin, _period, _scaled_cfg, _units_full,
+from repro.launch.dryrun import (_lin, _period, _scaled_cfg,
                                  collective_bytes, cpu_bf16_inflation,
                                  model_flops)
 from repro.launch.mesh import make_mesh

@@ -2,9 +2,8 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.optim.adamw import (AdamWConfig, Q8, _dequantize, _quantize,
+from repro.optim.adamw import (AdamWConfig, _dequantize, _quantize,
                                adamw_init, adamw_update)
 
 

@@ -3,13 +3,11 @@ of the three paper experiments plus speculative gating and the A2A
 protocol facade."""
 import statistics
 
-import pytest
 
 from repro.agents import (AgenticPipeline, PipelineConfig, TaskSpec,
                           WorkloadConfig)
-from repro.agents.workloads import (ClosedLoopClient, OpenLoopSource,
-                                    Phase, PhasedLoad, _dispatch_done,
-                                    launch_clients)
+from repro.agents.workloads import (OpenLoopSource, Phase, PhasedLoad,
+                                    _dispatch_done, launch_clients)
 from repro.core.policies import (AdaptiveGranularityPolicy,
                                  LoadBalancePolicy, SpeculativeGatePolicy)
 from repro.core.types import Granularity

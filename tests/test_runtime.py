@@ -1,7 +1,5 @@
 """Fault tolerance: supervised restart bit-exactness, heartbeats,
 stragglers, elastic scaling, serving failover."""
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -155,6 +155,73 @@ def test_preemption_picks_lowest_priority_youngest():
     assert victim in s.waiting
 
 
+def test_preempt_then_readmit_emits_each_token_once():
+    """Regression (ISSUE-4 satellite): preempt_one used to zero
+    ``generated``/``prefilled`` but keep ``output_tokens`` and
+    ``first_token_time``, so a re-admitted victim re-emitted its tokens
+    — duplicate output entries and a stale ttft stamp.  The victim's
+    emission record must reset with its progress counters."""
+    s = Scheduler(SchedulerConfig(max_slots=4, num_pages=12, page_size=128,
+                                  max_context=1024))
+    v = _req(prompt=256, gen=6, prio=Priority.LOW)
+    s.submit(v)
+    s.plan_step()
+    v.prefilled = v.prompt_len
+    v.state = RequestState.RUNNING
+    # it decoded a bit before eviction
+    v.generated = 3
+    v.output_tokens.extend([11, 12, 13])
+    v.first_token_time = 1.0
+    victim = s.preempt_one()
+    assert victim is v
+    assert v.generated == 0 and v.prefilled == 0
+    assert v.output_tokens == [] and v.first_token_time is None
+    # drive the re-admitted victim to completion: exactly-once emission
+    from repro.configs import get_config
+    from repro.serving.engine_sim import SimEngine
+    from repro.sim.clock import EventLoop
+    from repro.sim.costmodel import CostModel
+    loop = EventLoop()
+    eng = SimEngine(loop, CostModel(get_config("agent-7b"), chips=4),
+                    SchedulerConfig(max_slots=4, num_pages=64))
+    eng.submit(v)
+    loop.run_until(60.0)
+    assert v.state == RequestState.FINISHED
+    assert v.generated == v.max_new_tokens
+    assert len(v.output_tokens) == v.max_new_tokens   # no duplicates
+
+
+def test_preempt_readmit_end_to_end_no_duplicate_tokens():
+    """Same property through the live engine loop: victims preempted
+    mid-decode re-queue, re-prefill and re-decode; every finished
+    request's output must still be exactly max_new_tokens long."""
+    from repro.configs import get_config
+    from repro.serving.engine_sim import SimEngine
+    from repro.sim.clock import EventLoop
+    from repro.sim.costmodel import CostModel
+    loop = EventLoop()
+    eng = SimEngine(loop, CostModel(get_config("agent-7b"), chips=4),
+                    SchedulerConfig(max_slots=4, num_pages=64))
+    reqs = [Request(prompt_len=120, max_new_tokens=40, priority=p)
+            for p in (Priority.HIGH, Priority.NORMAL, Priority.LOW,
+                      Priority.LOW)]
+    for r in reqs:
+        eng.submit(r)
+
+    def evict():
+        v = eng.scheduler.preempt_one()   # mid-flight decode eviction
+        assert v is not None
+        eng.kick()
+    loop.call_at(0.05, evict)
+    loop.call_at(0.15, evict)
+    loop.run_until(300.0)
+    assert eng.scheduler.preempt_count == 2
+    assert all(r.state == RequestState.FINISHED for r in reqs)
+    for r in reqs:
+        assert len(r.output_tokens) == r.max_new_tokens
+        assert r.generated == r.max_new_tokens
+
+
 @settings(max_examples=60, deadline=None)
 @given(st.lists(st.tuples(st.integers(1, 300), st.integers(1, 20),
                           st.sampled_from(list(Priority))), min_size=1,

@@ -1,14 +1,13 @@
 """Serving layer: sim engine semantics, real JAX engine generation,
 KV extract/inject parity, router, KV transfer timing."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro import models
 from repro.configs import get_config
 from repro.core.metrics import Collector
-from repro.core.types import Message, Priority, Request, RequestState
+from repro.core.types import Message, Request, RequestState
 from repro.serving.engine import Engine
 from repro.serving.engine_sim import SimEngine
 from repro.serving.kv_transfer import KVTransferManager, SessionDirectory
@@ -152,15 +151,16 @@ def test_real_engine_kv_extract_inject_parity():
     while r.generated < 4:
         engA.step()
     state = engA.extract_state(r)
-    engA.scheduler.preempt_one()          # drop it from the source
     first4 = list(r.output_tokens)
-    r.generated = 4                        # preempt_one reset the counters
+    engA.scheduler.preempt_one()          # drop it from the source
+    assert r.output_tokens == []           # emission record fully reset
+    r.generated = 4                        # resume point rides the state
     r.prefilled = r.prompt_len
     ok = eng2.scheduler.admit_direct(r)
     assert ok
     eng2.inject_state(r, state)
     eng2.run_until_idle()
-    assert first4 + r.output_tokens[4:] == ref.output_tokens
+    assert first4 + r.output_tokens == ref.output_tokens
 
 
 # ---------------------------------------------------------------------------
@@ -250,10 +250,13 @@ def test_router_remove_instance_redispatches_held_and_drops_pins():
 
 def test_router_held_message_survives_remove_last_then_add():
     """A message held while the fleet is momentarily empty must be
-    re-dispatched when a replacement instance registers."""
+    re-dispatched when a replacement instance registers, and the
+    ``held_count`` gauge must make the whole window observable (the
+    failover-drill satellite)."""
     from repro.core.rules import RequestRule
     loop = EventLoop()
-    r = Router(loop, policy="static")
+    col = Collector()
+    r = Router(loop, policy="static", collector=col)
     a = _Sink("i0")
     r.add_instance(a)
     r.rules.install(RequestRule(session="s", block=True))
@@ -261,12 +264,35 @@ def test_router_held_message_survives_remove_last_then_add():
                    task_id="held")
     r.deliver(held)
     assert held in r._held
+    assert r.held_count == 1
+    assert col.last("router.held_count") == 1
     r.rules.remove_request_rules(lambda rule: rule.block)
     r.remove_instance("i0")              # fleet empty: nothing to pump to
     assert held in r._held
+    assert col.last("router.held_count") == 1
     b = _Sink("i1")
     r.add_instance(b)                    # replacement arrives
     assert b.msgs == [held] and not r._held
+    assert col.last("router.held_count") == 0
+
+
+def test_router_empty_fleet_holds_instead_of_crashing():
+    """Delivering into a momentarily-empty fleet (remove-last before the
+    replacement registers) holds the message rather than raising, so an
+    elastic-group failover never drops traffic."""
+    loop = EventLoop()
+    col = Collector()
+    r = Router(loop, policy="least_loaded", collector=col)
+    a = _Sink("i0")
+    r.add_instance(a)
+    r.remove_instance("i0")
+    m = Message(src="x", dst="r", payload={"session": "s"}, task_id="t")
+    r.deliver(m)                         # no instances: held, not raised
+    assert r.held_count == 1
+    assert col.last("router.held_count") == 1
+    b = _Sink("i1")
+    r.add_instance(b)
+    assert b.msgs == [m] and r.held_count == 0
 
 
 def test_kv_transfer_timing_and_residency():

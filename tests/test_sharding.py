@@ -2,10 +2,9 @@
 axes, cache specs.  Mesh-shape logic only — no multi-device runtime."""
 import jax
 import numpy as np
-import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.configs import get_config, get_smoke
+from repro.configs import get_config
 from repro.distributed import sharding as shd
 
 

@@ -7,7 +7,7 @@ import pytest
 
 from repro.agents.graph import (GraphError, GraphTask, WorkflowGraph,
                                 debate, deep_review, fig1, map_reduce)
-from repro.agents.stage import StageKind, StageSpec
+from repro.agents.stage import StageKind
 
 try:
     from hypothesis import given, settings
