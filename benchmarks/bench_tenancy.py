@@ -1,0 +1,240 @@
+"""Tenancy plane benchmark: does making *who is served next* a runtime
+knob pay under multi-tenant agentic traffic?
+
+Two arms at an EQUAL chip budget (2 engines x 4 chips), differing in a
+single knob — the scheduler queue ``discipline``:
+
+* ``fifo_priority``  — the classic order (priority, EDF, FIFO): one
+  noisy tenant's flood sits ahead of everyone who arrived later, which
+  is exactly the statically-encoded serving attribute the paper argues
+  against;
+* ``weighted_fair``  — start-time virtual-time fairness over tenants
+  (weights from the ``TenantDirectory``): the gold tenant's small
+  interactive requests sort ahead of the flood because its
+  served-tokens-per-weight lags, while priority/EDF still orders work
+  *within* each tenant.
+
+Three traffic shapes, measuring the gold tenant's p95 TTFT (the SLO
+under attack) and the fleet's aggregate decode throughput (fairness
+must not cost delivered output — same criterion as bench_disagg):
+
+* ``noisy_neighbor`` — a gold tenant's closed-loop interactive sessions
+  vs one batch tenant's open-loop flood of long prompts;
+* ``flash_crowd``    — a standard tenant's rate spikes 10x mid-run;
+* ``mixed_slo``      — gold + standard + batch tenants on a heavy-head
+  rate split, all at once.
+
+Acceptance (ISSUE 5): weighted_fair improves gold-tenant p95 TTFT by
+>=30% vs fifo_priority on >=2 of 3 shapes AND aggregate decode
+throughput never drops more than 5% below fifo_priority on any shape.
+
+    PYTHONPATH=src python benchmarks/bench_tenancy.py [--smoke]
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+_ROOT = Path(__file__).resolve().parent.parent
+for p in (str(_ROOT), str(_ROOT / "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+from benchmarks.common import Report, pctl  # noqa: E402
+from repro.agents.workloads import TenantLoad, TenantMix  # noqa: E402
+from repro.configs import get_config  # noqa: E402
+from repro.core.metrics import Collector, MetricBus  # noqa: E402
+from repro.core.registry import Registry  # noqa: E402
+from repro.core.tenancy import TenantDirectory, TenantSpec  # noqa: E402
+from repro.serving.disagg import DisaggPool  # noqa: E402
+from repro.serving.engine_sim import SimEngine  # noqa: E402
+from repro.serving.kv_transfer import (KVTransferManager,  # noqa: E402
+                                       SessionDirectory)
+from repro.serving.scheduler import SchedulerConfig  # noqa: E402
+from repro.sim.clock import EventLoop  # noqa: E402
+from repro.sim.costmodel import CostModel  # noqa: E402
+
+N_ENGINES = 2
+CHIPS_PER_ENGINE = 4                  # 8-chip budget per arm
+SLOTS = 8
+ARMS = ("fifo_priority", "weighted_fair")
+
+
+class _Fleet:
+    """One arm: engines + DisaggPool + tenant directory."""
+
+    def __init__(self, discipline: str, specs: list[TenantSpec]):
+        self.loop = EventLoop()
+        self.bus = MetricBus()
+        self.collector = Collector("bench", bus=self.bus)
+        self.registry = Registry()
+        self.tenants = TenantDirectory(collector=self.collector,
+                                       registry=self.registry)
+        for spec in specs:
+            self.tenants.add(spec)
+        cm = CostModel(get_config("agent-7b"), chips=CHIPS_PER_ENGINE)
+        self.engines = []
+        for i in range(N_ENGINES):
+            eng = SimEngine(
+                self.loop, cm,
+                SchedulerConfig(max_slots=SLOTS, num_pages=4096,
+                                max_context=4096, max_batch_tokens=2048,
+                                prefill_chunk=512),
+                name=f"e{i}", collector=self.collector)
+            # the arm differs in ONE knob, set through the Table-1
+            # surface like any controller would
+            eng.set_param("discipline", discipline)
+            self.engines.append(eng)
+            self.registry.register(eng)
+        kvx = KVTransferManager(self.loop, SessionDirectory(),
+                                bytes_fn=cm.kv_transfer_bytes,
+                                collector=self.collector)
+        self.pool = DisaggPool(self.loop, self.engines, kvx,
+                               collector=self.collector,
+                               tenants=self.tenants)
+
+
+def _shape_loads(shape: str, smoke: bool):
+    """(tenant specs, loads, mid-run mutator) per traffic shape."""
+    gold_spec = TenantSpec("gold", weight=4.0, slo_class="gold",
+                           p95_ttft_target=0.5)
+    if shape == "noisy_neighbor":
+        specs = [gold_spec, TenantSpec("noisy", weight=0.5,
+                                       slo_class="batch")]
+        loads = [
+            TenantLoad("gold", slo_class="gold", mode="closed", sessions=6,
+                       think=0.05, prompt=128, gen=96),
+            TenantLoad("noisy", slo_class="batch", mode="open",
+                       rate=(40.0 if smoke else 60.0),
+                       prompt=1024, gen=64),
+        ]
+        return specs, loads, None
+    if shape == "flash_crowd":
+        specs = [gold_spec, TenantSpec("crowd", weight=1.0)]
+        crowd = TenantLoad("crowd", mode="open", rate=6.0,
+                           prompt=768, gen=48)
+        loads = [
+            TenantLoad("gold", slo_class="gold", mode="closed", sessions=6,
+                       think=0.05, prompt=128, gen=96),
+            crowd,
+        ]
+
+        def mutate(loop, horizon):
+            # 10x spike through the middle third of the run
+            loop.call_at(horizon * 0.3,
+                         lambda: setattr(crowd, "rate", 60.0))
+            loop.call_at(horizon * 0.6,
+                         lambda: setattr(crowd, "rate", 6.0))
+        return specs, loads, mutate
+    if shape == "mixed_slo":
+        specs = [
+            gold_spec,
+            TenantSpec("std-0", weight=1.0),
+            TenantSpec("std-1", weight=1.0),
+            TenantSpec("batch-0", weight=0.25, slo_class="batch"),
+            TenantSpec("batch-1", weight=0.25, slo_class="batch"),
+        ]
+        scale = 0.75 if smoke else 1.0
+        loads = [
+            TenantLoad("gold", slo_class="gold", mode="closed", sessions=4,
+                       think=0.05, prompt=128, gen=96),
+            TenantLoad("std-0", mode="open", rate=16.0 * scale,
+                       prompt=512, gen=32),
+            TenantLoad("std-1", mode="open", rate=8.0 * scale,
+                       prompt=512, gen=32),
+            TenantLoad("batch-0", slo_class="batch", mode="open",
+                       rate=48.0 * scale, prompt=1024, gen=48),
+            TenantLoad("batch-1", slo_class="batch", mode="open",
+                       rate=24.0 * scale, prompt=1024, gen=48),
+        ]
+        return specs, loads, None
+    raise ValueError(shape)
+
+
+def run_arm(arm: str, shape: str, smoke: bool) -> dict:
+    horizon = 8.0 if smoke else 20.0
+    specs, loads, mutate = _shape_loads(shape, smoke)
+    fleet = _Fleet(arm, specs)
+    mix = TenantMix(fleet.loop, fleet.pool.submit, loads,
+                    t_end=horizon, seed=0)
+    TenantMix.wire_pool(fleet.pool)
+    if mutate is not None:
+        mutate(fleet.loop, horizon)
+    mix.start()
+    fleet.loop.run_until(horizon)
+    now = fleet.loop.now()
+
+    def ttfts(tenant: str) -> list[float]:
+        out = []
+        for r in mix.requests[tenant]:
+            if r.first_token_time is not None:
+                out.append(r.first_token_time - r.arrival_time)
+            else:
+                out.append(now - r.arrival_time)   # censored: still waiting
+        return out
+
+    served = {t: fleet.tenants.get(t).served_tokens
+              for t in fleet.tenants.names()}
+    total_served = sum(served.values())
+    gold = ttfts("gold")
+    decode_tokens = sum(e.tokens_generated for e in fleet.engines)
+    return {
+        "gold_p95_ttft": pctl(gold, 0.95),
+        "gold_mean_ttft": sum(gold) / max(len(gold), 1),
+        "gold_requests": len(gold),
+        "gold_share": served.get("gold", 0.0) / max(total_served, 1.0),
+        "decode_tok_s": decode_tokens / horizon,
+        "served_tok_s": total_served / horizon,
+        "requests": sum(len(v) for v in mix.requests.values()),
+        "preemptions": sum(e.scheduler.preempt_count
+                           for e in fleet.engines),
+    }
+
+
+def main(smoke: bool = False):
+    report = Report("tenancy plane: fifo_priority vs weighted_fair "
+                    "(equal 8-chip budget)")
+    shapes = ("noisy_neighbor", "flash_crowd", "mixed_slo")
+    gains, tput_ok = [], []
+    for shape in shapes:
+        res = {arm: run_arm(arm, shape, smoke) for arm in ARMS}
+        base = res["fifo_priority"]
+        for arm in ARMS:
+            r = res[arm]
+            report.add(
+                f"{shape}/{arm}",
+                gold_p95_ttft_s=round(r["gold_p95_ttft"], 4),
+                gold_mean_ttft_s=round(r["gold_mean_ttft"], 4),
+                gold_share_pct=round(100 * r["gold_share"], 1),
+                decode_tok_s=round(r["decode_tok_s"], 0),
+                served_tok_s=round(r["served_tok_s"], 0),
+                requests=r["requests"],
+                gold_requests=r["gold_requests"],
+                ttft_gain_pct=round(
+                    100 * (1 - r["gold_p95_ttft"] / base["gold_p95_ttft"]),
+                    1),
+                tput_vs_fifo_pct=round(
+                    100 * (r["decode_tok_s"] / base["decode_tok_s"] - 1), 1))
+        wf = res["weighted_fair"]
+        gain = 1 - wf["gold_p95_ttft"] / base["gold_p95_ttft"]
+        keeps = wf["decode_tok_s"] >= 0.95 * base["decode_tok_s"]
+        gains.append((shape, gain))
+        tput_ok.append((shape, keeps))
+    passing = [s for s, g in gains if g >= 0.30]
+    report.note("weighted_fair gold p95-TTFT gain vs fifo_priority: "
+                + ", ".join(f"{s}={g*100:.1f}%" for s, g in gains))
+    report.note("aggregate throughput no worse than 5% below "
+                "fifo_priority: "
+                + ", ".join(f"{s}={'yes' if k else 'NO'}"
+                            for s, k in tput_ok))
+    ok = len(passing) >= 2 and all(k for _, k in tput_ok)
+    report.note(f"acceptance (>=30% gold p95-TTFT on >=2/3 shapes, "
+                f"aggregate tput no worse than -5%): "
+                f"{'PASS' if ok else 'FAIL'} "
+                f"({len(passing)}/3 TTFT: {passing})")
+    return report
+
+
+if __name__ == "__main__":
+    rep = main(smoke="--smoke" in sys.argv)
+    print(rep.render())

@@ -4,13 +4,13 @@ from repro.agents.graph import (GraphTask, WorkflowGraph, debate,
 from repro.agents.pipeline import (AgenticPipeline, PipelineConfig, TaskSpec,
                                    TierSpec, WorkflowConfig, WorkflowPipeline)
 from repro.agents.stage import StageAgent, StageKind, StageSpec
-from repro.agents.workloads import (ClosedLoopClient, GraphBurst,
-                                    WorkloadConfig)
+from repro.agents.workloads import (ClosedLoopClient, GraphBurst, TenantLoad,
+                                    TenantMix, WorkloadConfig)
 
 __all__ = [
     "AgenticPipeline", "ClosedLoopClient", "DeveloperAgent", "GraphBurst",
     "GraphTask", "PipelineConfig", "StageAgent", "StageKind", "StageSpec",
-    "TaskSpec", "TesterAgent", "TierSpec", "ToolAgent", "WorkflowConfig",
-    "WorkflowGraph", "WorkflowPipeline", "WorkloadConfig", "debate",
-    "deep_review", "fig1", "map_reduce",
+    "TaskSpec", "TenantLoad", "TenantMix", "TesterAgent", "TierSpec",
+    "ToolAgent", "WorkflowConfig", "WorkflowGraph", "WorkflowPipeline",
+    "WorkloadConfig", "debate", "deep_review", "fig1", "map_reduce",
 ]

@@ -11,6 +11,11 @@ low) for the Fig-6 adaptive-switching experiment.
 ``GraphBurst`` — the workflow-plane arrival pattern: N ``GraphTask``s
 submitted to a ``WorkflowPipeline`` in a (possibly staggered) burst, so
 queues form and cross-stage scheduling order actually matters.
+
+``TenantMix`` — the tenancy-plane arrival pattern: per-tenant open
+(Poisson) or closed (session) loops submitting tenant-stamped
+``Request``s straight at a serving pool, with a heavy-head Zipf helper
+for the many-small-tenants shape real multi-tenant fleets see.
 """
 from __future__ import annotations
 
@@ -19,6 +24,7 @@ from dataclasses import dataclass
 
 from repro.agents.graph import GraphTask
 from repro.agents.pipeline import AgenticPipeline, TaskSpec
+from repro.core.types import Priority, Request, SLOClass
 
 
 @dataclass
@@ -163,6 +169,116 @@ class GraphBurst:
             self.p.loop.call_at(t, lambda task=task: self.p.submit(task))
             if self.stagger > 0:
                 t += self.rng.expovariate(1.0 / self.stagger)
+
+
+@dataclass
+class TenantLoad:
+    """One tenant's traffic shape inside a ``TenantMix``."""
+
+    tenant: str
+    slo_class: str = SLOClass.STANDARD.value
+    mode: str = "open"               # open (Poisson) | closed (sessions)
+    rate: float = 4.0                # open: requests/s (live-tunable —
+                                     # rescheduling reads it each arrival)
+    sessions: int = 4                # closed: concurrent sessions
+    think: float = 0.25              # closed: think time between requests
+    prompt: int = 256
+    gen: int = 64
+    priority: Priority = Priority.NORMAL
+
+
+class TenantMix:
+    """Multi-tenant arrival generator: each ``TenantLoad`` runs its own
+    open (Poisson) or closed (think-time session) loop, submitting
+    tenant-stamped ``Request``s through ``submit_fn``.  Closed loops
+    re-arm from ``req.meta['on_done']`` — wire the serving pool's finish
+    callback with ``TenantMix.wire_pool(pool)``.  Open-loop rates are
+    read on every reschedule, so a driver can reshape a tenant's load
+    mid-run (flash crowds) by assigning ``load.rate``."""
+
+    def __init__(self, loop, submit_fn, loads: list[TenantLoad],
+                 t_end: float = float("inf"), seed: int = 0):
+        self.loop = loop
+        self.submit_fn = submit_fn
+        self.loads = loads
+        self.t_end = t_end
+        self.rng = random.Random(seed)
+        self.requests: dict[str, list[Request]] = {
+            ld.tenant: [] for ld in loads}
+
+    # -- zipf helper ---------------------------------------------------------
+    @classmethod
+    def zipf(cls, loop, submit_fn, n_tenants: int, total_rate: float,
+             alpha: float = 1.1, t_end: float = float("inf"), seed: int = 0,
+             prompt: int = 256, gen: int = 64) -> "TenantMix":
+        """Heavy-head Zipf over N open-loop tenants: tenant *i* arrives
+        at a rate ∝ 1/(i+1)^alpha, normalized to ``total_rate``."""
+        raw = [1.0 / (i + 1) ** alpha for i in range(n_tenants)]
+        z = sum(raw)
+        loads = [TenantLoad(f"t{i}", rate=total_rate * w / z,
+                            prompt=prompt, gen=gen)
+                 for i, w in enumerate(raw)]
+        return cls(loop, submit_fn, loads, t_end=t_end, seed=seed)
+
+    # -- drive ---------------------------------------------------------------
+    RATE_PROBE = 0.25            # quiesced-loop poll for a rate restore
+
+    def start(self) -> None:
+        for ld in self.loads:
+            if ld.mode == "open":
+                self._schedule_open(
+                    ld, (self.rng.expovariate(ld.rate) if ld.rate > 0
+                         else self.RATE_PROBE))
+            else:
+                for _ in range(ld.sessions):
+                    self._arm_closed(
+                        ld, delay=self.rng.uniform(0, max(ld.think, 0.01)))
+
+    def _make(self, ld: TenantLoad) -> Request:
+        r = Request(prompt_len=ld.prompt, max_new_tokens=ld.gen,
+                    priority=ld.priority, tenant=ld.tenant,
+                    slo_class=ld.slo_class)
+        self.requests[ld.tenant].append(r)
+        return r
+
+    def _schedule_open(self, ld: TenantLoad, dt: float) -> None:
+        t = self.loop.now() + dt
+        if t >= self.t_end:
+            return
+        self.loop.call_at(t, lambda: self._tick_open(ld))
+
+    def _tick_open(self, ld: TenantLoad) -> None:
+        if ld.rate > 0:
+            self.submit_fn(self._make(ld))
+            self._schedule_open(ld, self.rng.expovariate(ld.rate))
+        else:
+            # quiesced (rate set to 0 mid-run): keep a probe timer alive
+            # so restoring the rate revives the loop
+            self._schedule_open(ld, self.RATE_PROBE)
+
+    def _arm_closed(self, ld: TenantLoad, delay: float) -> None:
+        def go():
+            if self.loop.now() >= self.t_end:
+                return
+            r = self._make(ld)
+            r.meta["on_done"] = lambda: self._arm_closed(
+                ld, ld.think * (1 + self.rng.uniform(-0.3, 0.3)))
+            self.submit_fn(r)
+        self.loop.call_after(max(delay, 0.0), go)
+
+    @staticmethod
+    def wire_pool(pool) -> None:
+        """Chain the pool's finish callback to the closed loops'
+        ``on_done`` re-arm hook (keeps any existing callback)."""
+        prev = pool.on_finish
+
+        def _done(req, t):
+            cb = req.meta.get("on_done")
+            if cb is not None:
+                cb()
+            if prev is not None:
+                prev(req, t)
+        pool.on_finish = _done
 
 
 @dataclass

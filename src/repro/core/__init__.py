@@ -5,6 +5,8 @@
 * control plane — core/controller.py + core/registry.py + core/rules.py
 * intents       — core/intent.py   (declarative policy language)
 * policies      — core/policies.py (Fig 6/7 control programs)
+* tenancy plane — core/tenancy.py  (tenant specs, fair-share weights,
+                  admission buckets, per-tenant SLO rollups)
 """
 from repro.core.controller import (Action, ControlContext, Controller,
                                    Policy)
@@ -17,14 +19,16 @@ from repro.core.metrics import (AGGREGATIONS, CentralPoller, Collector,
                                 ThresholdSub, register_aggregation)
 from repro.core.registry import Registry
 from repro.core.rules import AgentRule, RequestRule, RuleTable
+from repro.core.tenancy import TenantDirectory, TenantEntry, TenantSpec
 from repro.core.types import (AgentCard, Granularity, Message, Priority,
-                              Request, RequestState)
+                              Request, RequestState, SLOClass)
 
 __all__ = [
     "AGGREGATIONS", "Action", "AgentCard", "AgentRule", "CentralPoller",
     "Channel", "Collector", "ControlContext", "ControlSurface", "Controller",
     "Granularity", "IntentError", "IntentPolicy", "KnobSpec", "Message",
     "MetricBus", "MetricSpec", "Policy", "Priority", "Registry", "Request",
-    "RequestRule", "RequestState", "RuleTable", "StateStore", "ThresholdSub",
+    "RequestRule", "RequestState", "RuleTable", "SLOClass", "StateStore",
+    "TenantDirectory", "TenantEntry", "TenantSpec", "ThresholdSub",
     "Trigger", "compile_intent", "register_aggregation",
 ]

@@ -24,9 +24,11 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Callable, Optional
 
+import fnmatch
+
 from repro.core.metrics import CentralPoller, MetricBus, StateStore
 from repro.core.registry import Registry
-from repro.core.rules import RequestRule, RuleTable
+from repro.core.rules import AgentRule, RequestRule, RuleTable
 from repro.core.types import Granularity
 from repro.sim.clock import EventLoop
 
@@ -93,6 +95,47 @@ class ControlContext:
     def install(self, rule) -> None:
         self._c.rules.install(rule)
         self._c._log("rule", getattr(rule, "target", "request"), repr(rule))
+        if isinstance(rule, AgentRule):
+            self._apply_agent_rule(rule)
+
+    def _apply_agent_rule(self, rule: AgentRule) -> None:
+        """Installing an AgentRule IS a batch of ``set()`` calls (the
+        rules module's contract): the channel knobs land on every
+        registered channel matching ``target``, and
+        ``admit_priority_min`` lands on those channels' *destination
+        engines* — rules.py documents it as "applied to the dst engine",
+        but ``knob_updates()`` (channel knobs only) silently dropped
+        it."""
+        reg = self._c.registry
+        for name in reg.of_kind("channel"):
+            if not fnmatch.fnmatch(name, rule.target):
+                continue
+            for knob, value in rule.knob_updates().items():
+                self.set(name, knob, value)
+            if rule.admit_priority_min is None:
+                continue
+            dst = getattr(reg.get(name), "dst", None)
+            for eng in self._dst_engines(dst):
+                self.set(eng, "admit_priority_min",
+                         rule.admit_priority_min)
+
+    def _dst_engines(self, dst) -> list[str]:
+        """Registered engine names behind a channel destination: a
+        router fans out to its instances; a direct endpoint is its own
+        engine (agents register their engine under the agent's name)."""
+        if dst is None:
+            return []
+        cand = (list(getattr(dst, "instances", None) or ())
+                or [getattr(dst, "name", "")])
+        out = []
+        for n in cand:
+            try:
+                card = self._c.registry.card(n)
+            except KeyError:
+                continue
+            if "admit_priority_min" in card.knobs:
+                out.append(n)
+        return out
 
     def route(self, session: str, instance: str) -> None:
         """Pin a session to an instance (request-level rule)."""
@@ -212,6 +255,16 @@ class Controller:
 
     def attach_transfer(self, fn: Callable) -> None:
         self.transfer_fn = fn
+
+    def reapply_agent_rules(self) -> None:
+        """Re-apply every installed AgentRule against the *current*
+        registry: instances registered after install (autoscale
+        spawn-ups) receive the rules' knobs too, so a declared
+        admission floor keeps holding fleet-wide.  Idempotent —
+        ``ctx.set`` no-ops on values already held."""
+        ctx = ControlContext(self)
+        for rule in self.rules.agent_rules:
+            ctx._apply_agent_rule(rule)
 
     def attach_graph(self, graph) -> None:
         """Register the serving topology's workflow graph as a

@@ -22,6 +22,10 @@ internals; the compiler turns them into a closed-loop ``Policy``:
     # pressure (`engine NAME` selects the engine's registered knobs)
     rule surge on cluster.prefill_pressure > 2 hold 1:
         => set engine e3.role prefill
+    # tenancy plane: `tenant NAME` selects a registered tenant.<NAME>
+    # controllable / its exported tenant.<NAME>.* rollups
+    rule guard on tenant gold.p95_ttft > 1.5 hold 2:
+        => set tenant batch.weight 0.2
 
 Grammar (line oriented; '#' comments):
 
@@ -39,9 +43,11 @@ Grammar (line oriented; '#' comments):
               ``stage NAME.METRIC`` sugars to ``stage.NAME.METRIC``
               (the workflow plane's per-stage gauge namespace);
               ``engine NAME.METRIC`` sugars to ``NAME.METRIC``
-              (engines register unprefixed)
-    ACTION := set [stage|engine] TARGET.KNOB VALUE
-            | reset [stage|engine] TARGET.KNOB
+              (engines register unprefixed);
+              ``tenant NAME.METRIC`` sugars to ``tenant.NAME.METRIC``
+              (the tenancy plane's per-tenant rollup namespace)
+    ACTION := set [stage|engine|tenant] TARGET.KNOB VALUE
+            | reset [stage|engine|tenant] TARGET.KNOB
             | granularity CHANNEL (batch|pipeline|stream)
             | route SESSION INSTANCE | pace CHANNEL SECONDS
             | scale GROUP (+N|-N|N) | gate CHANNEL (on|off)
@@ -157,10 +163,16 @@ _STAGE_SEL_RE = re.compile(r"\bstage\s+(?=[\w\-]+\.)")
 # selector word simply drops, keeping rules like
 # `on cluster.prefill_pressure > 2 => set engine e3.role prefill` readable
 _ENGINE_SEL_RE = re.compile(r"\bengine\s+(?=[\w\-]+\.)")
+# tenancy-plane sugar: `tenant gold.p95_ttft` names the series
+# `tenant.gold.p95_ttft` (and, in set/reset, the `tenant.gold`
+# controllable) — same shape as the stage selector
+_TENANT_SEL_RE = re.compile(r"\btenant\s+(?=[\w\-]+\.)")
 
 
 def _desugar_stage(text: str) -> str:
-    return _ENGINE_SEL_RE.sub("", _STAGE_SEL_RE.sub("stage.", text))
+    text = _STAGE_SEL_RE.sub("stage.", text)
+    text = _TENANT_SEL_RE.sub("tenant.", text)
+    return _ENGINE_SEL_RE.sub("", text)
 
 
 def _parse_cond(text: str, lineno: int) -> Cond:

@@ -283,6 +283,27 @@ class FleetAggregate:
                                          edge=False, fn=_update)
         self.watches.append(out)
 
+    def watch_window(self, name: str, member: str, how: str = "p95",
+                     window: float = math.inf, scale: float = 1.0) -> None:
+        """Like ``watch``, but over ONE member's recent ring *window*
+        rather than many members' freshest values — for rollups that
+        need the sample distribution, not a fleet snapshot.  The
+        tenancy plane derives ``tenant.<t>.p95_ttft`` from the raw
+        ``tenant.<t>.ttft`` observations this way, so intent triggers
+        (``on tenant gold.p95_ttft > 1.5``) ride the ordinary push
+        tier."""
+        agg = AGGREGATIONS[how]
+        out = f"{self.prefix}.{name}"
+
+        def _update(_name: str, _value: float, t: float) -> None:
+            xs = [v for (_, v) in self.collector.read(member, t - window)]
+            if xs:
+                self.collector.gauge(out, agg(xs) * scale, t)
+
+        self.collector.bus.subscribe(member, predicate=lambda v: True,
+                                     edge=False, fn=_update)
+        self.watches.append(out)
+
 
 def ewma(alpha: float = 0.3) -> Callable[[list[float]], float]:
     def _fn(xs: list[float]) -> float:
@@ -398,6 +419,11 @@ _builtin("handoffs", "Cumulative number of prefill-to-decode KV handoffs.")
 _builtin("handoff_bytes", "Cumulative bytes of KV state moved by prefill-to-decode handoffs.")
 _builtin("saved_prefill_tokens", "Cumulative number of prompt tokens served from the prefix cache instead of re-prefilled.")
 _builtin("shared_pages", "Current number of KV pages held in shared (refcounted) prefix blocks.")
+_builtin("p95_ttft", "Windowed p95 time to first token in seconds; lower is better.")
+_builtin("share", "Windowed fraction of fleet tokens served to a tenant.")
+_builtin("throttle_rate", "Windowed fraction of a tenant's messages held by the admission meter; lower is better.")
+_builtin("admitted_tokens", "Cumulative number of tokens metered through a tenant's admission bucket.")
+_builtin("throttled", "Cumulative number of a tenant's messages held by the admission meter.")
 
 
 # ---------------------------------------------------------------------------

@@ -242,6 +242,80 @@ class SLOGuardPolicy(Policy):
             self.tightened = False
 
 
+class TenantGuardPolicy(Policy):
+    """Tenancy plane: keep a gold tenant's TTFT SLO by reshaping the
+    fleet's fairness state — bump the gold tenant's weighted-fair
+    ``weight`` and pause ``batch``-class tenants while the breach is
+    sustained; restore both once the SLO holds again with margin.  Acts
+    only through the registered ``tenant.<name>`` knobs, so the same
+    behaviour is expressible in intent as
+
+        rule guard on tenant gold.p95_ttft > 1.5 hold 2:
+            => set tenant gold.weight 8; set tenant batch.paused true
+
+    The p95 is computed from the raw ``tenant.<t>.ttft`` observations
+    in the store (window ``window``), so the policy works with or
+    without a MetricBus; ``sustain`` consecutive breaching ticks are
+    required before acting (transient spikes don't pause anyone).
+    """
+
+    name = "tenant-guard"
+
+    def __init__(self, gold: str, batch: list[str], slo_ttft: float,
+                 boost_weight: float = 8.0, window: float = 2.0,
+                 sustain: int = 3, clear_frac: float = 0.6,
+                 pause_batch: bool = True, prefix: str = "tenant"):
+        self.gold = gold
+        self.batch = batch
+        self.slo_ttft = slo_ttft
+        self.boost_weight = boost_weight
+        self.window = window
+        self.sustain = sustain              # consecutive breaching ticks
+        self.clear_frac = clear_frac        # hysteresis release threshold
+        self.pause_batch = pause_batch
+        self.prefix = prefix
+        self.tightened = False
+        self.breaches = 0
+        self.actions: list[tuple[float, str]] = []
+
+    def _p95(self, ctx: ControlContext) -> float:
+        return ctx.metric(f"{self.prefix}.{self.gold}.ttft", "p95",
+                          self.window, default=float("nan"))
+
+    def _relax(self, ctx: ControlContext) -> None:
+        ctx.reset(f"{self.prefix}.{self.gold}", "weight")
+        if self.pause_batch:
+            for b in self.batch:
+                ctx.reset(f"{self.prefix}.{b}", "paused")
+        self.tightened = False
+        self.breaches = 0
+        self.actions.append((ctx.now, "relax"))
+
+    def on_tick(self, ctx: ControlContext) -> None:
+        p95 = self._p95(ctx)
+        if p95 != p95:
+            # no gold samples in the window: nothing left to protect —
+            # a tightened guard must not leave batch tenants paused
+            # (= starved) forever after the gold traffic goes quiet
+            if self.tightened:
+                self._relax(ctx)
+            return
+        if p95 > self.slo_ttft:
+            self.breaches += 1
+        else:
+            self.breaches = 0
+        if self.breaches >= self.sustain and not self.tightened:
+            ctx.set(f"{self.prefix}.{self.gold}", "weight",
+                    self.boost_weight)
+            if self.pause_batch:
+                for b in self.batch:
+                    ctx.set(f"{self.prefix}.{b}", "paused", True)
+            self.tightened = True
+            self.actions.append((ctx.now, "tighten"))
+        elif self.tightened and p95 <= self.slo_ttft * self.clear_frac:
+            self._relax(ctx)
+
+
 class StageTierPolicy(Policy):
     """Workflow-plane tiering (Aragog-style): when a stage's p95 call
     latency breaches, shift its calls to the smaller model tier; when

@@ -42,10 +42,12 @@ class AgentRule:
 
 @dataclass
 class RequestRule:
-    """Routing / gating for requests matching (session, task, flags)."""
+    """Routing / gating for requests matching (session, task, tenant,
+    flags)."""
 
     session: str = "*"                      # glob over session ids
     task: str = "*"                         # glob over task ids
+    tenant: str = "*"                       # glob over tenant names
     speculative: Optional[bool] = None      # match only (non-)speculative
     route_to: Optional[str] = None          # instance name
     block: bool = False                     # hold until rule removed
@@ -56,6 +58,8 @@ class RequestRule:
         if not fnmatch.fnmatch(sess, self.session):
             return False
         if not fnmatch.fnmatch(msg.task_id or "", self.task):
+            return False
+        if not fnmatch.fnmatch(msg.tenant or "", self.tenant):
             return False
         if self.speculative is not None and msg.speculative != self.speculative:
             return False

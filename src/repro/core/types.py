@@ -31,6 +31,17 @@ class Priority(int, enum.Enum):
     INTERACTIVE = 3
 
 
+class SLOClass(str, enum.Enum):
+    """Service class of a tenant's traffic (the multi-tenant SLO plane's
+    coarse vocabulary): ``gold`` is latency-sensitive interactive work
+    with a TTFT target, ``standard`` is ordinary traffic, ``batch`` is
+    deferrable throughput work the controller may pause under pressure."""
+
+    GOLD = "gold"
+    STANDARD = "standard"
+    BATCH = "batch"
+
+
 class RequestState(str, enum.Enum):
     QUEUED = "queued"
     PREFILL = "prefill"
@@ -56,6 +67,11 @@ class Request:
     # leave every pre-graph call site's behaviour untouched.
     deadline: float = float("inf")
     stage: Optional[str] = None
+    # tenancy-plane metadata: which tenant issued the request and its
+    # service class.  Defaults leave every pre-tenancy call site's
+    # behaviour untouched (one implicit "default" tenant, standard SLO).
+    tenant: str = "default"
+    slo_class: str = SLOClass.STANDARD.value
     # engine-assigned
     state: RequestState = RequestState.QUEUED
     slot: int = -1
@@ -104,6 +120,10 @@ class Message:
     created_at: float = 0.0
     task_id: Optional[str] = None
     speculative: bool = False
+    # tenancy plane: stamped by the issuing workload / pool so routers
+    # can meter per-tenant admission ahead of the policy pick
+    tenant: str = "default"
+    slo_class: str = SLOClass.STANDARD.value
 
 
 @dataclass

@@ -92,6 +92,10 @@ class ElasticGroup(ControlSurface):
         if self.monitor is not None:
             from repro.runtime.heartbeat import attach_engine
             attach_engine(self.monitor, eng)
+        # installed agent-rules (e.g. an admit_priority_min floor) must
+        # hold for the new replica too — the rule table stays the
+        # source of truth across scale-ups
+        self.p.controller.reapply_agent_rules()
         self.spawned += 1
         self._publish_replicas()
         return name

@@ -62,14 +62,22 @@ class DisaggPool:
 
     def __init__(self, loop: EventLoop, engines: list[EngineCore],
                  kvx: KVTransferManager, collector=None,
-                 name: str = "disagg", cluster_prefix: str = "cluster"):
+                 name: str = "disagg", cluster_prefix: str = "cluster",
+                 tenants=None):
         self.loop = loop
         self.name = name
         self.engines = {e.name: e for e in engines}
         self.kvx = kvx
         self.collector = collector
+        self.tenants = tenants           # TenantDirectory | None
         self.router = Router(loop, f"{name}.router", policy="disagg",
-                             collector=collector)
+                             collector=collector, tenants=tenants)
+        self.router.on_dispatch = self._dispatched
+        if tenants is not None:
+            # one directory serves the fleet: schedulers read fairness
+            # weights, engines report per-tenant TTFT through it
+            for e in engines:
+                e.scheduler.attach_tenants(tenants)
         self._backlog: dict[str, list[tuple[Request, dict]]] = {}
         self.finished: list[Request] = []
         self.handoffs = 0
@@ -132,12 +140,33 @@ class DisaggPool:
         return pick_decode_engine(self.engines, exclude=exclude)
 
     # -- workload entry -----------------------------------------------------
-    def submit(self, req: Request, session: Optional[str] = None) -> None:
+    def submit(self, req: Request, session: Optional[str] = None,
+               _remeter: bool = True) -> None:
         msg = Message(src="client", dst=self.router.name,
                       payload={"request": req,
                                "session": session or req.req_id},
-                      task_id=req.req_id, created_at=self.loop.now())
+                      task_id=req.req_id, created_at=self.loop.now(),
+                      tokens=req.prompt_len,      # meter by prompt size
+                      tenant=req.tenant, slo_class=req.slo_class)
+        if not _remeter:
+            # internal re-route (role-flip bounce): already charged
+            # through the tenant bucket on first admission
+            self.router.exempt(msg.msg_id)
+        # the clock starts at submission: time held by the tenant meter
+        # is part of the request's TTFT/latency, not invisible to it
+        if not req.meta.get("arrived"):
+            req.meta["arrived"] = True
+            req.arrival_time = self.loop.now()
         self.router.deliver(msg)
+
+    def _dispatched(self, msg: Message, inst: str) -> None:
+        """Router dispatch hook: runs when the message actually lands on
+        an engine — including messages released from the throttle/held
+        queues later, whose pre-pin would otherwise never be consumed
+        (and the proactive handoff never opened)."""
+        req = (msg.payload or {}).get("request")
+        if req is None:
+            return
         pair = self.router.pair_for(req.req_id)
         if pair is not None:
             src, dst = pair
@@ -162,7 +191,7 @@ class DisaggPool:
                 f"{self.name}: {req.req_id} cannot reach a "
                 "prefill-capable engine (conflicting route rule?)")
         self.kvx.end_handoff(req.req_id)     # stale pre-pin, if any
-        self.submit(req)
+        self.submit(req, _remeter=False)
 
     # -- handoff state machine ----------------------------------------------
     def _prefill_done(self, eng: EngineCore, req: Request, t: float) -> None:

@@ -195,6 +195,8 @@ class EngineCore(ControlSurface):
             if r not in self.scheduler.running:
                 continue          # preempted / drained mid-flight
             r.prefilled += work.chunk
+            # fairness accounting charges actually-processed tokens
+            self.scheduler.charge(r, work.chunk, t)
             if r.prefilled < r.prompt_len:
                 if self.on_prefill_progress is not None:
                     # chunk-streamed handoff: push the KV computed so far
@@ -213,6 +215,9 @@ class EngineCore(ControlSurface):
                     if not r.meta.get("ttft_observed"):
                         r.meta["ttft_observed"] = True
                         self._observe("ttft", t - r.arrival_time)
+                        if self.scheduler.tenants is not None:
+                            self.scheduler.tenants.observe_ttft(
+                                r.tenant, t - r.arrival_time, t)
             if r.state is RequestState.RUNNING and self.role == "prefill":
                 if self.on_prefill_done is None:
                     # no handoff sink: the sequence could never decode
@@ -243,6 +248,7 @@ class EngineCore(ControlSurface):
         r.generated += 1
         r.output_tokens.append(tok)
         self.tokens_generated += 1
+        self.scheduler.charge(r, 1, t)
         if self.on_token is not None:
             self.on_token(r, tok, t)
         if r.done:

@@ -23,6 +23,13 @@ Messages delivered while the fleet is empty are held (with the blocked
 ones) and re-dispatched on the next ``add_instance`` — the
 ``<router>.held_count`` gauge makes that window observable.
 
+With a ``TenantDirectory`` attached, every message is metered through
+its tenant's token bucket *ahead of* the rule/policy pick: messages of
+a throttled (or paused) tenant are **held, never dropped**, and
+re-released when the bucket refills or a ``rate``/``paused`` knob moves
+— the ``<router>.throttled_count`` gauge tracks the held set, and the
+directory publishes the per-tenant ``throttle_rate`` rollups.
+
 Session affinity matters because the tester instances hold per-session
 KV state; the controller's LoadBalancePolicy re-pins sessions and pairs
 each re-pin with a KV transfer (serving/kv_transfer.py).
@@ -75,7 +82,8 @@ class Router(ControlSurface):
     def __init__(self, loop: EventLoop, name: str = "router",
                  rules: Optional[RuleTable] = None, policy: str = "static",
                  collector=None, cache_dir=None,
-                 prefix_fn: Optional[Callable[[Message], object]] = None):
+                 prefix_fn: Optional[Callable[[Message], object]] = None,
+                 tenants=None):
         self.loop = loop
         self.name = name
         self.rules = rules or RuleTable()
@@ -83,6 +91,15 @@ class Router(ControlSurface):
         self.collector = collector
         self.cache_dir = cache_dir               # CacheDirectory | None
         self.prefix_fn = prefix_fn               # Message -> prefix source
+        self.tenants = tenants                   # TenantDirectory | None
+        self._throttled: list[Message] = []      # held by the meter
+        self._throttle_seen: set[str] = set()    # counted-once msg ids
+        self._held_tenants: dict[str, int] = {}  # tenant -> held count
+        self._metered: set[str] = set()          # passed-the-bucket ids
+        self._pump_at = float("inf")             # pending refill-pump time
+        if tenants is not None:
+            # rate/burst/paused knob moves can unblock held traffic NOW
+            tenants.subscribe_release(self._pump_throttled)
         self.instances: dict[str, Endpoint] = {}
         self._loads: dict[str, object] = {}      # name -> load() callable
         self._tiers: dict[str, str] = {}         # name -> model-size tier
@@ -92,6 +109,8 @@ class Router(ControlSurface):
         self._pairs: dict[str, tuple[str, str]] = {}  # task -> (src, dst)
         self._rules_seen = -1
         self.routed: dict[str, int] = {}
+        self.on_dispatch = None                  # (msg, instance) hook,
+                                                 # fired at actual dispatch
         self.cache_routed = 0                    # picks won on prefix score
         self.tier_routed = 0                     # picks won on tier match
         self.disagg_routed = 0                   # picks won on role/depth
@@ -241,22 +260,106 @@ class Router(ControlSurface):
         session = (msg.payload or {}).get("session") or msg.task_id or ""
         return self._fallback(session, msg)
 
+    # -- tenancy meter (ahead of the rule/policy pick) -----------------------
+    def _tenant_admit(self, msg: Message) -> bool:
+        """Meter the message through its tenant's token bucket.  False =
+        held: the message sits in ``_throttled`` until the bucket
+        refills (timer) or a tenant knob moves (directory release
+        hook).  Held messages are never dropped."""
+        cost = max(msg.tokens, 1)
+        now = self.loop.now()
+        was_held = msg.msg_id in self._throttle_seen
+        # a tenant's older held messages drain first: a fresh arrival
+        # may not steal the refill out from under a large held message
+        # (which would starve it behind a stream of small ones)
+        jumps_queue = (not was_held
+                       and self._held_tenants.get(msg.tenant, 0) > 0)
+        if not jumps_queue and self.tenants.try_take(msg.tenant, cost, now):
+            if was_held:
+                self._throttle_seen.discard(msg.msg_id)
+                self._held_tenants[msg.tenant] -= 1
+            self._metered.add(msg.msg_id)
+            self.tenants.note_admitted(msg.tenant, cost, now)
+            return True
+        if not was_held:
+            # count each message once, not once per re-check
+            self._throttle_seen.add(msg.msg_id)
+            self._held_tenants[msg.tenant] = (
+                self._held_tenants.get(msg.tenant, 0) + 1)
+            self.tenants.note_throttled(msg.tenant, now)
+        self._throttled.append(msg)
+        self._gauge_throttled()
+        wait = self.tenants.time_until(msg.tenant, cost, now)
+        if wait != float("inf"):
+            # paused / zero-rate tenants have no refill horizon; their
+            # release rides the directory's knob-change hook instead.
+            # ONE pending pump per router: a flood of held messages must
+            # not schedule a timer (and a full re-scan) per message
+            at = now + max(wait, 1e-3)
+            if at < self._pump_at - 1e-12:
+                self._pump_at = at
+                self.loop.call_after(at - now, self._timed_pump)
+        return False
+
+    def _timed_pump(self) -> None:
+        self._pump_at = float("inf")
+        self._pump_throttled()
+
+    def exempt(self, msg_id: str) -> None:
+        """Mark a message as already metered, so delivering it bypasses
+        the tenant bucket — for traffic the fabric re-routes internally
+        (role-flip bounces), which was charged on first admission."""
+        self._metered.add(msg_id)
+
+    def _pump_throttled(self) -> None:
+        throttled, self._throttled = self._throttled, []
+        blocked: set[str] = set()
+        for msg in throttled:
+            if msg.tenant in blocked:
+                # this tenant's bucket already refused a message this
+                # round: keep FIFO order, skip the redundant re-meter
+                self._throttled.append(msg)
+                continue
+            before = len(self._throttled)
+            self.deliver(msg)
+            if len(self._throttled) > before:
+                blocked.add(msg.tenant)
+        self._gauge_throttled()
+
+    @property
+    def throttled_count(self) -> int:
+        return len(self._throttled)
+
+    def _gauge_throttled(self) -> None:
+        if self.collector is not None:
+            self.collector.gauge(f"{self.name}.throttled_count",
+                                 len(self._throttled), self.loop.now())
+
     def deliver(self, msg: Message) -> None:
         if self._rules_seen != self.rules.version:
             self._rules_seen = self.rules.version
             self._pump()
+        if (self.tenants is not None and msg.msg_id not in self._metered
+                and not self._tenant_admit(msg)):
+            return
         if self.rules.blocked(msg) or not self.instances:
             # blocked by rule, or the fleet is momentarily empty
             # (remove-last-then-add): hold until something can take it
+            # (already metered — a later re-check must not charge again)
             self._held.append(msg)
             self._gauge_held()
             return
+        self._metered.discard(msg.msg_id)
         inst = self.pick(msg)
         self.routed[inst] += 1
         if self.collector is not None:
             self.collector.counter(f"{self.name}.routed.{inst}", 1,
                                    self.loop.now())
         self.instances[inst].deliver(msg)
+        if self.on_dispatch is not None:
+            # post-deliver so callers observe the same synchronous order
+            # as a direct deliver (engine submitted, then the hook)
+            self.on_dispatch(msg, inst)
 
     def _pump(self) -> None:
         held, self._held = self._held, []

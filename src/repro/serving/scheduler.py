@@ -19,8 +19,20 @@ and allocated privately.  New blocks are registered when prefill
 completes (``commit_prefix``); capacity pressure evicts idle cache
 blocks before preempting running sequences.
 
+Who gets served next is itself a programmable attribute (the tenancy
+plane): the waiting-queue order, the admission gate and the preemption
+victim rule live in a pluggable ``QueueDiscipline`` selected by the
+``discipline`` knob — ``fifo_priority`` reproduces the classic
+priority/EDF order bit-exactly (the default), ``weighted_fair`` adds
+start-time virtual-time fairness across tenants (weights from an
+attached ``TenantDirectory``), with priority/EDF preserved *within* a
+tenant.  Engines charge actually-processed prefill+decode tokens back
+through ``Scheduler.charge`` so the fair-share accounting tracks real
+work, not request counts.
+
 All the ``set()``-able knobs the paper's Table-1 interface exposes live
-here: max_num_seqs, max_batch_tokens, prefill_chunk, admit_priority_min.
+here: max_num_seqs, max_batch_tokens, prefill_chunk, admit_priority_min,
+discipline.
 """
 from __future__ import annotations
 
@@ -52,6 +64,118 @@ class StepPlan:
     decodes: list[Request] = field(default_factory=list)
 
 
+class QueueDiscipline:
+    """Pluggable who-is-served-next policy: the waiting-queue sort key,
+    the preemption victim rule, and (for fairness disciplines) the
+    served-token accounting.  ``attach`` hands it the owning scheduler;
+    ``dynamic`` disciplines have keys that move between submits (served
+    tokens shift virtual time), so the scheduler re-sorts at every
+    admission pass instead of only on enqueue."""
+
+    name = "discipline"
+    dynamic = False
+
+    def attach(self, scheduler: "Scheduler") -> None:
+        self.sched = scheduler
+
+    def on_submit(self, req: Request) -> None:
+        """Called before ``req`` joins the waiting queue."""
+
+    def key(self, req: Request):
+        """Ascending waiting-queue sort key."""
+        raise NotImplementedError
+
+    def victim_key(self, req: Request):
+        """``min()`` over RUNNING candidates picks the preemption
+        victim."""
+        raise NotImplementedError
+
+    def charge(self, req: Request, tokens: int) -> None:
+        """Actual prefill/decode tokens processed for ``req``."""
+
+
+class FifoPriorityDiscipline(QueueDiscipline):
+    """The classic (pre-tenancy) order, bit-exact: priority first;
+    within a priority class EDF over the workflow plane's
+    edge-propagated deadlines, then longest-remaining-critical-path,
+    then FIFO.  Requests without a graph behind them keep deadline=inf
+    / cp=0, so the order degenerates to (-priority, arrival) for every
+    pre-graph caller.  Preemption evicts the lowest-priority youngest
+    running sequence."""
+
+    name = "fifo_priority"
+
+    def key(self, req: Request):
+        return (-int(req.priority), req.deadline,
+                -float(req.meta.get("cp_remaining", 0.0)), req.arrival_time)
+
+    def victim_key(self, req: Request):
+        return (int(req.priority), -req.arrival_time)
+
+
+class WeightedFairDiscipline(QueueDiscipline):
+    """Start-time virtual-time fair queueing over tenants (SFQ-style).
+
+    Each tenant accrues virtual time at ``served_tokens / weight``
+    (weights from the scheduler's attached ``TenantDirectory``; 1.0
+    when none).  The waiting queue orders by tenant virtual time —
+    the least-served-relative-to-weight tenant admits first — with the
+    full priority/EDF/critical-path/FIFO order preserved *within* a
+    tenant.  An idle tenant re-enters at the current virtual floor
+    (start-time rule): sleeping never banks credit, and stale debt from
+    a past solo-busy period is forgiven.  Preemption picks victims from
+    the most-over-share tenant first."""
+
+    name = "weighted_fair"
+    dynamic = True
+
+    def __init__(self):
+        self.vtime: dict[str, float] = {}
+
+    def _weight(self, tenant: str) -> float:
+        d = getattr(self.sched, "tenants", None)
+        if d is None:
+            return 1.0
+        return max(d.weight(tenant), 1e-3)
+
+    def on_submit(self, req: Request) -> None:
+        t = req.tenant
+        active = {r.tenant for r in self.sched.waiting}
+        active.update(r.tenant for r in self.sched.running)
+        if t in active:
+            # tenant already has queued/running work: its virtual time
+            # is live — re-flooring here would erase an underserved
+            # tenant's accrued lag (and neutralize the weight knob)
+            return
+        # idle -> active: re-enter AT the floor, both directions —
+        # sleeping banks no credit, and a past solo-heavy tenant's
+        # stale virtual-time debt is forgiven (fairness is about the
+        # current backlogged period, not history)
+        floor = min((self.vtime[u] for u in active if u in self.vtime),
+                    default=0.0)
+        self.vtime[t] = floor
+
+    def key(self, req: Request):
+        return (self.vtime.get(req.tenant, 0.0),
+                -int(req.priority), req.deadline,
+                -float(req.meta.get("cp_remaining", 0.0)), req.arrival_time)
+
+    def victim_key(self, req: Request):
+        return (-self.vtime.get(req.tenant, 0.0),
+                int(req.priority), -req.arrival_time)
+
+    def charge(self, req: Request, tokens: int) -> None:
+        t = req.tenant
+        self.vtime[t] = (self.vtime.get(t, 0.0)
+                         + tokens / self._weight(t))
+
+
+DISCIPLINES = {
+    "fifo_priority": FifoPriorityDiscipline,
+    "weighted_fair": WeightedFairDiscipline,
+}
+
+
 @dataclass
 class SchedulerConfig:
     max_slots: int = 8
@@ -70,6 +194,8 @@ class SchedulerConfig:
     # admit from the waiting queue (arrivals come through the handoff
     # `admit_direct` path); `unified` is the classic both-phases loop.
     role: str = "unified"             # unified | prefill | decode
+    # tenancy plane: the queue discipline deciding who is served next
+    discipline: str = "fifo_priority"  # fifo_priority | weighted_fair
 
 
 class Scheduler(ControlSurface):
@@ -95,14 +221,21 @@ class Scheduler(ControlSurface):
         KnobSpec("role", kind="str",
                  choices=("unified", "prefill", "decode"), attr="cfg.role",
                  doc="engine phase role: unified | prefill | decode"),
+        KnobSpec("discipline", kind="str",
+                 choices=tuple(DISCIPLINES), attr="cfg.discipline",
+                 on_change="_discipline_changed",
+                 doc="queue discipline: fifo_priority | weighted_fair"),
     )
 
     def __init__(self, cfg: SchedulerConfig, name: str = "scheduler",
-                 cache=None):
+                 cache=None, tenants=None):
         self.name = name
         self.cfg = cfg
         self.alloc = PageAllocator(cfg.num_pages, cfg.page_size)
         self.cache = cache               # Optional[PrefixCache] over alloc
+        self.tenants = tenants           # Optional[TenantDirectory]
+        self.discipline = DISCIPLINES[cfg.discipline]()
+        self.discipline.attach(self)
         self.waiting: list[Request] = []
         self.running: list[Request] = []
         self._free_slots = list(range(cfg.max_slots))
@@ -118,23 +251,42 @@ class Scheduler(ControlSurface):
         elif new < old:
             self._free_slots = [s for s in self._free_slots if s < new]
 
+    def _discipline_changed(self, old: str, new: str) -> None:
+        # fresh accounting on a switch: virtual time from a previous
+        # discipline instance has no meaning under the new one
+        self.discipline = DISCIPLINES[new]()
+        self.discipline.attach(self)
+        self._sort_waiting()
+
+    def attach_tenants(self, directory) -> None:
+        """Wire the fleet's TenantDirectory into the fairness path:
+        weighted_fair reads per-tenant weights, charge() reports served
+        tokens, and engines report per-tenant TTFT through it."""
+        self.tenants = directory
+
     # -- queue ops ---------------------------------------------------------------
     def submit(self, req: Request) -> None:
         req.state = RequestState.QUEUED
         if req.available < 0:
             req.available = req.prompt_len
+        self.discipline.on_submit(req)
         self.waiting.append(req)
         self._sort_waiting()
 
     def _sort_waiting(self) -> None:
-        # Priority first; within a priority class EDF over the workflow
-        # plane's edge-propagated deadlines, then longest-remaining-
-        # critical-path, then FIFO.  Requests without a graph behind
-        # them keep deadline=inf / cp=0, so the order degenerates to the
-        # original (-priority, arrival) for every pre-graph caller.
-        self.waiting.sort(key=lambda r: (
-            -int(r.priority), r.deadline,
-            -float(r.meta.get("cp_remaining", 0.0)), r.arrival_time))
+        # order is the discipline's call (sort is stable, so equal keys
+        # keep insertion order — the FIFO tail of every discipline)
+        self.waiting.sort(key=self.discipline.key)
+
+    def charge(self, req: Request, tokens: int, now: float = 0.0) -> None:
+        """Engines report actually-processed prefill/decode tokens here:
+        the discipline's fair-share accounting and the tenancy plane's
+        ``share`` rollups both track real work, not request counts."""
+        if tokens <= 0:
+            return
+        if self.tenants is not None:
+            self.tenants.note_served(req.tenant, tokens, now)
+        self.discipline.charge(req, tokens)
 
     @property
     def queue_len(self) -> int:
@@ -277,8 +429,7 @@ class Scheduler(ControlSurface):
                       if r.state == RequestState.RUNNING]
         if not candidates:
             return None
-        victim = min(candidates,
-                     key=lambda r: (int(r.priority), -r.arrival_time))
+        victim = min(candidates, key=self.discipline.victim_key)
         self._release(victim)
         victim.state = RequestState.PREEMPTED
         # cache dropped: the victim restarts from scratch on re-admit, so
@@ -299,14 +450,36 @@ class Scheduler(ControlSurface):
         self._sort_waiting()
         return victim
 
+    def _admission_pass(self) -> None:
+        """Admit from the head of the discipline-ordered waiting queue
+        while capacity lasts.  Paused tenants' requests are skipped (not
+        head-of-line blockers); with no TenantDirectory attached this
+        loop is bit-exact with the classic admit-while-admissible."""
+        if self.discipline.dynamic:
+            self._sort_waiting()         # served tokens moved the keys
+        held = []
+        while self.waiting:
+            head = self.waiting[0]
+            if self.tenants is not None and self.tenants.paused(head.tenant):
+                held.append(self.waiting.pop(0))
+                continue
+            if not self._admissible(head):
+                break
+            if not self._admit(self.waiting.pop(0)):
+                break
+        if held:
+            # restore discipline order: a plain front-insert would leave
+            # the skipped requests ahead of higher-priority work until
+            # the next submit happens to re-sort
+            self.waiting[:0] = held
+            self._sort_waiting()
+
     def plan_step(self) -> StepPlan:
         # 1. admit while capacity (decode engines only admit through the
         #    handoff path — their waiting queue is bounced by the fabric)
         if self.cfg.role != "decode" and (not self.cfg.decode_first
                                           or not self.running):
-            while self.waiting and self._admissible(self.waiting[0]):
-                if not self._admit(self.waiting.pop(0)):
-                    break
+            self._admission_pass()
         # 2. prefill work pending?  (only tokens that have *arrived* —
         #    under STREAM granularity the prompt trickles in and prefill
         #    overlaps the upstream agent's generation)

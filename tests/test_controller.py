@@ -108,6 +108,106 @@ def test_agent_rule_knob_updates():
     assert upd == {"granularity": Granularity.BATCH, "pace": 0.01}
 
 
+def test_rule_table_version_bumps_on_remove():
+    rt = RuleTable()
+    v0 = rt.version
+    rt.install(RequestRule(session="s0", route_to="i0"))
+    assert rt.version == v0 + 1
+    # remove bumps the version even when the predicate matches nothing —
+    # routers re-pump their held messages off this signal
+    rt.remove_request_rules(lambda r: False)
+    assert rt.version == v0 + 2
+    removed = rt.remove_request_rules(lambda r: r.route_to == "i0")
+    assert removed == 1
+    assert rt.version == v0 + 3
+    assert rt.route_for(_msg()) is None
+
+
+def test_rule_table_last_match_wins_across_fields():
+    rt = RuleTable()
+    rt.install(RequestRule(session="*", route_to="wide"))
+    rt.install(RequestRule(session="s0", route_to="narrow"))
+    rt.install(RequestRule(task="t0", route_to="by-task"))
+    # most recently installed matching rule wins, regardless of how
+    # specific an earlier rule was
+    assert rt.route_for(_msg(session="s0", task="t0")) == "by-task"
+    assert rt.route_for(_msg(session="s0", task="tX")) == "narrow"
+    assert rt.route_for(_msg(session="sX", task="tX")) == "wide"
+    # rules without route_to never win route_for
+    rt.install(RequestRule(session="s0", block=True))
+    assert rt.route_for(_msg(session="s0", task="tX")) == "narrow"
+
+
+def test_rule_table_blocked_and_route_interplay():
+    rt = RuleTable()
+    rt.install(RequestRule(session="s0", route_to="i0"))
+    rt.install(RequestRule(session="s0", block=True))
+    m = _msg(session="s0")
+    # a block rule holds the message even though a route rule matches:
+    # routers check blocked() first, so route_for is moot while blocked
+    assert rt.blocked(m)
+    assert rt.route_for(m) == "i0"
+    rt.remove_request_rules(lambda r: r.block)
+    assert not rt.blocked(m)
+    assert rt.route_for(m) == "i0"
+    # a single rule can both block and carry a route: once the block is
+    # lifted (rule removed), the route dies with it
+    rt2 = RuleTable()
+    rt2.install(RequestRule(session="s1", route_to="i1", block=True))
+    m1 = _msg(session="s1")
+    assert rt2.blocked(m1) and rt2.route_for(m1) == "i1"
+    rt2.remove_request_rules(lambda r: r.block)
+    assert not rt2.blocked(m1) and rt2.route_for(m1) is None
+
+
+def test_agent_rule_admit_priority_min_applied_to_dst_engine():
+    """Regression (ISSUE-5 satellite): ``admit_priority_min`` is
+    documented as 'applied to the dst engine' but ``knob_updates()``
+    (channel knobs only) silently dropped it — installing the rule
+    through the controller must land it on the destination engines."""
+    from repro.core.dataplane import Channel
+    from repro.serving.router import Router
+    from repro.sim.clock import EventLoop as _EL
+    from repro.sim.network import Link
+
+    eng = FakeKnobbed("tester-0")
+    eng.values["admit_priority_min"] = 0
+    loop = _EL()
+    router = Router(loop, "tester-router")
+    router.add_instance(eng)
+    link = Link(loop, bandwidth=1e9, proc_time=0.0, name="l")
+    chan = Channel(loop, link, "dev", router, name="dev->tester")
+    _, reg, store, poller, c = _controller([eng])
+    reg.register(chan)
+    from repro.core.controller import ControlContext
+    ctx = ControlContext(c)
+    ctx.install(AgentRule(target="dev->*", granularity=Granularity.BATCH,
+                          admit_priority_min=2))
+    # channel knobs applied to the matching channel...
+    assert chan.granularity is Granularity.BATCH
+    # ...and the admission floor landed on the engine behind the router
+    assert eng.values["admit_priority_min"] == 2
+    # non-matching targets stay untouched
+    eng.values["admit_priority_min"] = 0
+    ctx.install(AgentRule(target="other->*", admit_priority_min=3))
+    assert eng.values["admit_priority_min"] == 0
+
+
+def test_agent_rule_reapplies_to_later_scale_ups():
+    """An installed AgentRule must keep holding after autoscale: a
+    replica spawned post-install receives the admission floor through
+    ``Controller.reapply_agent_rules`` (wired into ElasticGroup)."""
+    from repro.agents.pipeline import AgenticPipeline, PipelineConfig
+    from repro.core.controller import ControlContext
+
+    p = AgenticPipeline(PipelineConfig(n_testers=1))
+    ctx = ControlContext(p.controller)
+    ctx.install(AgentRule(target="dev->tester", admit_priority_min=2))
+    assert p.registry.get_param("tester-0", "admit_priority_min") == 2
+    new = p.elastic.scale_up()
+    assert p.registry.get_param(new, "admit_priority_min") == 2
+
+
 # ---------------------------------------------------------------------------
 # Controller loop + context
 # ---------------------------------------------------------------------------

@@ -222,6 +222,252 @@ def test_preempt_readmit_end_to_end_no_duplicate_tokens():
         assert r.generated == r.max_new_tokens
 
 
+# ---------------------------------------------------------------------------
+# Bit-exactness of the fifo_priority discipline (ISSUE-5 acceptance)
+# ---------------------------------------------------------------------------
+
+
+class _PreRefactorScheduler:
+    """Verbatim mirror of the pre-tenancy inline scheduler logic
+    (unified role, no cache): the sort lambda, the admit-while-
+    admissible loop, and the lowest-priority-youngest preemption victim
+    — exactly as they stood before the QueueDiscipline refactor.  The
+    refactored scheduler's default ``fifo_priority`` discipline must
+    reproduce this admit/preempt trace bit-exactly."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.alloc = PageAllocator(cfg.num_pages, cfg.page_size)
+        self.waiting = []
+        self.running = []
+        self._free_slots = list(range(cfg.max_slots))
+        self.preempt_count = 0
+
+    def submit(self, req):
+        req.state = RequestState.QUEUED
+        if req.available < 0:
+            req.available = req.prompt_len
+        self.waiting.append(req)
+        self._sort_waiting()
+
+    def _sort_waiting(self):
+        self.waiting.sort(key=lambda r: (
+            -int(r.priority), r.deadline,
+            -float(r.meta.get("cp_remaining", 0.0)), r.arrival_time))
+
+    def _need(self, req):
+        return min(req.prompt_len + req.max_new_tokens,
+                   self.cfg.max_context)
+
+    def _admissible(self, req):
+        if int(req.priority) < self.cfg.admit_priority_min:
+            return False
+        if not self._free_slots:
+            return False
+        return self.alloc.can_allocate(self._need(req))
+
+    def _admit(self, req):
+        req.slot = self._free_slots.pop(0)
+        if not self.alloc.allocate(req.req_id, self._need(req)):
+            self.alloc.free(req.req_id)
+            self._free_slots.insert(0, req.slot)
+            req.slot = -1
+            req.state = RequestState.QUEUED
+            self.waiting.insert(0, req)
+            return False
+        req.state = RequestState.PREFILL
+        self.running.append(req)
+        return True
+
+    def _release(self, req):
+        self.alloc.free(req.req_id)
+        if 0 <= req.slot < self.cfg.max_slots:
+            self._free_slots.append(req.slot)
+        req.slot = -1
+        if req in self.running:
+            self.running.remove(req)
+
+    def finish(self, req, now):
+        req.state = RequestState.FINISHED
+        self._release(req)
+
+    def preempt_one(self):
+        candidates = [r for r in self.running
+                      if r.state == RequestState.RUNNING]
+        if not candidates:
+            return None
+        victim = min(candidates,
+                     key=lambda r: (int(r.priority), -r.arrival_time))
+        self._release(victim)
+        victim.state = RequestState.PREEMPTED
+        victim.prefilled = 0
+        victim.generated = 0
+        victim.output_tokens.clear()
+        victim.first_token_time = None
+        self.preempt_count += 1
+        self.waiting.append(victim)
+        self._sort_waiting()
+        return victim
+
+    def plan_step(self):
+        if not self.cfg.decode_first or not self.running:
+            while self.waiting and self._admissible(self.waiting[0]):
+                if not self._admit(self.waiting.pop(0)):
+                    break
+        pending = [r for r in self.running
+                   if r.state == RequestState.PREFILL
+                   and r.prefilled < min(r.prompt_len, r.available)]
+        if pending:
+            budget = self.cfg.max_batch_tokens
+            chunkcfg = self.cfg.prefill_chunk
+            prefills = []
+            for r in pending:
+                if budget <= 0:
+                    break
+                remaining = min(r.prompt_len, r.available) - r.prefilled
+                chunk = remaining if chunkcfg <= 0 else min(chunkcfg,
+                                                            remaining)
+                chunk = min(chunk, budget)
+                if chunk <= 0:
+                    continue
+                prefills.append((r, chunk))
+                budget -= chunk
+            if prefills:
+                return ("prefill", prefills)
+        decodes = [r for r in self.running
+                   if r.state == RequestState.RUNNING]
+        if decodes:
+            return ("decode", decodes)
+        return ("idle", [])
+
+    def ensure_decode_capacity(self, req):
+        target = min(req.total_len + 1, self.cfg.max_context)
+        while not self.alloc.grow_to(req.req_id, target):
+            if not self.cfg.preempt:
+                return False
+            victim = self.preempt_one()
+            if victim is None or victim is req:
+                return False
+        return True
+
+
+def _mk_requests(specs):
+    return [Request(prompt_len=p, max_new_tokens=g, priority=pr,
+                    deadline=dl, arrival_time=float(i), req_id=f"x{i}",
+                    meta={"cp_remaining": cp})
+            for i, (p, g, pr, dl, cp) in enumerate(specs)]
+
+
+def _normalize(plan):
+    """One plan shape for both schedulers: (kind, [(id, chunk)] | [id])."""
+    if isinstance(plan, tuple):                       # oracle
+        kind, items = plan
+        if kind == "prefill":
+            return (kind, [(r.req_id, c) for r, c in items])
+        return (kind, [r.req_id for r in items])
+    if plan.kind == StepKind.PREFILL:
+        return ("prefill", [(w.req.req_id, w.chunk) for w in plan.prefills])
+    if plan.kind == StepKind.DECODE:
+        return ("decode", [r.req_id for r in plan.decodes])
+    return ("idle", [])
+
+
+def _drive_trace(sched, reqs, ops):
+    """Drive a scheduler through the op sequence, recording the full
+    admit/plan/preempt trace after every op."""
+    trace = []
+    queue = list(reqs)
+    for op in ops:
+        if op == "submit":
+            if queue:
+                r = queue.pop(0)
+                sched.submit(r)
+                event = ("submitted", r.req_id)
+            else:
+                event = ("nosub", None)
+        elif op == "preempt":
+            v = sched.preempt_one()
+            event = ("preempt", v.req_id if v is not None else None)
+        else:
+            plan = sched.plan_step()
+            event = _normalize(plan)
+            kind, items = event
+            if kind == "prefill":
+                for rid, chunk in items:
+                    r = next(x for x in sched.running if x.req_id == rid)
+                    r.prefilled += chunk
+                    if r.prefilled >= r.prompt_len:
+                        r.state = RequestState.RUNNING
+            elif kind == "decode":
+                for rid in items:
+                    r = next((x for x in sched.running
+                              if x.req_id == rid), None)
+                    if r is None or not sched.ensure_decode_capacity(r):
+                        continue
+                    if r.state != RequestState.RUNNING:
+                        continue
+                    r.generated += 1
+                    if r.done:
+                        sched.finish(r, 0.0)
+        trace.append((event,
+                      [r.req_id for r in sched.waiting],
+                      sorted(r.req_id for r in sched.running),
+                      sched.preempt_count))
+    return trace
+
+
+_spec_st = st.tuples(st.integers(1, 300), st.integers(1, 20),
+                     st.sampled_from(list(Priority)),
+                     st.sampled_from([float("inf"), 1.0, 2.0]),
+                     st.sampled_from([0.0, 1.5]))
+
+
+@settings(max_examples=80, deadline=None)
+@given(st.lists(_spec_st, min_size=1, max_size=16),
+       st.lists(st.sampled_from(["submit", "step", "step", "submit",
+                                 "preempt", "step"]),
+                min_size=4, max_size=60))
+def test_fifo_priority_bit_exact_with_pre_refactor_order(specs, ops):
+    """ISSUE-5 acceptance: the default ``fifo_priority`` discipline
+    reproduces the pre-refactor scheduler's admit/preempt trace
+    bit-exactly on randomized workloads — the same plans, the same
+    waiting order, the same victims, at every step."""
+    cfg = SchedulerConfig(max_slots=4, num_pages=32, page_size=128,
+                          max_context=512, max_batch_tokens=256,
+                          prefill_chunk=64)
+    new = Scheduler(cfg)
+    assert new.discipline.name == "fifo_priority"    # the default
+    old = _PreRefactorScheduler(SchedulerConfig(
+        max_slots=4, num_pages=32, page_size=128,
+        max_context=512, max_batch_tokens=256, prefill_chunk=64))
+    trace_new = _drive_trace(new, _mk_requests(specs), ops)
+    trace_old = _drive_trace(old, _mk_requests(specs), ops)
+    assert trace_new == trace_old
+
+
+@pytest.mark.parametrize("seed", range(25))
+def test_fifo_priority_bit_exact_seeded(seed):
+    """Deterministic twin of the hypothesis property above, so the
+    bit-exactness check runs even where hypothesis is not installed."""
+    import random
+    rng = random.Random(seed)
+    specs = [(rng.randint(1, 300), rng.randint(1, 20),
+              rng.choice(list(Priority)),
+              rng.choice([float("inf"), 1.0, 2.0]),
+              rng.choice([0.0, 1.5]))
+             for _ in range(rng.randint(1, 16))]
+    ops = [rng.choice(["submit", "step", "step", "submit",
+                       "preempt", "step"])
+           for _ in range(rng.randint(8, 60))]
+    cfg = dict(max_slots=4, num_pages=32, page_size=128,
+               max_context=512, max_batch_tokens=256, prefill_chunk=64)
+    new = Scheduler(SchedulerConfig(**cfg))
+    old = _PreRefactorScheduler(SchedulerConfig(**cfg))
+    trace_new = _drive_trace(new, _mk_requests(specs), ops)
+    trace_old = _drive_trace(old, _mk_requests(specs), ops)
+    assert trace_new == trace_old
+
+
 @settings(max_examples=60, deadline=None)
 @given(st.lists(st.tuples(st.integers(1, 300), st.integers(1, 20),
                           st.sampled_from(list(Priority))), min_size=1,
