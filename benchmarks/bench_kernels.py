@@ -69,6 +69,44 @@ def decode_attention_row(rep, b, h, hkv, dh, t, blk=128):
             v5e_us=f"{_proj(flops, bytes_)*1e6:.1f}")
 
 
+def paged_decode_attention_row(rep, b, h, hkv, dh, page, per_seq, shared):
+    """Block-table-indirected decode over a shared page pool: ``shared``
+    prefix pages are the *same* physical ids in every row, so the pool
+    holds (and HBM reads) one copy of the prefix per step."""
+    n = shared + b * (per_seq - shared)
+    ks = jax.random.split(jax.random.key(5), 3)
+    q = jax.random.normal(ks[0], (b, 1, h, dh), jnp.float32)
+    k_pages = jax.random.normal(ks[1], (n, page, hkv, dh), jnp.float32)
+    v_pages = jax.random.normal(ks[2], (n, page, hkv, dh), jnp.float32)
+    rows, nxt = [], shared
+    for _ in range(b):
+        rows.append(list(range(shared))
+                    + list(range(nxt, nxt + per_seq - shared)))
+        nxt += per_seq - shared
+    bt = jnp.asarray(rows, jnp.int32)
+    ctx = jnp.asarray([per_seq * page - 1 - 5 * i for i in range(b)],
+                      jnp.int32)
+    g = h // hkv
+    out = ops.paged_decode_attention(q, k_pages, v_pages, bt, ctx,
+                                     interpret=True)
+    want = ref.paged_decode_attention_ref(q.reshape(b, hkv, g, dh),
+                                          k_pages, v_pages, bt, ctx)
+    err = float(jnp.abs(out.reshape(b, hkv, g, dh) - want).max())
+    t = per_seq * page
+    flops = 4.0 * b * h * t * dh
+    # unique pages read once: shared prefix pages are not re-read per row
+    uniq_toks = n * page
+    bytes_ = 2 * uniq_toks * hkv * dh * 2 * 2        # K+V, bf16
+    dhp = max(dh, 128)
+    vmem = (max(g, 8) * dhp + 2 * page * dhp) * 4
+    rep.add(f"kernels.paged_decode_attention."
+            f"b{b}h{h}kv{hkv}d{dh}p{page}x{per_seq}s{shared}",
+            max_err=f"{err:.2e}",
+            vmem_kb=vmem // 1024, vmem_ok=vmem < VMEM,
+            shared_read_saving=f"{1 - uniq_toks/(b*t):.0%}",
+            v5e_us=f"{_proj(flops, bytes_)*1e6:.1f}")
+
+
 def grouped_matmul_row(rep, e, c, d, f):
     ks = jax.random.split(jax.random.key(2), 2)
     x = jax.random.normal(ks[0], (e, c, d), jnp.float32)
@@ -116,6 +154,8 @@ def main(report: Report | None = None) -> Report:
     flash_attention_row(rep, 2, 256, 4, 4, 64)
     decode_attention_row(rep, 4, 8, 2, 128, 1024)
     decode_attention_row(rep, 2, 4, 4, 64, 256)
+    paged_decode_attention_row(rep, 4, 8, 2, 128, 128, 8, 4)
+    paged_decode_attention_row(rep, 2, 4, 4, 64, 16, 4, 0)
     grouped_matmul_row(rep, 8, 128, 256, 512)
     ssm_scan_row(rep, 1, 4, 256, 64, 64)
     rep.note("kernels: interpret-mode correctness vs ref.py oracle; "

@@ -7,7 +7,8 @@ shapes/dtypes against the oracles).
 """
 from repro.kernels import ops, ref
 from repro.kernels.ops import (decode_attention, flash_attention,
-                               grouped_matmul, ssm_scan)
+                               grouped_matmul, paged_decode_attention,
+                               ssm_scan)
 
 __all__ = ["ops", "ref", "decode_attention", "flash_attention",
-           "grouped_matmul", "ssm_scan"]
+           "grouped_matmul", "paged_decode_attention", "ssm_scan"]

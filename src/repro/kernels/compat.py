@@ -1,0 +1,27 @@
+"""Pallas-TPU API compatibility across JAX generations.
+
+The kernels target the current accelerator toolchain, where the Mosaic
+compiler-params dataclass is ``pltpu.CompilerParams``; on the previous
+generation (JAX <= 0.4.x) the same object is ``pltpu.TPUCompilerParams``.
+Everything else the kernels use (``pl.pallas_call``, ``BlockSpec``,
+``PrefetchScalarGridSpec``, VMEM scratch) is stable across both, so this
+one alias is the entire skew — resolving it here keeps every kernel
+importable (and interpret-mode testable) on either toolchain instead of
+skipping the whole suite on the older one.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams", None)
+
+HAVE_COMPILER_PARAMS = CompilerParams is not None
+
+
+def compiler_params(**kw):
+    """Build Mosaic compiler params (``dimension_semantics`` etc.) on
+    whichever API generation is installed."""
+    if CompilerParams is None:  # pragma: no cover - env dependent
+        raise RuntimeError("no Pallas TPU CompilerParams API available")
+    return CompilerParams(**kw)

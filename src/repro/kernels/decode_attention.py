@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import compat
+
 NEG_INF = -1e30
 
 
@@ -78,7 +80,17 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     q_pos: (B, 1).  Returns (B, Hkv, G, dh)."""
     b, hkv, g, dh = q.shape
     t = k.shape[2]
-    nk = t // blk_k
+    # pad the key axis up to a whole number of blocks: the tail block's
+    # padded slots carry kpos = -1, which the validity mask already
+    # treats as empty — without this, t % blk_k trailing keys would be
+    # silently dropped from the softmax
+    nk = -(-t // blk_k)
+    pad = nk * blk_k - t
+    if pad:
+        widths4 = ((0, 0), (0, 0), (0, pad), (0, 0))
+        k = jnp.pad(k, widths4)
+        v = jnp.pad(v, widths4)
+        kpos = jnp.pad(kpos, ((0, 0), (0, pad)), constant_values=-1)
 
     kern = functools.partial(_kernel, blk_k=blk_k, window=window)
     return pl.pallas_call(
@@ -98,7 +110,7 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
             pltpu.VMEM((g, 1), jnp.float32),
             pltpu.VMEM((g, dh), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v, kpos, q_pos)

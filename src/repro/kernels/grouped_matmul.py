@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import compat
+
 
 def _kernel(counts_ref, x_ref, w_ref, o_ref, acc_ref, *,
             blk_c: int):
@@ -78,7 +80,7 @@ def grouped_matmul(x: jax.Array, w: jax.Array, counts: jax.Array, *,
                                lambda e_, i, j, k_: (e_, i, j)),
         out_shape=jax.ShapeDtypeStruct((e, c, f), x.dtype),
         scratch_shapes=[pltpu.VMEM((blk_c, blk_f), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

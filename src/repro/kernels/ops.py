@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from repro.kernels import decode_attention as _dec
 from repro.kernels import flash_attention as _fa
 from repro.kernels import grouped_matmul as _gm
+from repro.kernels import paged_decode_attention as _pdec
 from repro.kernels import ssm_scan as _ssm
 
 LANE = 128
@@ -81,6 +82,33 @@ def decode_attention(q, cache_k, cache_v, kpos, q_pos, *, window=-1,
     out = _dec.decode_attention(qg, kt, vt, kp, q_pos[:, None],
                                 window=window, blk_k=blk_k,
                                 interpret=interpret)
+    return out[:, :, :g, :dh].reshape(b, 1, h, dh)
+
+
+def paged_decode_attention(q, k_pages, v_pages, block_tables, ctx_lens, *,
+                           window=-1, interpret=None):
+    """Paged decode attention over a shared KV page pool.
+
+    Model layout: q (B, 1, H, dh); k_pages/v_pages (N_pages, page, Hkv,
+    dh) — the allocator-natural pool layout (a real engine would store
+    pages in the kernel's (Hkv, N, page, dh) layout and skip the
+    transpose); block_tables (B, P) int32 physical page ids in logical
+    order, -1 = unmapped tail; ctx_lens (B,) int32 valid cached tokens.
+    Returns (B, 1, H, dh).
+    """
+    if interpret is None:
+        interpret = not on_tpu()
+    b, _, h, dh = q.shape
+    hkv = k_pages.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, dh)
+    qg = _pad_to(_pad_to(qg, 2, SUBLANE), 3, LANE)
+    kt = _pad_to(jnp.moveaxis(k_pages, 2, 0), 3, LANE)  # (Hkv, N, page, dh')
+    vt = _pad_to(jnp.moveaxis(v_pages, 2, 0), 3, LANE)
+    # scale uses the padded dh; rescale q to compensate
+    qg = qg * (jnp.sqrt(qg.shape[-1] / dh).astype(qg.dtype))
+    out = _pdec.paged_decode_attention(qg, kt, vt, block_tables, ctx_lens,
+                                       window=window, interpret=interpret)
     return out[:, :, :g, :dh].reshape(b, 1, h, dh)
 
 

@@ -44,6 +44,25 @@ def decode_attention_ref(q, k, v, kpos, q_pos, *, window=-1):
     return out.astype(q.dtype)
 
 
+def paged_decode_attention_ref(q, k_pages, v_pages, block_tables, ctx_lens,
+                               *, window=-1):
+    """Gather-then-attend oracle for the paged kernel.  q: (B,Hkv,G,dh);
+    k_pages/v_pages: (N,page,Hkv,dh); block_tables: (B,P) int32 (-1 =
+    unmapped); ctx_lens: (B,)."""
+    b = q.shape[0]
+    page = k_pages.shape[1]
+    t = block_tables.shape[1] * page
+    ids = jnp.maximum(block_tables, 0)                    # (B, P)
+    k = k_pages[ids].reshape(b, t, *k_pages.shape[2:])    # (B, T, Hkv, dh)
+    v = v_pages[ids].reshape(b, t, *v_pages.shape[2:])
+    kpos = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+    kpos = jnp.where(kpos < ctx_lens[:, None], kpos, -1)
+    qpos = (ctx_lens - 1)[:, None]
+    return decode_attention_ref(q, jnp.moveaxis(k, 2, 1),
+                                jnp.moveaxis(v, 2, 1), kpos, qpos,
+                                window=window)
+
+
 def grouped_matmul_ref(x, w, counts):
     """x: (E,C,d); w: (E,d,f); counts: (E,) -> (E,C,f) with rows past
     counts zeroed (they are padding)."""

@@ -2,10 +2,14 @@
 
 The decode hot path is ONE fixed-shape jitted step over all slots
 (continuous batching, TPU-style: inactive slots ride along as padding so
-the compiled executable never changes shape).  Prefill runs per request
-at its exact prompt length (CPU container: a handful of lengths per
-test/example; on TPU you'd bucket).  Slot state surgery uses
-serving/cache_utils; KV migration uses serving/kv_transfer.
+the compiled executable never changes shape).  Sampling is **fused into
+the step**: the jitted function runs forward pass → logits →
+greedy/temperature sample and returns int32 token ids, so the (B, V)
+logits never leave the device and the only host transfer per step is
+the sampled tokens themselves.  Prefill runs per request at its exact
+prompt length (CPU container: a handful of lengths per test/example; on
+TPU you'd bucket).  Slot state surgery uses serving/cache_utils; KV
+migration uses serving/kv_transfer.
 """
 from __future__ import annotations
 
@@ -38,12 +42,18 @@ class Engine(EngineCore):
         self._last_token = np.zeros((sched_cfg.max_slots,), np.int32)
 
         @jax.jit
-        def _prefill(params, tokens, cache):
-            return models.prefill(params, cfg, tokens, cache)
+        def _prefill(params, tokens, cache, key, temperature):
+            # forward + first-token sample in one program: logits are
+            # consumed on-device, only the token id comes back
+            logits, cache = models.prefill(params, cfg, tokens, cache)
+            tok = sampler.sample(logits, key, temperature)
+            return tok, cache
 
         @jax.jit
-        def _decode(params, tokens, cache):
-            return models.decode_step(params, cfg, tokens, cache)
+        def _decode(params, tokens, cache, key, temperature):
+            logits, cache = models.decode_step(params, cfg, tokens, cache)
+            tok = sampler.sample(logits, key, temperature)
+            return tok, cache
 
         @jax.jit
         def _insert(cache, sub, slot):
@@ -100,18 +110,20 @@ class Engine(EngineCore):
         tokens = jnp.asarray(req.prompt_tokens, jnp.int32)[None, :]
         sub_cache = models.init_cache(self.cfg, 1,
                                       self.scheduler.cfg.max_context)
-        logits, sub_cache = self._prefill_fn(self.params, tokens, sub_cache)
+        tok, sub_cache = self._prefill_fn(self.params, tokens, sub_cache,
+                                          self._next_key(),
+                                          jnp.float32(self.temperature))
         self.cache = self._insert_fn(self.cache, sub_cache,
                                      jnp.int32(req.slot))
-        tok = sampler.sample(logits, self._next_key(), self.temperature)
         self._last_token[req.slot] = int(tok[0])
         return int(tok[0])
 
     # ----------------------------------------------------------------- decode
     def _run_decode(self, reqs: list[Request]) -> list[int]:
         tokens = jnp.asarray(self._last_token[:, None])
-        logits, self.cache = self._decode_fn(self.params, tokens, self.cache)
-        toks = sampler.sample(logits, self._next_key(), self.temperature)
+        toks, self.cache = self._decode_fn(self.params, tokens, self.cache,
+                                           self._next_key(),
+                                           jnp.float32(self.temperature))
         toks = np.asarray(toks)
         out = []
         for r in reqs:

@@ -29,7 +29,7 @@ class EngineCore(ControlSurface):
     kind = "llm"
     CAPABILITIES = ("kv_transfer", "pause", "priority", "role")
     METRICS = ("queue_len", "num_running", "page_util", "step_time",
-               "ttft", "latency", "tpt", "throughput",
+               "mean_step_time", "ttft", "latency", "tpt", "throughput",
                "prefill_queue_tokens", "decode_slot_util")
     KNOB_SPECS = tuple(
         s.delegated("scheduler", clamp="_clamp_max_num_seqs")
@@ -54,6 +54,11 @@ class EngineCore(ControlSurface):
         self.steps = 0
         self.prefill_steps = 0
         self.decode_steps = 0
+        # measured step time (EWMA + total): the hardware-honesty gauge —
+        # the calibration plane compares CostModel predictions against
+        # this instead of trusting hand-set roofline constants
+        self.mean_step_time = 0.0
+        self.step_time_total = 0.0
         self.tokens_generated = 0
         self.finished: list[Request] = []
         self.on_finish: Optional[Callable[[Request, float], None]] = None
@@ -181,6 +186,10 @@ class EngineCore(ControlSurface):
         self._gauge("num_running", s.num_running)
         self._gauge("page_util", s.alloc.utilization)
         self._observe("step_time", duration)
+        self.step_time_total += duration
+        self.mean_step_time = (duration if self.steps <= 1 else
+                               0.9 * self.mean_step_time + 0.1 * duration)
+        self._gauge("mean_step_time", self.mean_step_time)
         self._gauge("tokens_total", self.tokens_generated)
         self._gauge("prefill_queue_tokens", s.prefill_queue_tokens)
         self._gauge("decode_slot_util", s.decode_slot_util)

@@ -21,6 +21,16 @@ Two page classes:
 Invariant (the hypothesis property tests pin this down):
 
     free_pages + private_pages + shared_pages == num_pages
+
+Beyond the page *counts*, the allocator assigns every page a concrete
+**physical id** in ``[0, num_pages)``: each sequence holds an ordered
+list of private ids, each shared block an ordered id group, and
+``page_table(seq_id)`` lays them out in logical order (acquired shared
+blocks first — the prefix — then private pages).  That list is exactly
+the block-table row ``kernels/paged_decode_attention.py`` gathers
+through, so the scheduling-plane layout and the kernel's memory-access
+pattern are one structure: shared prefixes appear as the *same*
+physical ids in every sharer's table.
 """
 from __future__ import annotations
 
@@ -43,6 +53,14 @@ class PageAllocator:
     _used: dict[str, int] = field(default_factory=dict)   # seq -> pages
     _blocks: dict[str, SharedBlock] = field(default_factory=dict)
     _seq_blocks: dict[str, list[str]] = field(default_factory=dict)
+    # physical page ids (same partition as the counts above)
+    _free_ids: list[int] = field(default_factory=list)
+    _seq_ids: dict[str, list[int]] = field(default_factory=dict)
+    _block_ids: dict[str, list[int]] = field(default_factory=dict)
+
+    def __post_init__(self):
+        if not self._free_ids and not self._seq_ids and not self._block_ids:
+            self._free_ids = list(range(self.num_pages))
 
     # -- queries --------------------------------------------------------------
     @property
@@ -83,6 +101,10 @@ class PageAllocator:
         if grow > self.free_pages:
             return False
         self._used[seq_id] = max(need, have)
+        if grow:
+            ids = self._seq_ids.setdefault(seq_id, [])
+            ids.extend(self._free_ids[:grow])
+            del self._free_ids[:grow]
         return True
 
     def grow_to(self, seq_id: str, total_tokens: int) -> bool:
@@ -97,6 +119,7 @@ class PageAllocator:
             blk = self._blocks.get(bid)
             if blk is not None and blk.refs > 0:
                 blk.refs -= 1
+        self._free_ids.extend(self._seq_ids.pop(seq_id, ()))
         return self._used.pop(seq_id, 0)
 
     # -- shared-block mutation -------------------------------------------------
@@ -108,6 +131,8 @@ class PageAllocator:
         if pages > self.free_pages:
             return False
         self._blocks[block_id] = SharedBlock(block_id, pages)
+        self._block_ids[block_id] = self._free_ids[:pages]
+        del self._free_ids[:pages]
         return True
 
     def block_resident(self, block_id: str) -> bool:
@@ -140,6 +165,13 @@ class PageAllocator:
         if pages > have:
             return False
         self._used[seq_id] = have - pages
+        # the promoted pages are the *front* of the private region: a
+        # sequence's private pages cover its tokens in order and commit
+        # promotes prefix blocks front-to-back, so the physical ids move
+        # with the tokens they hold
+        ids = self._seq_ids.get(seq_id, [])
+        self._block_ids[block_id] = ids[:pages]
+        del ids[:pages]
         self._blocks[block_id] = SharedBlock(block_id, pages, refs=0)
         return self.acquire(seq_id, block_id)
 
@@ -149,9 +181,42 @@ class PageAllocator:
         if blk is None or blk.refs > 0:
             return False
         del self._blocks[block_id]
+        self._free_ids.extend(self._block_ids.pop(block_id, ()))
         return True
+
+    # -- kernel block tables ---------------------------------------------------
+    def block_pages(self, block_id: str) -> list[int]:
+        """Physical page ids of a resident shared block, in token order."""
+        return list(self._block_ids.get(block_id, ()))
+
+    def page_table(self, seq_id: str) -> list[int]:
+        """Physical page ids of ``seq_id`` in logical (token) order:
+        acquired shared blocks first — the cached prefix, in acquisition
+        order, which is chain order — then private pages.  This row is
+        what the paged decode-attention kernel's block table gathers
+        through; sequences sharing a prefix block repeat the same
+        physical ids."""
+        ids: list[int] = []
+        for bid in self._seq_blocks.get(seq_id, ()):
+            ids.extend(self._block_ids.get(bid, ()))
+        ids.extend(self._seq_ids.get(seq_id, ()))
+        return ids
 
     def reset(self) -> None:
         self._used.clear()
         self._blocks.clear()
         self._seq_blocks.clear()
+        self._free_ids = list(range(self.num_pages))
+        self._seq_ids.clear()
+        self._block_ids.clear()
+
+
+def block_tables(alloc: PageAllocator, seq_ids,
+                 pad_to: int = 0) -> list[list[int]]:
+    """Batched kernel block tables: one row per sequence, physical page
+    ids in logical order, right-padded with -1 to a rectangle (at least
+    ``pad_to`` columns).  Feed directly to
+    ``kernels.ops.paged_decode_attention``."""
+    rows = [alloc.page_table(s) for s in seq_ids]
+    width = max([len(r) for r in rows] + [pad_to, 1])
+    return [r + [-1] * (width - len(r)) for r in rows]

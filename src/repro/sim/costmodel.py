@@ -6,10 +6,17 @@ the dry-run analysis reports:
 
     t_step = max(FLOPs / (chips·peak), bytes / (chips·hbm_bw)) + overhead
 
-``calibrate_from_dryrun`` can rescale the analytic FLOPs with the
-compiled HLO_FLOPs/MODEL_FLOPs ratio from launch/dryrun.py artifacts,
-closing the loop between the compiled graphs and the discrete-event
-benchmarks.
+Two calibration entry points close the loop between this analytic form
+and reality:
+
+* ``from_dryrun`` rescales the analytic FLOPs with the compiled
+  HLO_FLOPs/MODEL_FLOPs ratio from launch/dryrun.py artifacts (static:
+  what the compiler built);
+* ``from_calibration`` loads a ``CALIB_*.json`` artifact written by
+  ``benchmarks/calibrate.py`` — ``flops_scale`` / ``bytes_scale`` /
+  ``step_overhead`` least-squares-fitted to *measured* step times of the
+  jitted prefill/decode functions (dynamic: what the hardware ran; see
+  sim/calibration.py).
 """
 from __future__ import annotations
 
@@ -34,6 +41,7 @@ class CostModel:
     chips: int = 1
     flops_scale: float = 1.0      # HLO_FLOPs / MODEL_FLOPs (from dry-run)
     bytes_scale: float = 1.0
+    step_overhead: float = STEP_OVERHEAD   # per-step dispatch cost (s)
 
     # -- static quantities ---------------------------------------------------
     def n_params(self) -> int:
@@ -99,16 +107,12 @@ class CostModel:
     def _roofline(self, flops: float, bytes_: float) -> float:
         t_c = flops * self.flops_scale / (self.chips * PEAK_FLOPS)
         t_m = bytes_ * self.bytes_scale / (self.chips * HBM_BW)
-        return max(t_c, t_m) + STEP_OVERHEAD
+        return max(t_c, t_m) + self.step_overhead
 
-    def prefill_time(self, prompt_tokens: int, batch: int = 1,
-                     context: int = 0) -> float:
-        """Time to prefill ``prompt_tokens`` *new* tokens.  ``context`` is
-        KV already resident (a cached shared prefix, or earlier chunks of
-        a chunked prefill): it is not recomputed, but the new tokens
-        attend over it, so it contributes attention FLOPs and KV reads —
-        this is what makes prefix-cache savings hardware-honest rather
-        than free."""
+    def prefill_cost(self, prompt_tokens: int, batch: int = 1,
+                     context: int = 0) -> tuple[float, float]:
+        """Analytic (FLOPs, bytes) of one prefill step — the unscaled
+        quantities the calibration fit regresses measured times onto."""
         n = self.n_active_params()
         toks = prompt_tokens * batch
         flops = 2.0 * n * toks
@@ -122,18 +126,41 @@ class CostModel:
                       * prompt_tokens * s_eff * batch)
         bytes_ = (n * BYTES_PER_PARAM
                   + (toks + context * batch) * self.kv_bytes_per_token())
-        return self._roofline(flops + attn_flops, bytes_)
+        return flops + attn_flops, bytes_
 
-    def decode_time(self, batch: int, mean_context: float) -> float:
+    def prefill_time(self, prompt_tokens: int, batch: int = 1,
+                     context: int = 0) -> float:
+        """Time to prefill ``prompt_tokens`` *new* tokens.  ``context`` is
+        KV already resident (a cached shared prefix, or earlier chunks of
+        a chunked prefill): it is not recomputed, but the new tokens
+        attend over it, so it contributes attention FLOPs and KV reads —
+        this is what makes prefix-cache savings hardware-honest rather
+        than free."""
+        return self._roofline(*self.prefill_cost(prompt_tokens, batch,
+                                                 context))
+
+    def decode_cost(self, batch: int,
+                    mean_context: float) -> tuple[float, float]:
+        """Analytic (FLOPs, bytes) of one decode step."""
         n = self.n_active_params()
         flops = 2.0 * n * batch
         cfg = self.cfg
         ctx = mean_context
         if cfg.window > 0 and not cfg.local_global_ratio:
             ctx = min(mean_context, cfg.window)
+        # attention FLOPs over the resident context — symmetric with
+        # prefill_cost's attention term (one new token, s_eff = ctx);
+        # without it only the KV-read *bytes* were charged, so a
+        # compute-bound long-context decode was mispriced as flat
+        if cfg.family != "ssm":
+            flops += 4.0 * cfg.n_layers * cfg.n_heads * cfg.d_head \
+                * ctx * batch
         kv_read = batch * ctx * self.kv_bytes_per_token()
         bytes_ = n * BYTES_PER_PARAM + kv_read + batch * self.state_bytes()
-        return self._roofline(flops, bytes_)
+        return flops, bytes_
+
+    def decode_time(self, batch: int, mean_context: float) -> float:
+        return self._roofline(*self.decode_cost(batch, mean_context))
 
     def call_time(self, prompt_tokens: int, new_tokens: int,
                   context: int = 0, batch: int = 1) -> float:
@@ -152,6 +179,8 @@ class CostModel:
     @classmethod
     def from_dryrun(cls, cfg: ModelConfig, chips: int,
                     artifact: Optional[Path]) -> "CostModel":
+        """Static calibration: rescale analytic FLOPs by the compiled
+        HLO_FLOPs/MODEL_FLOPs ratio from a launch/dryrun.py artifact."""
         cm = cls(cfg, chips)
         if artifact and Path(artifact).exists():
             data = json.loads(Path(artifact).read_text())
@@ -159,4 +188,23 @@ class CostModel:
             hlo_flops = data.get("flops")
             if model_flops and hlo_flops and model_flops > 0:
                 cm.flops_scale = max(1.0, hlo_flops / model_flops)
+        return cm
+
+    @classmethod
+    def from_calibration(cls, cfg: ModelConfig, chips: int,
+                         artifact: Optional[Path]) -> "CostModel":
+        """Measured calibration: load the fitted ``flops_scale`` /
+        ``bytes_scale`` / ``step_overhead`` from a ``CALIB_*.json``
+        artifact (benchmarks/calibrate.py).  Missing/invalid artifacts
+        fall back to the hand-set roofline constants."""
+        cm = cls(cfg, chips)
+        if not artifact:
+            return cm
+        from repro.sim.calibration import load_calibration
+        calib = load_calibration(artifact)
+        if calib is None:
+            return cm
+        cm.flops_scale = calib.flops_scale
+        cm.bytes_scale = calib.bytes_scale
+        cm.step_overhead = calib.step_overhead
         return cm

@@ -18,9 +18,12 @@ def _why_no_pallas() -> str:
         from jax.experimental.pallas import tpu as pltpu
     except Exception as e:  # pragma: no cover - env dependent
         return f"pallas import failed: {e!r}"
-    if not hasattr(pltpu, "CompilerParams"):
-        return ("jax too old for kernels API "
-                "(pallas.tpu.CompilerParams missing)")
+    if not (hasattr(pltpu, "CompilerParams")
+            or hasattr(pltpu, "TPUCompilerParams")):
+        # kernels/compat.py bridges the CompilerParams rename; older jax
+        # lacking both generations has no usable Mosaic params API
+        return ("jax too old for kernels API (pallas.tpu.CompilerParams/"
+                "TPUCompilerParams missing)")
     return ""
 
 

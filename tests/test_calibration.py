@@ -1,0 +1,197 @@
+"""Calibration plane: roofline fit recovery, CALIB artifact round-trip,
+CostModel.from_calibration, the decode attention-FLOPs term, and the
+measured-grid tolerance gate (skipped where no JAX device exists)."""
+import json
+
+import pytest
+
+from repro.configs import get_config
+from repro.sim.calibration import (CALIB_VERSION, CalibrationPoint,
+                                   calibrate, fit_roofline,
+                                   load_calibration, save_calibration)
+from repro.sim.costmodel import (HBM_BW, PEAK_FLOPS, STEP_OVERHEAD,
+                                 CostModel)
+
+
+def _synthetic_points(fs, bs, c, chips=1, noise=None):
+    """Grid spanning both roofline branches under the true scales."""
+    grid = [(1e9, 1e6), (5e9, 2e6), (2e10, 8e6), (4e10, 3e7),   # compute
+            (1e8, 4e7), (5e7, 1e8), (2e8, 6e7), (1e7, 2e8)]     # memory
+    pts = []
+    for i, (f, by) in enumerate(grid):
+        t = max(f * fs / (chips * PEAK_FLOPS),
+                by * bs / (chips * HBM_BW)) + c
+        if noise is not None:
+            t *= 1.0 + noise[i % len(noise)]
+        pts.append(CalibrationPoint("decode", 1, 128, f, by, t))
+    return pts
+
+
+# ---------------------------------------------------------------------------
+# fit
+# ---------------------------------------------------------------------------
+
+def test_fit_recovers_synthetic_parameters():
+    fs, bs, c = 2.3, 1.6, 3e-4
+    got_fs, got_bs, got_c = fit_roofline(_synthetic_points(fs, bs, c))
+    assert got_fs == pytest.approx(fs, rel=0.05)
+    assert got_bs == pytest.approx(bs, rel=0.05)
+    assert got_c == pytest.approx(c, rel=0.05)
+
+
+def test_fit_handles_noise_within_tolerance():
+    noise = [0.04, -0.03, 0.05, -0.05, 0.02, -0.04, 0.03, -0.02]
+    pts = _synthetic_points(1.8, 1.2, 2e-4, noise=noise)
+    calib = calibrate("synthetic", "cpu", pts, tolerance=0.2)
+    assert calib.within_tolerance
+    assert calib.max_rel_err < 0.2
+
+
+def test_fit_single_branch_keeps_other_scale():
+    # all points compute-bound: bytes_scale is unconstrained by the data
+    # and must not explode/collapse the memory branch above the fit
+    pts = [CalibrationPoint("decode", 1, 128, f, 1e3,
+                            f * 2.0 / PEAK_FLOPS + 1e-4)
+           for f in (1e9, 5e9, 2e10, 8e10)]
+    fs, bs, c = fit_roofline(pts)
+    assert fs == pytest.approx(2.0, rel=0.05)
+    assert bs > 0
+    calib = calibrate("synthetic", "cpu", pts, tolerance=0.05)
+    assert calib.within_tolerance
+
+
+def test_fit_empty_points_is_identity():
+    assert fit_roofline([]) == (1.0, 1.0, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# artifact round-trip + CostModel hook
+# ---------------------------------------------------------------------------
+
+def test_calibration_artifact_roundtrip(tmp_path):
+    calib = calibrate("synthetic", "cpu", _synthetic_points(2.0, 1.5, 1e-4))
+    path = save_calibration(calib, tmp_path / "CALIB_synthetic.json")
+    loaded = load_calibration(path)
+    assert loaded is not None
+    assert loaded.flops_scale == pytest.approx(calib.flops_scale)
+    assert loaded.bytes_scale == pytest.approx(calib.bytes_scale)
+    assert loaded.step_overhead == pytest.approx(calib.step_overhead)
+    assert loaded.tolerance == calib.tolerance
+    assert len(loaded.points) == len(calib.points)
+    assert loaded.points[0].kind == "decode"
+
+
+def test_load_calibration_rejects_garbage(tmp_path):
+    assert load_calibration(tmp_path / "missing.json") is None
+    bad = tmp_path / "bad.json"
+    bad.write_text("not json{")
+    assert load_calibration(bad) is None
+    wrong = tmp_path / "wrong.json"
+    wrong.write_text(json.dumps({"version": CALIB_VERSION + 99}))
+    assert load_calibration(wrong) is None
+
+
+def test_from_calibration_applies_fit(tmp_path):
+    cfg = get_config("agent-7b")
+    calib = calibrate("agent-7b", "tpu",
+                      _synthetic_points(2.0, 1.5, 5e-4), chips=4)
+    path = save_calibration(calib, tmp_path / "CALIB_agent-7b.json")
+    cm = CostModel.from_calibration(cfg, 4, path)
+    assert cm.flops_scale == pytest.approx(calib.flops_scale)
+    assert cm.bytes_scale == pytest.approx(calib.bytes_scale)
+    assert cm.step_overhead == pytest.approx(calib.step_overhead)
+    # the loaded overhead flows into every step prediction
+    base = CostModel(cfg, 4)
+    assert cm.decode_time(1, 1024) != base.decode_time(1, 1024)
+    # missing artifact -> analytic defaults, not an error
+    fallback = CostModel.from_calibration(cfg, 4, tmp_path / "nope.json")
+    assert fallback.flops_scale == 1.0
+    assert fallback.step_overhead == STEP_OVERHEAD
+    assert CostModel.from_calibration(cfg, 4, None).bytes_scale == 1.0
+
+
+# ---------------------------------------------------------------------------
+# decode attention-FLOPs term (satellite c)
+# ---------------------------------------------------------------------------
+
+def test_decode_cost_charges_attention_flops():
+    cfg = get_config("agent-7b")
+    cm = CostModel(cfg, chips=4)
+    batch, ctx = 8, 4096
+    flops, bytes_ = cm.decode_cost(batch, ctx)
+    attn = 4.0 * cfg.n_layers * cfg.n_heads * cfg.d_head * ctx * batch
+    assert flops == pytest.approx(2.0 * cm.n_active_params() * batch + attn)
+    # pinned delta: the attention term is exactly the before/after gap
+    flops0, bytes0 = cm.decode_cost(batch, 0)
+    kv = batch * ctx * cm.kv_bytes_per_token()
+    assert flops - flops0 == pytest.approx(attn)
+    assert bytes_ - bytes0 == pytest.approx(kv)
+
+
+def test_decode_time_grows_with_context_when_compute_bound():
+    # huge batch × long context: attention FLOPs dominate, so decode_time
+    # must grow with context even though weight reads are constant
+    cfg = get_config("agent-7b")
+    cm = CostModel(cfg, chips=4)
+    b = 256
+    t_short, t_long = cm.decode_time(b, 1_000), cm.decode_time(b, 500_000)
+    assert t_long > t_short
+    f_long, by_long = cm.decode_cost(b, 500_000)
+    want = max(f_long / (4 * PEAK_FLOPS), by_long / (4 * HBM_BW)) \
+        + STEP_OVERHEAD
+    assert t_long == pytest.approx(want)
+
+
+def test_decode_cost_ssm_has_no_attention_term():
+    cfg = get_config("agent-7b").replace(family="ssm", ssm_state=16)
+    cm = CostModel(cfg, chips=1)
+    f1, _ = cm.decode_cost(4, 100)
+    f2, _ = cm.decode_cost(4, 100_000)
+    assert f1 == f2                      # constant state: no ctx FLOPs
+
+
+def test_decode_cost_window_clamps_context():
+    cfg = get_config("agent-7b").replace(window=1024)
+    cm = CostModel(cfg, chips=1)
+    assert cm.decode_cost(2, 2048) == cm.decode_cost(2, 8192)
+
+
+# ---------------------------------------------------------------------------
+# measured tolerance gate (the CI check; skips cleanly off-device)
+# ---------------------------------------------------------------------------
+
+def _have_jax_device() -> bool:
+    try:
+        import jax
+        return len(jax.devices()) > 0
+    except Exception:                    # pragma: no cover - env dependent
+        return False
+
+
+@pytest.mark.skipif(not _have_jax_device(),
+                    reason="no JAX device — the calibration tolerance gate "
+                           "needs measured step times")
+def test_calibration_tolerance_on_measured_grid(tmp_path):
+    """End-to-end: measure the real jitted prefill/decode steps on a tiny
+    config, fit, and require every grid point's from_calibration
+    prediction inside the declared tolerance band."""
+    try:
+        from benchmarks import calibrate as bc
+    except ImportError:
+        pytest.skip("benchmarks package not importable from this rootdir")
+    import jax
+    pts = bc.measure_points(bc.TINY, prefill_lens=(32, 64),
+                            decode_grid=((1, 64), (2, 128), (4, 128)),
+                            reps=3)
+    calib = calibrate(bc.TINY.name, jax.default_backend(), pts)
+    assert calib.within_tolerance, (
+        f"max_rel_err {calib.max_rel_err:.3f} > tolerance "
+        f"{calib.tolerance} on backend {calib.backend}")
+    path = save_calibration(calib, tmp_path / "CALIB_calib-tiny.json")
+    cm = CostModel.from_calibration(bc.TINY, 1, path)
+    for p in calib.points:
+        if p.kind == "prefill":
+            pred = cm.prefill_time(p.context, batch=p.batch)
+        else:
+            pred = cm.decode_time(p.batch, p.context)
+        assert abs(pred - p.measured_s) / p.measured_s <= calib.tolerance

@@ -1,4 +1,6 @@
 """Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret=True."""
+import importlib
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -83,6 +85,115 @@ def test_decode_attention_sweep(b, h, hkv, dh, t, qpos, window):
                                     jnp.moveaxis(cv, 2, 1), kpos,
                                     qp[:, None], window=window)
     _assert_close(out.reshape(b, hkv, h // hkv, dh), want, jnp.float32)
+
+
+def test_decode_attention_tail_not_truncated():
+    """Regression: the low-level kernel used nk = t // blk_k, silently
+    dropping the last t % blk_k keys from the softmax whenever the cache
+    length was not block-divisible."""
+    da = importlib.import_module("repro.kernels.decode_attention")
+    b, hkv, g, dh, t, blk = 2, 1, 8, 128, 200, 128
+    ks = jax.random.split(jax.random.key(8), 3)
+    q = jax.random.normal(ks[0], (b, hkv, g, dh))
+    k = jax.random.normal(ks[1], (b, hkv, t, dh))
+    v = jax.random.normal(ks[2], (b, hkv, t, dh))
+    kpos = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+    qp = jnp.full((b, 1), t - 1)
+    out = da.decode_attention(q, k, v, kpos, qp, blk_k=blk, interpret=True)
+    want = ref.decode_attention_ref(q, k, v, kpos, qp)
+    _assert_close(out, want, jnp.float32)
+    # the truncated-softmax bug reproduced by masking the tail away:
+    # results must actually depend on those last t % blk_k keys
+    trunc = ref.decode_attention_ref(q, k, v,
+                                     jnp.where(kpos < blk, kpos, -1), qp)
+    assert float(jnp.abs(want - trunc).max()) > 1e-2
+
+
+# ---------------------------------------------------------------------------
+# paged decode attention (block-table indirection over a KV page pool)
+# ---------------------------------------------------------------------------
+
+def _paged_case(b, hkv, g, dh, page, per_seq, shared=0, seed=9):
+    """Pool + block tables: ``shared`` leading physical pages appear in
+    every row (a cached prefix), the rest are per-sequence private."""
+    n = shared + b * (per_seq - shared)
+    ks = jax.random.split(jax.random.key(seed), 3)
+    q = jax.random.normal(ks[0], (b, 1, hkv * g, dh))
+    k_pages = jax.random.normal(ks[1], (n, page, hkv, dh))
+    v_pages = jax.random.normal(ks[2], (n, page, hkv, dh))
+    rows, nxt = [], shared
+    for _ in range(b):
+        rows.append(list(range(shared))
+                    + list(range(nxt, nxt + per_seq - shared)))
+        nxt += per_seq - shared
+    return q, k_pages, v_pages, jnp.asarray(rows, jnp.int32)
+
+
+def _check_paged(q, k_pages, v_pages, bt, ctx, window=-1):
+    b, _, h, dh = q.shape
+    hkv = k_pages.shape[2]
+    out = ops.paged_decode_attention(q, k_pages, v_pages, bt, ctx,
+                                     window=window, interpret=True)
+    want = ref.paged_decode_attention_ref(q.reshape(b, hkv, h // hkv, dh),
+                                          k_pages, v_pages, bt, ctx,
+                                          window=window)
+    _assert_close(out.reshape(b, hkv, h // hkv, dh), want, q.dtype)
+
+
+@pytest.mark.parametrize("b,hkv,g,dh,page,per_seq", [
+    (2, 2, 4, 64, 16, 4),       # GQA
+    (1, 1, 1, 128, 32, 3),      # MQA, single row, wide head
+    (3, 4, 2, 32, 16, 5),
+])
+@pytest.mark.parametrize("aligned", [True, False])
+def test_paged_decode_attention_sweep(b, hkv, g, dh, page, per_seq,
+                                      aligned):
+    q, kp, vp, bt = _paged_case(b, hkv, g, dh, page, per_seq)
+    full = per_seq * page
+    ctx = jnp.full((b,), full, jnp.int32) if aligned else \
+        jnp.asarray([full - 1 - 7 * i for i in range(b)], jnp.int32)
+    _check_paged(q, kp, vp, bt, ctx)
+
+
+def test_paged_decode_attention_shared_prefix_rows():
+    b, hkv, g, dh, page, per_seq = 3, 2, 2, 64, 16, 6
+    q, kp, vp, bt = _paged_case(b, hkv, g, dh, page, per_seq, shared=2)
+    ctx = jnp.asarray([per_seq * page, per_seq * page - 5, 2 * page + 3],
+                      jnp.int32)
+    _check_paged(q, kp, vp, bt, ctx)
+    # two rows given identical tables, lengths AND query must agree
+    # exactly — the prefix really is one physical copy
+    bt2 = bt.at[1].set(bt[0])
+    q2 = q.at[1].set(q[0])
+    ctx2 = ctx.at[1].set(ctx[0])
+    out = ops.paged_decode_attention(q2, kp, vp, bt2, ctx2, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(out[1]))
+
+
+def test_paged_decode_attention_unmapped_tail():
+    # rows of different logical length: short rows carry -1 page ids,
+    # which must contribute nothing to the softmax
+    b, hkv, g, dh, page = 2, 2, 2, 64, 16
+    q, kp, vp, bt = _paged_case(b, hkv, g, dh, page, per_seq=4)
+    bt = bt.at[1, 2:].set(-1)                  # row 1 maps only 2 pages
+    ctx = jnp.asarray([4 * page - 2, page + 5], jnp.int32)
+    _check_paged(q, kp, vp, bt, ctx)
+
+
+@pytest.mark.parametrize("window", [24, 64])
+def test_paged_decode_attention_window(window):
+    b, hkv, g, dh, page = 2, 2, 4, 64, 16
+    q, kp, vp, bt = _paged_case(b, hkv, g, dh, page, per_seq=5)
+    ctx = jnp.asarray([5 * page - 3, 3 * page + 9], jnp.int32)
+    _check_paged(q, kp, vp, bt, ctx, window=window)
+
+
+def test_paged_decode_attention_bf16():
+    b, hkv, g, dh, page = 2, 2, 4, 64, 16
+    q, kp, vp, bt = _paged_case(b, hkv, g, dh, page, per_seq=4)
+    ctx = jnp.asarray([4 * page, 3 * page - 6], jnp.int32)
+    q, kp, vp = (x.astype(jnp.bfloat16) for x in (q, kp, vp))
+    _check_paged(q, kp, vp, bt, ctx)
 
 
 # ---------------------------------------------------------------------------
