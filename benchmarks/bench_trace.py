@@ -1,0 +1,131 @@
+"""Tracing plane benchmark: overhead + exporter smoke.
+
+Two questions:
+
+1. **What does always-on tracing cost?**  The fig1 pipeline runs the
+   same task burst with tracing off and with ``sample=1.0``; the table
+   reports makespan and wall-time deltas (spans are plain dataclass
+   appends on the virtual-time hot path, so both should be ~0).
+2. **Do the exports hold their contract?**  A fig1 run and a workflow
+   (deep_review) run are exported as ``TRACE_fig1.json`` /
+   ``TRACE_workflow.json`` into the artifact directory; the section
+   checks Chrome-trace validity, segment-sum-vs-e2e tiling (the <=1%
+   acceptance bound), and that at least one control-plane action is
+   causally linked — the same files CI uploads and schema-gates.
+
+    PYTHONPATH=src python benchmarks/bench_trace.py [--smoke]
+"""
+from __future__ import annotations
+
+import importlib.util
+import sys
+import time
+from pathlib import Path
+
+# runnable both as `python -m benchmarks.run --only trace` and directly
+_ROOT = Path(__file__).resolve().parent.parent
+for p in (str(_ROOT), str(_ROOT / "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+from benchmarks.common import Report  # noqa: E402
+from repro.agents import (AgenticPipeline, PipelineConfig, TaskSpec,
+                          WorkflowConfig, deep_review)  # noqa: E402
+from repro.agents.workloads import GraphBurst  # noqa: E402
+from repro.core.intent import compile_intent  # noqa: E402
+
+
+def _report_tool():
+    path = _ROOT / "tools" / "trace_report.py"
+    spec = importlib.util.spec_from_file_location("trace_report", path)
+    mod = importlib.util.module_from_spec(spec)
+    sys.modules[spec.name] = mod
+    spec.loader.exec_module(mod)
+    return mod
+
+
+INTENT = """
+rule widen on developer.queue_len > 2 hold 1:
+    => set developer.max_num_seqs 48; note widened under burst
+"""
+
+
+def _run_fig1(n_tasks: int, traced: bool):
+    pipe = AgenticPipeline(PipelineConfig(n_testers=2))
+    pipe.controller.install(compile_intent(INTENT))
+    if traced:
+        pipe.tracer.set_scope(None, 1.0)
+    for i in range(n_tasks):
+        pipe.submit(TaskSpec(session=f"s{i}", n_functions=4))
+    t0 = time.perf_counter()
+    pipe.run(until=240.0)
+    wall = time.perf_counter() - t0
+    assert len(pipe.done) == n_tasks, f"{len(pipe.done)}/{n_tasks} done"
+    makespan = max(s.finished_at for s in pipe.done)
+    return pipe, makespan, wall
+
+
+def _check_export(rpt, pipe, path: Path, rep: Report, label: str,
+                  want_links: bool) -> None:
+    doc = pipe.tracer.export(path, recorder=pipe.recorder)
+    loaded = rpt.load(path)
+    errors = rpt.validate(loaded)
+    assert errors == [], f"{label}: invalid chrome trace: {errors[:3]}"
+    checks = rpt.decomposition_check(rpt.spans_from(loaded))
+    assert checks, f"{label}: no closed request spans"
+    worst = max(abs(tot - dur) / max(dur, 1e-9) for _, tot, dur in checks)
+    assert worst <= 0.01, f"{label}: segment tiling off by {worst:.2%}"
+    links = doc["otherData"]["links"]
+    if want_links:
+        assert links >= 1, f"{label}: no causally-linked action"
+    rep.add(f"export_{label}", spans=doc["otherData"]["spans"],
+            actions=doc["otherData"]["actions"], links=links,
+            requests=len(checks), worst_tiling=f"{worst:.4%}",
+            file=path.name)
+
+
+def main(smoke: bool = False, out_dir: str = "artifacts/bench"):
+    out = Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    rpt = _report_tool()
+    rep = Report("tracing plane: overhead + export contract")
+    n_tasks = 4 if smoke else 12
+
+    _, mk_off, wall_off = _run_fig1(n_tasks, traced=False)
+    pipe, mk_on, wall_on = _run_fig1(n_tasks, traced=True)
+    rep.add("fig1_untraced", tasks=n_tasks, makespan=f"{mk_off:.3f}",
+            wall_s=f"{wall_off:.2f}")
+    rep.add("fig1_traced", tasks=n_tasks, makespan=f"{mk_on:.3f}",
+            wall_s=f"{wall_on:.2f}",
+            makespan_delta=f"{(mk_on - mk_off) / mk_off:+.3%}",
+            spans=pipe.tracer.spans_total)
+    assert abs(mk_on - mk_off) <= 1e-9 * max(mk_off, 1.0), (
+        "tracing changed the virtual-time schedule")
+    _check_export(rpt, pipe, out / "TRACE_fig1.json", rep, "fig1",
+                  want_links=True)
+
+    # workflow DAG: stage spans + critical path from the export alone
+    wf = AgenticPipeline.build(
+        deep_review(depth=2 if smoke else 4),
+        WorkflowConfig(router_policy="least_loaded"))
+    wf.tracer.set_scope(None, 1.0)
+    GraphBurst(wf, n_tasks=2 if smoke else 6).start()
+    wf.run(until=240.0)
+    assert wf.done, "workflow run finished no tasks"
+    _check_export(rpt, wf, out / "TRACE_workflow.json", rep, "workflow",
+                  want_links=False)
+    path = rpt.critical_path(rpt.spans_from(rpt.load(
+        out / "TRACE_workflow.json")), wf.done[0].task_id)
+    rep.add("workflow_critical_path", hops=len(path),
+            chain=">".join(s.name.split(":", 1)[-1] for s in path))
+    assert len(path) >= 2, "critical path did not chain stages"
+
+    rep.note("segment tiling bound: |sum(segments) - e2e| <= 1% per request")
+    rep.note("trace artifacts: TRACE_fig1.json TRACE_workflow.json "
+             "(chrome://tracing / ui.perfetto.dev)")
+    return rep
+
+
+if __name__ == "__main__":
+    smoke = "--smoke" in sys.argv
+    print(main(smoke=smoke).render())

@@ -31,7 +31,7 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all",
                     help="comma list: fig3,fig6,fig7,prefix,workflow,"
-                         "disagg,tenancy,kernels,calibrate,roofline")
+                         "disagg,tenancy,trace,kernels,calibrate,roofline")
     ap.add_argument("--out-dir", default="artifacts/bench",
                     help="directory for BENCH_*.json summaries")
     ap.add_argument("--smoke", action="store_true",
@@ -42,8 +42,8 @@ def main() -> int:
 
     summary: dict[str, dict] = {}
     names = [n for n in ("fig3", "fig6", "fig7", "prefix", "workflow",
-                         "disagg", "tenancy", "kernels", "calibrate",
-                         "roofline")
+                         "disagg", "tenancy", "trace", "kernels",
+                         "calibrate", "roofline")
              if want is None or n in want]
     for name in names:
         t0 = time.time()
@@ -70,6 +70,10 @@ def main() -> int:
         elif name == "tenancy":
             from benchmarks import bench_tenancy
             report = bench_tenancy.main(smoke=args.smoke)
+        elif name == "trace":
+            from benchmarks import bench_trace
+            report = bench_trace.main(smoke=args.smoke,
+                                      out_dir=str(out_dir))
         elif name == "kernels":
             from benchmarks import bench_kernels
             report = bench_kernels.main()

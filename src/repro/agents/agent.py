@@ -56,7 +56,8 @@ class DeveloperAgent:
         req = Request(prompt_len=spec.prompt_tokens,
                       max_new_tokens=spec.n_functions * spec.func_tokens,
                       priority=spec.priority, stage="developer",
-                      meta={"spec": spec, "prefix": prefix})
+                      meta={"spec": spec, "prefix": prefix,
+                            "task": spec.task_id})
         self._active[req.req_id] = spec
         self.out.begin_task(
             spec.task_id, session=spec.session,

@@ -38,6 +38,7 @@ from repro.core.controller import Controller
 from repro.core.dataplane import Channel
 from repro.core.metrics import CentralPoller, Collector, MetricBus, StateStore
 from repro.core.registry import Registry
+from repro.core.trace import FlightRecorder, Tracer
 from repro.core.types import Granularity, Priority, fresh_id
 from repro.serving.disagg import DisaggPool
 from repro.serving.engine_sim import SimEngine
@@ -114,7 +115,16 @@ class ServingFabric:
         self.poller.attach(self.collector)
         self.registry = Registry()
         self.controller = Controller(self.loop, self.registry, self.poller,
-                                     interval=interval, bus=self.bus)
+                                     interval=interval, bus=self.bus,
+                                     collector=self.collector)
+        # tracing plane: off by default (the `trace` intent verb or a
+        # direct knob write turns sampling on at runtime); the flight
+        # recorder always captures the controller's audit actions so a
+        # later-enabled trace can still show what the control plane did
+        self.tracer = Tracer(self.loop.now, collector=self.collector)
+        self.registry.register(self.tracer)
+        self.recorder = FlightRecorder(self.loop.now, bus=self.bus)
+        self.controller.attach_recorder(self.recorder)
         self.done: list = []
         self.on_task_done = None
 
@@ -179,6 +189,7 @@ class AgenticPipeline(ServingFabric):
             eng = SimEngine(self.loop, self.costmodel,
                             sched(cfg.tester_slots),
                             name=f"tester-{i}", collector=self.collector)
+            eng.tracer = self.tracer
             t = TesterAgent(f"tester-{i}", eng, self.loop,
                             directory=self.directory, kvx=self.kvx,
                             header_tokens=cfg.header_tokens,
@@ -192,6 +203,9 @@ class AgenticPipeline(ServingFabric):
         dev_eng = SimEngine(self.loop, self.dev_costmodel,
                             sched(cfg.dev_slots),
                             name="developer", collector=self.collector)
+        dev_eng.tracer = self.tracer
+        self.router.tracer = self.tracer
+        self.kvx.tracer = self.tracer
         link = Link(self.loop, bandwidth=cfg.msg_bandwidth,
                     proc_time=cfg.msg_proc_time, name="dev-link")
         self.channel = Channel(self.loop, link, "developer", self.router,
@@ -274,6 +288,8 @@ class AgenticPipeline(ServingFabric):
     def submit(self, spec: TaskSpec) -> None:
         spec.submitted_at = self.loop.now()
         self._inflight[spec.task_id] = spec
+        self.tracer.begin_task(spec.task_id, t=spec.submitted_at,
+                               session=spec.session)
         self.developer.submit_task(spec)
 
     def _task_done(self, st, t: float) -> None:
@@ -281,6 +297,7 @@ class AgenticPipeline(ServingFabric):
         if spec is None:
             return
         spec.finished_at = t
+        self.tracer.end_task(spec.task_id, t)
         self.done.append(spec)
         self.collector.observe("pipeline.task_latency",
                                t - spec.submitted_at, t)
@@ -367,6 +384,7 @@ class WorkflowPipeline(ServingFabric):
                                     page_size=cfg.page_size,
                                     role=role),
                     name=f"wf-{tier}-{i}", collector=self.collector)
+                eng.tracer = self.tracer
                 w = EngineWorker(eng, tier)
                 self.workers.append(w)
                 self.router.add_instance(w, tier=tier, engine=eng)
@@ -374,6 +392,7 @@ class WorkflowPipeline(ServingFabric):
                 tier_engines.setdefault(tier, []).append(eng)
         self.registry.register(self.router)
         self.router.rules = self.controller.rules
+        self.router.tracer = self.tracer
 
         # --- role-typed pools: tiers whose replicas carry prefill/decode
         # roles get a DisaggPool (prefill→decode handoff fabric over the
@@ -393,7 +412,8 @@ class WorkflowPipeline(ServingFabric):
             pool = DisaggPool(self.loop, tier_engines[tier], kvx,
                               collector=self.collector,
                               name=f"{tier}-disagg",
-                              cluster_prefix=f"cluster.{tier}")
+                              cluster_prefix=f"cluster.{tier}",
+                              tracer=self.tracer)
             self.disagg_pools[tier] = pool
             if cfg.adaptive_roles:
                 from repro.core.policies import RoleBalancerPolicy
@@ -518,6 +538,7 @@ class WorkflowPipeline(ServingFabric):
             self._inflight.pop(tid, None)
             t = self.loop.now()
             task.finished_at = t
+            self.tracer.end_task(tid, t)
             self.done.append(task)
             self.collector.observe("workflow.task_latency",
                                    t - task.submitted_at, t)
@@ -531,6 +552,8 @@ class WorkflowPipeline(ServingFabric):
         if self.cfg.critical_path and task.deadline == math.inf:
             task.deadline = (task.submitted_at
                              + self.cfg.deadline_slack * self._cp_total)
+        self.tracer.begin_task(task.task_id, t=task.submitted_at,
+                               session=task.session)
         sources = self.graph.sources()
         self._pending[task.task_id] = len(sources)
         self._inflight[task.task_id] = task

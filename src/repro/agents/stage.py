@@ -77,6 +77,7 @@ class _StageRun:
     out_tokens: int = 0
     started_at: float = 0.0
     timer: object = None             # join-timeout event
+    trace_span: object = None        # open stage span (tracing plane)
 
 
 class EngineWorker:
@@ -239,9 +240,25 @@ class StageAgent(ControlSurface):
             prio = Priority(int(prio) + 1)
         return prio
 
+    def _trace_run(self, run: _StageRun) -> None:
+        """Open the stage's span for a task: a child of the task root,
+        and the parent every engine call made for this run links under
+        (the DAG edges the trace report's critical path walks)."""
+        tr = getattr(self.p, "tracer", None)
+        if tr is None or run.task is None:
+            return
+        tid = run.task.task_id
+        if not tr.decide(tid, stage=self.spec.name):
+            return
+        run.trace_span = tr.begin(
+            f"stage:{self.spec.name}", tid, cat="stage",
+            parent=tr.task_span(tid), stage=self.spec.name,
+            kind=self.spec.kind.value, inputs=run.inputs_done)
+
     def _dispatch(self, run: _StageRun) -> None:
         run.dispatched = True
         run.started_at = self.loop.now()
+        self._trace_run(run)
         if run.timer is not None:
             self.loop.cancel(run.timer)
             run.timer = None
@@ -272,6 +289,7 @@ class StageAgent(ControlSurface):
                 priority=prio, deadline=deadline, stage=self.spec.name,
                 meta={"stage": self.spec.name, "task": task.task_id,
                       "part": i, "cp_remaining": cp_rem,
+                      "trace_parent": run.trace_span,
                       "prefix": ((f"stage:{self.spec.name}",
                                   self.spec.prompt_tokens),
                                  (f"in:{task.task_id}", share)),
@@ -301,6 +319,10 @@ class StageAgent(ControlSurface):
         task = run.task
         self._runs.pop(task.task_id, None)
         self._done_ids.add(task.task_id)
+        if run.trace_span is not None:
+            run.trace_span.attrs["out_tokens"] = run.out_tokens
+            getattr(self.p, "tracer").end(run.trace_span, t)
+            run.trace_span = None
         lat = t - run.started_at
         self._lat.add(lat)
         if self.collector is not None:

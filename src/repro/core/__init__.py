@@ -20,15 +20,17 @@ from repro.core.metrics import (AGGREGATIONS, CentralPoller, Collector,
 from repro.core.registry import Registry
 from repro.core.rules import AgentRule, RequestRule, RuleTable
 from repro.core.tenancy import TenantDirectory, TenantEntry, TenantSpec
+from repro.core.trace import FlightRecorder, Span, Tracer
 from repro.core.types import (AgentCard, Granularity, Message, Priority,
                               Request, RequestState, SLOClass)
 
 __all__ = [
     "AGGREGATIONS", "Action", "AgentCard", "AgentRule", "CentralPoller",
     "Channel", "Collector", "ControlContext", "ControlSurface", "Controller",
-    "Granularity", "IntentError", "IntentPolicy", "KnobSpec", "Message",
-    "MetricBus", "MetricSpec", "Policy", "Priority", "Registry", "Request",
-    "RequestRule", "RequestState", "RuleTable", "SLOClass", "StateStore",
-    "TenantDirectory", "TenantEntry", "TenantSpec", "ThresholdSub",
-    "Trigger", "compile_intent", "register_aggregation",
+    "FlightRecorder", "Granularity", "IntentError", "IntentPolicy",
+    "KnobSpec", "Message", "MetricBus", "MetricSpec", "Policy", "Priority",
+    "Registry", "Request", "RequestRule", "RequestState", "RuleTable",
+    "SLOClass", "Span", "StateStore", "TenantDirectory", "TenantEntry",
+    "TenantSpec", "ThresholdSub", "Tracer", "Trigger", "compile_intent",
+    "register_aggregation",
 ]

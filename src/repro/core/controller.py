@@ -206,6 +206,18 @@ class ControlContext:
                      f"prefix={prefix} blocks={n}")
         return n
 
+    def trace(self, scope: Optional[str], rate: float) -> None:
+        """Set trace sampling (intent ``trace [tenant|stage NAME]
+        on|off|RATE``): ``scope`` is ``None`` for the global rate or
+        ``tenant:NAME`` / ``stage:NAME``; fans out to every registered
+        tracer via the ``trace`` capability."""
+        hit = []
+        for name in self.registry.with_capability("trace"):
+            self.registry.get(name).set_scope(scope, rate)
+            hit.append(name)
+        self._c._log("trace", ",".join(hit) or "-",
+                     f"scope={scope or 'global'} rate={rate:g}")
+
     def note(self, target: str, detail: str) -> None:
         self._c._log("note", target, detail)
 
@@ -230,16 +242,21 @@ class Policy:
 class Controller:
     def __init__(self, loop: EventLoop, registry: Registry,
                  poller: CentralPoller, store: Optional[StateStore] = None,
-                 interval: float = 0.05, bus: Optional[MetricBus] = None):
+                 interval: float = 0.05, bus: Optional[MetricBus] = None,
+                 collector=None, actions_cap: int = 4096):
         self.loop = loop
         self.registry = registry
         self.poller = poller
         self.store = store or poller.store
         self.interval = interval
         self.bus = bus
+        self.collector = collector
         self.rules = RuleTable()
         self.policies: list[Policy] = []
-        self.actions: list[Action] = []
+        self.actions: list[Action] = []      # bounded audit ring
+        self.actions_cap = actions_cap
+        self.actions_total = 0
+        self.recorder = None                 # optional FlightRecorder
         self.transfer_fn: Optional[Callable] = None
         self.graph = None                # workflow graph (control-plane view)
         self._running = False
@@ -333,8 +350,25 @@ class Controller:
         self._defer(_go)
 
     # -- audit ---------------------------------------------------------------------
+    def attach_recorder(self, recorder) -> None:
+        """Forward every audit-log action to a FlightRecorder (which
+        keeps its own bound and the causal-annotation machinery)."""
+        self.recorder = recorder
+
     def _log(self, kind: str, target: str, detail: str) -> None:
-        self.actions.append(Action(self.loop.now(), kind, target, detail))
+        t = self.loop.now()
+        a = Action(t, kind, target, detail)
+        self.actions_total += 1
+        self.actions.append(a)
+        if len(self.actions) > self.actions_cap:
+            # ring behavior: drop the oldest half in one O(n) move so a
+            # long fleet sim cannot leak audit memory
+            del self.actions[: self.actions_cap // 2]
+        if self.recorder is not None:
+            self.recorder.record_action(a)
+        if self.collector is not None:
+            self.collector.gauge("controller.actions_retained",
+                                 len(self.actions), t)
 
     def action_log(self, kind: Optional[str] = None) -> list[Action]:
         return [a for a in self.actions if kind is None or a.kind == kind]

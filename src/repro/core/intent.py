@@ -53,6 +53,8 @@ Grammar (line oriented; '#' comments):
             | scale GROUP (+N|-N|N) | gate CHANNEL (on|off)
             | transfer SESSION SRC DST
             | pin PREFIX | unpin PREFIX
+            | trace (on|off|RATE)          (global span sampling)
+            | trace (tenant|stage) NAME (on|off|RATE)
             | note TEXT
 
 A rule must have a ``when`` condition, an ``on`` trigger, or both.
@@ -244,6 +246,33 @@ def _parse_action(text: str, lineno: int) -> Callable[[ControlContext], None]:
     if op == "unpin" and len(args) == 1:
         prefix = args[0]
         return lambda ctx: ctx.unpin(prefix)
+    if op == "trace" and len(args) in (1, 3):
+        def _rate(tok: str) -> float:
+            if tok == "on":
+                return 1.0
+            if tok == "off":
+                return 0.0
+            try:
+                r = float(tok)
+            except ValueError:
+                raise IntentError(
+                    f"line {lineno}: trace rate must be on|off|FLOAT, "
+                    f"got {tok!r}") from None
+            if not 0.0 <= r <= 1.0:
+                raise IntentError(
+                    f"line {lineno}: trace rate {r:g} outside [0, 1]")
+            return r
+        if len(args) == 1:
+            rate = _rate(args[0])
+            return lambda ctx: ctx.trace(None, rate)
+        sel, scope_name, tok = args
+        if sel not in ("tenant", "stage"):
+            raise IntentError(
+                f"line {lineno}: trace selector must be tenant|stage, "
+                f"got {sel!r}")
+        rate = _rate(tok)
+        scope = f"{sel}:{scope_name}"
+        return lambda ctx: ctx.trace(scope, rate)
     if op == "note":
         text_ = " ".join(args)
         return lambda ctx: ctx.note("intent", text_)

@@ -424,6 +424,14 @@ _builtin("share", "Windowed fraction of fleet tokens served to a tenant.")
 _builtin("throttle_rate", "Windowed fraction of a tenant's messages held by the admission meter; lower is better.")
 _builtin("admitted_tokens", "Cumulative number of tokens metered through a tenant's admission bucket.")
 _builtin("throttled", "Cumulative number of a tenant's messages held by the admission meter.")
+_builtin("queue_wait", "Queue-wait segment of a request in seconds; lower is better.")
+_builtin("throttle_hold", "Tenant-throttle-hold segment of a request in seconds; lower is better.")
+_builtin("handoff_wait", "KV-handoff-wait segment of a request in seconds; lower is better.")
+_builtin("prefill", "Prefill segment of a request in seconds; lower is better.")
+_builtin("decode", "Decode segment of a request in seconds; lower is better.")
+_builtin("actions_retained", "Current number of control-plane actions retained in the audit ring.")
+_builtin("spans_total", "Cumulative number of trace spans recorded.")
+_builtin("spans_dropped", "Cumulative number of trace spans evicted from the bounded store.")
 
 
 # ---------------------------------------------------------------------------

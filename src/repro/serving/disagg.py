@@ -63,16 +63,22 @@ class DisaggPool:
     def __init__(self, loop: EventLoop, engines: list[EngineCore],
                  kvx: KVTransferManager, collector=None,
                  name: str = "disagg", cluster_prefix: str = "cluster",
-                 tenants=None):
+                 tenants=None, tracer=None):
         self.loop = loop
         self.name = name
         self.engines = {e.name: e for e in engines}
         self.kvx = kvx
         self.collector = collector
         self.tenants = tenants           # TenantDirectory | None
+        self.tracer = tracer             # tracing plane | None
         self.router = Router(loop, f"{name}.router", policy="disagg",
                              collector=collector, tenants=tenants)
         self.router.on_dispatch = self._dispatched
+        if tracer is not None:
+            self.router.tracer = tracer
+            kvx.tracer = tracer
+            for e in engines:
+                e.tracer = tracer
         if tenants is not None:
             # one directory serves the fleet: schedulers read fairness
             # weights, engines report per-tenant TTFT through it

@@ -63,6 +63,12 @@ class EngineCore(ControlSurface):
         self.finished: list[Request] = []
         self.on_finish: Optional[Callable[[Request, float], None]] = None
         self.on_token: Optional[Callable[[Request, int, float], None]] = None
+        # tracing plane (wired by the owning pipeline/fabric): the
+        # scheduler reports admit/preempt instants so segment spans
+        # open/close at the exact lifecycle transitions
+        self.tracer = None
+        self.scheduler.on_admit = self._trace_admit
+        self.scheduler.on_preempt = self._trace_preempt
         # -- disaggregation plane hooks (wired by a DisaggPool) ------------
         self.disagg = None                          # owning handoff fabric
         self.kv_ready_fn: Optional[Callable[[Request], float]] = None
@@ -134,6 +140,7 @@ class EngineCore(ControlSurface):
         if not req.meta.get("arrived"):
             req.meta["arrived"] = True
             req.arrival_time = self.now()
+        self._trace_submit(req)
         self.scheduler.submit(req)
         self._gauge("queue_len", self.scheduler.queue_len)
         self._gauge("prefill_queue_tokens",
@@ -169,7 +176,75 @@ class EngineCore(ControlSurface):
         slot and pages free immediately; the request's state rides the
         handoff transfer to its decode engine."""
         self.scheduler.release_for_handoff(req)
+        self._trace_seg(req, "handoff_wait")
         self._gauge("num_running", self.scheduler.num_running)
+
+    # ------------------------------------------------------------- tracing
+    # Segment spans tile [arrival, finish] exactly: each lifecycle
+    # transition closes the open segment and opens the next at the same
+    # timestamp, so the per-request decomposition sums to the measured
+    # end-to-end latency (the acceptance check in tests/test_trace.py).
+    def _trace_submit(self, req: Request) -> None:
+        tr = self.tracer
+        if tr is None:
+            return
+        if "traced" not in req.meta:
+            tid = req.meta.get("task") or req.req_id
+            traced = tr.decide(tid, tenant=req.tenant, stage=req.stage)
+            req.meta["traced"] = traced
+            if traced:
+                parent = req.meta.get("trace_parent") or tr.task_span(tid)
+                root = tr.begin(
+                    f"request:{req.req_id}", tid, cat="request",
+                    parent=parent, t=req.arrival_time, engine=self.name,
+                    req_id=req.req_id, stage=req.stage or "",
+                    tenant=req.tenant)
+                req.meta["trace_root"] = root
+                # throttle-hold spans recorded upstream by the router
+                # (before a root existed) become children of the root
+                for sp in req.meta.pop("trace_pre", []):
+                    sp.parent_id = root.span_id
+        self._trace_seg(req, "queue_wait")
+
+    def _trace_seg(self, req: Request, name: str) -> None:
+        """Roll the request's open segment over to ``name`` at now."""
+        tr = self.tracer
+        if tr is None or not req.meta.get("traced"):
+            return
+        t = self.now()
+        cur = req.meta.get("trace_seg")
+        if cur is not None and cur.t1 is None:
+            if cur.name == name and cur.attrs.get("engine") == self.name:
+                return                  # same segment, same engine: keep it
+            tr.end(cur, t)
+        root = req.meta.get("trace_root")
+        if root is None or root.t1 is not None:
+            req.meta["trace_seg"] = None
+            return
+        req.meta["trace_seg"] = tr.begin(name, root.trace_id, cat="segment",
+                                         parent=root, t=t, engine=self.name,
+                                         req_id=req.req_id)
+
+    def _trace_admit(self, req: Request) -> None:
+        # admit_direct lands straight in RUNNING (handoff/migration →
+        # decode); _admit lands in PREFILL
+        self._trace_seg(req, "decode" if req.state is RequestState.RUNNING
+                        else "prefill")
+
+    def _trace_preempt(self, req: Request) -> None:
+        self._trace_seg(req, "queue_wait")
+
+    def _trace_finish(self, req: Request, t: float) -> None:
+        tr = self.tracer
+        if tr is None or not req.meta.get("traced"):
+            return
+        tr.end(req.meta.get("trace_seg"), t)
+        req.meta["trace_seg"] = None
+        root = req.meta.get("trace_root")
+        if root is not None:
+            root.attrs["latency"] = t - req.arrival_time
+            root.attrs["tokens"] = req.generated
+            tr.end(root, t)
 
     # -------------------------------------------------------------- metrics
     def _gauge(self, name: str, value: float) -> None:
@@ -214,6 +289,10 @@ class EngineCore(ControlSurface):
                 continue
             r.state = RequestState.RUNNING
             self.scheduler.commit_prefix(r)
+            if self.role != "prefill":
+                # prefill-role engines skip the zero-length decode span:
+                # their prefill segment rolls directly to handoff_wait
+                self._trace_seg(r, "decode")
             if tok is not None:
                 self._emit_token(r, int(tok), t)
                 if r.first_token_time is None:
@@ -267,6 +346,7 @@ class EngineCore(ControlSurface):
             if r.generated > 1 and r.first_token_time is not None:
                 tpt = (t - r.first_token_time) / max(r.generated - 1, 1)
                 self._observe("tpt", tpt)
+            self._trace_finish(r, t)
             if self.on_finish is not None:
                 self.on_finish(r, t)
 

@@ -101,6 +101,7 @@ class KVTransferManager:
         self.bandwidth = bandwidth
         self.latency = latency
         self._links: dict[tuple[str, str], Link] = {}
+        self.tracer = None                # tracing plane | None
         self.transfers = 0
         self.bytes_moved = 0.0
         self.payload_movers: dict[tuple[str, str], Callable] = {}
@@ -179,6 +180,7 @@ class KVTransferManager:
         rec.ready_at = self.link(rec.src, rec.dst).transfer(
             delta, lambda: None)
         self._count_handoff_bytes(delta)
+        self._trace_chunk(rec, delta, rec.ready_at, tail=False)
 
     def finish_handoff(self, req_id: str, src: str, dst: str,
                        total_tokens: int,
@@ -202,6 +204,7 @@ class KVTransferManager:
         if tail > 0:
             t = self.link(src, dst).transfer(tail, on_ready)
             self._count_handoff_bytes(tail)
+            self._trace_chunk(rec, tail, t, tail=True)
         else:
             # everything already streamed: residency lands with the last
             # in-flight chunk (or immediately, if it has already landed)
@@ -229,6 +232,20 @@ class KVTransferManager:
     def end_handoff(self, req_id: str) -> None:
         """Drop a handoff record (delivered and admitted, or aborted)."""
         self.handoff_records.pop(req_id, None)
+
+    def _trace_chunk(self, rec: HandoffRecord, nbytes: float,
+                     ready_at: float, tail: bool) -> None:
+        """Record one streamed KV chunk as a span on the kv-fabric
+        track: [send, delivery].  Gated on an *existing* sample decision
+        (``decided``) — the fabric keys handoffs by req_id and must not
+        originate fresh decisions for requests tracing keyed by task."""
+        tr = self.tracer
+        if tr is None or not tr.decided(rec.req_id):
+            return
+        tr.record("kv_chunk_tail" if tail else "kv_chunk", rec.req_id,
+                  self.loop.now(), ready_at, cat="kv",
+                  src=rec.src, dst=rec.dst, bytes=int(nbytes),
+                  req_id=rec.req_id)
 
     def _count_handoff_bytes(self, nbytes: float) -> None:
         self.handoff_bytes += nbytes

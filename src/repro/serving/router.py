@@ -97,6 +97,8 @@ class Router(ControlSurface):
         self._held_tenants: dict[str, int] = {}  # tenant -> held count
         self._metered: set[str] = set()          # passed-the-bucket ids
         self._pump_at = float("inf")             # pending refill-pump time
+        self.tracer = None                       # tracing plane | None
+        self._hold_t0: dict[str, float] = {}     # msg_id -> first-hold time
         if tenants is not None:
             # rate/burst/paused knob moves can unblock held traffic NOW
             tenants.subscribe_release(self._pump_throttled)
@@ -278,6 +280,7 @@ class Router(ControlSurface):
             if was_held:
                 self._throttle_seen.discard(msg.msg_id)
                 self._held_tenants[msg.tenant] -= 1
+                self._trace_hold(msg, now)
             self._metered.add(msg.msg_id)
             self.tenants.note_admitted(msg.tenant, cost, now)
             return True
@@ -287,6 +290,8 @@ class Router(ControlSurface):
             self._held_tenants[msg.tenant] = (
                 self._held_tenants.get(msg.tenant, 0) + 1)
             self.tenants.note_throttled(msg.tenant, now)
+            if self.tracer is not None:
+                self._hold_t0[msg.msg_id] = now
         self._throttled.append(msg)
         self._gauge_throttled()
         wait = self.tenants.time_until(msg.tenant, cost, now)
@@ -304,6 +309,26 @@ class Router(ControlSurface):
     def _timed_pump(self) -> None:
         self._pump_at = float("inf")
         self._pump_throttled()
+
+    def _trace_hold(self, msg: Message, now: float) -> None:
+        """A held message just cleared the meter: record its
+        throttle-hold as a standalone segment span.  The span has no
+        parent yet — when the request reaches an engine and gets a root
+        span, ``trace_pre`` re-parents it under that root (spans are
+        mutable); the hold window tiles the gap between pool arrival
+        and engine submission."""
+        t0 = self._hold_t0.pop(msg.msg_id, None)
+        if self.tracer is None or t0 is None:
+            return
+        tid = msg.task_id or msg.msg_id
+        if not self.tracer.decide(tid, tenant=msg.tenant):
+            return
+        sp = self.tracer.record("throttle_hold", tid, t0, now,
+                                cat="segment", router=self.name,
+                                tenant=msg.tenant)
+        req = (msg.payload or {}).get("request")
+        if req is not None:
+            req.meta.setdefault("trace_pre", []).append(sp)
 
     def exempt(self, msg_id: str) -> None:
         """Mark a message as already metered, so delivering it bypasses

@@ -244,6 +244,10 @@ class Scheduler(ControlSurface):
         # sends preempted victims (it can never re-admit them itself —
         # they need a fresh prefill on a prefill-capable engine)
         self.bounce_fn: Optional[Callable[[Request], None]] = None
+        # tracing hooks: the owning engine stamps segment transitions
+        # at the exact admit/preempt instants the spans must tile on
+        self.on_admit: Optional[Callable[[Request], None]] = None
+        self.on_preempt: Optional[Callable[[Request], None]] = None
 
     def _resize_slots(self, old: int, new: int) -> None:
         if new > old:
@@ -376,6 +380,8 @@ class Scheduler(ControlSurface):
         req.prefilled = max(req.prefilled, cached)
         req.state = RequestState.PREFILL
         self.running.append(req)
+        if self.on_admit is not None:
+            self.on_admit(req)
         return True
 
     def commit_prefix(self, req: Request) -> None:
@@ -414,6 +420,8 @@ class Scheduler(ControlSurface):
         req.slot = self._free_slots.pop(0)
         req.state = RequestState.RUNNING
         self.running.append(req)
+        if self.on_admit is not None:
+            self.on_admit(req)
         return True
 
     def release_for_handoff(self, req: Request) -> None:
@@ -441,6 +449,8 @@ class Scheduler(ControlSurface):
         victim.output_tokens.clear()
         victim.first_token_time = None
         self.preempt_count += 1
+        if self.on_preempt is not None:
+            self.on_preempt(victim)
         if self.cfg.role == "decode" and self.bounce_fn is not None:
             # this scheduler never admits from waiting: re-route the
             # victim to a prefill-capable engine instead of stranding it

@@ -21,7 +21,8 @@ from repro.sim.clock import EventLoop
 EXAMPLES_DIR = Path(__file__).resolve().parent.parent / "examples"
 CLOCK_BUDGET = 90.0                      # virtual seconds per example
 SIM_EXAMPLES = ("quickstart", "autoscale", "prefix_cache",
-                "failover_drill", "workflow", "disagg", "tenancy")
+                "failover_drill", "workflow", "disagg", "tenancy",
+                "trace")
 
 
 def load_example(name: str):

@@ -2,7 +2,7 @@
 import math
 
 from repro.core.metrics import (AGGREGATIONS, CentralPoller, Collector,
-                                MetricSpec, Ring, StateStore,
+                                MetricBus, MetricSpec, Ring, StateStore,
                                 register_aggregation)
 
 
@@ -95,3 +95,39 @@ def test_semantic_specs_attached_via_describe():
     assert spec.direction == "lower_better"
     # builtin fallback by suffix
     assert c.spec("tester-0.ttft").kind == "latency"
+
+
+def test_glob_subscription_rearms_per_matched_series():
+    """A glob threshold sub tracks each concrete series independently:
+    one series sitting in-region must not mask (or re-arm) another's
+    edge state."""
+    bus = MetricBus()
+    fired = []
+    sub = bus.subscribe("eng-*.queue_len", above=5.0,
+                        fn=lambda n, v, t: fired.append((n, v)))
+    bus.publish("eng-a.queue_len", 6.0, 0.0)    # a enters -> fire
+    bus.publish("eng-b.queue_len", 7.0, 1.0)    # b enters -> fire
+    bus.publish("eng-a.queue_len", 7.0, 2.0)    # a still in-region: edge
+    bus.publish("eng-a.queue_len", 3.0, 3.0)    # a leaves -> re-arms a only
+    bus.publish("eng-b.queue_len", 8.0, 4.0)    # b never left: still edge
+    bus.publish("eng-a.queue_len", 9.0, 5.0)    # a re-entered -> fire
+    assert sub.fires == 3
+    assert [n for n, _ in fired] == \
+        ["eng-a.queue_len", "eng-b.queue_len", "eng-a.queue_len"]
+
+
+def test_cooldown_suppression_keeps_subscription_armed():
+    """Edge trigger and cooldown compose: a breach suppressed by the
+    cooldown does NOT record region entry, so the same sustained breach
+    fires once the cooldown expires rather than being lost."""
+    bus = MetricBus()
+    fired = []
+    sub = bus.subscribe("m", above=5.0, cooldown=10.0,
+                        fn=lambda n, v, t: fired.append(t))
+    bus.publish("m", 6.0, 0.0)      # fire (records entry + last_fire)
+    bus.publish("m", 7.0, 1.0)      # in-region: edge-blocked
+    bus.publish("m", 3.0, 2.0)      # leaves region: re-arm
+    bus.publish("m", 8.0, 3.0)      # re-entry but 3s < cooldown: suppressed,
+    bus.publish("m", 8.0, 12.0)     # ... stayed ARMED -> fires post-cooldown
+    assert sub.fires == 2
+    assert fired == [0.0, 12.0]
