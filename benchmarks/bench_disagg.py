@@ -53,7 +53,7 @@ from repro.serving.kv_transfer import (KVTransferManager,  # noqa: E402
                                        SessionDirectory)
 from repro.serving.scheduler import SchedulerConfig  # noqa: E402
 from repro.sim.clock import EventLoop  # noqa: E402
-from repro.sim.costmodel import CostModel  # noqa: E402
+from repro.sim.costmodel import costmodel_for  # noqa: E402
 
 N_ENGINES = 4
 CHIPS_PER_ENGINE = 4                  # 16-chip budget per arm
@@ -85,7 +85,7 @@ class _Fleet:
         self.registry = Registry()
         self.controller = Controller(self.loop, self.registry, self.poller,
                                      interval=0.05, bus=self.bus)
-        cm = CostModel(get_config("agent-7b"), chips=CHIPS_PER_ENGINE)
+        cm = costmodel_for(get_config("agent-7b"), chips=CHIPS_PER_ENGINE)
         self.engines = []
         for i, role in enumerate(roles):
             eng = SimEngine(

@@ -19,7 +19,7 @@ from repro.serving.engine_sim import SimEngine
 from repro.serving.prefix_cache import PrefixCache
 from repro.serving.scheduler import SchedulerConfig
 from repro.sim.clock import EventLoop
-from repro.sim.costmodel import CostModel
+from repro.sim.costmodel import costmodel_for
 
 FANOUTS = (4, 16, 64)
 SHARED_LENS = (256, 1024, 4096)
@@ -29,7 +29,7 @@ GEN = 16
 
 def run_cell(fanout: int, shared_len: int, enabled: bool) -> dict:
     loop = EventLoop()
-    cm = CostModel(get_config("agent-7b"), chips=4)
+    cm = costmodel_for(get_config("agent-7b"), chips=4)
     cfg = SchedulerConfig(max_slots=16, num_pages=4096, max_context=8192)
     eng = SimEngine(loop, cm, cfg, name="prefix-engine")
     if enabled:

@@ -52,7 +52,7 @@ from repro.serving.kv_transfer import (KVTransferManager,  # noqa: E402
                                        SessionDirectory)
 from repro.serving.scheduler import SchedulerConfig  # noqa: E402
 from repro.sim.clock import EventLoop  # noqa: E402
-from repro.sim.costmodel import CostModel  # noqa: E402
+from repro.sim.costmodel import costmodel_for  # noqa: E402
 
 N_ENGINES = 2
 CHIPS_PER_ENGINE = 4                  # 8-chip budget per arm
@@ -72,7 +72,7 @@ class _Fleet:
                                        registry=self.registry)
         for spec in specs:
             self.tenants.add(spec)
-        cm = CostModel(get_config("agent-7b"), chips=CHIPS_PER_ENGINE)
+        cm = costmodel_for(get_config("agent-7b"), chips=CHIPS_PER_ENGINE)
         self.engines = []
         for i in range(N_ENGINES):
             eng = SimEngine(

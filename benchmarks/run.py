@@ -31,7 +31,8 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all",
                     help="comma list: fig3,fig6,fig7,prefix,workflow,"
-                         "disagg,tenancy,trace,kernels,calibrate,roofline")
+                         "disagg,tenancy,trace,kernels,paged,calibrate,"
+                         "roofline")
     ap.add_argument("--out-dir", default="artifacts/bench",
                     help="directory for BENCH_*.json summaries")
     ap.add_argument("--smoke", action="store_true",
@@ -42,7 +43,7 @@ def main() -> int:
 
     summary: dict[str, dict] = {}
     names = [n for n in ("fig3", "fig6", "fig7", "prefix", "workflow",
-                         "disagg", "tenancy", "trace", "kernels",
+                         "disagg", "tenancy", "trace", "kernels", "paged",
                          "calibrate", "roofline")
              if want is None or n in want]
     for name in names:
@@ -77,6 +78,9 @@ def main() -> int:
         elif name == "kernels":
             from benchmarks import bench_kernels
             report = bench_kernels.main()
+        elif name == "paged":
+            from benchmarks import bench_paged_engine
+            report = bench_paged_engine.main(smoke=args.smoke)
         elif name == "calibrate":
             from benchmarks import calibrate
             report = calibrate.main(smoke=args.smoke,

@@ -22,7 +22,7 @@ from repro.serving.engine_sim import SimEngine
 from repro.serving.kv_transfer import KVTransferManager, SessionDirectory
 from repro.serving.scheduler import SchedulerConfig
 from repro.sim.clock import EventLoop
-from repro.sim.costmodel import CostModel
+from repro.sim.costmodel import costmodel_for
 
 INTENT = """
 # conscript e2 the moment fleet prefill backlog exceeds half a step
@@ -44,7 +44,7 @@ def main():
     registry = Registry()
     controller = Controller(loop, registry, poller, interval=0.05, bus=bus)
 
-    cm = CostModel(get_config("agent-7b"), chips=4)
+    cm = costmodel_for(get_config("agent-7b"), chips=4)
     roles = ("prefill", "decode", "decode")
     engines = [
         SimEngine(loop, cm,

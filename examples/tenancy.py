@@ -26,7 +26,7 @@ from repro.serving.engine_sim import SimEngine
 from repro.serving.kv_transfer import KVTransferManager, SessionDirectory
 from repro.serving.scheduler import SchedulerConfig
 from repro.sim.clock import EventLoop
-from repro.sim.costmodel import CostModel
+from repro.sim.costmodel import costmodel_for
 
 INTENT = """
 # throttle the noisy tenant the moment gold's p95 TTFT breaches
@@ -53,7 +53,7 @@ def main():
                            p95_ttft_target=0.15))
     tenants.add(TenantSpec("noisy", weight=1.0, slo_class="batch"))
 
-    cm = CostModel(get_config("agent-7b"), chips=4)
+    cm = costmodel_for(get_config("agent-7b"), chips=4)
     engines = [
         SimEngine(loop, cm,
                   SchedulerConfig(max_slots=8, num_pages=4096,

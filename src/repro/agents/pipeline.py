@@ -47,7 +47,7 @@ from repro.serving.prefix_cache import CacheDirectory, PrefixCache
 from repro.serving.router import Router
 from repro.serving.scheduler import SchedulerConfig
 from repro.sim.clock import EventLoop
-from repro.sim.costmodel import CostModel
+from repro.sim.costmodel import costmodel_for
 from repro.sim.network import Link
 
 
@@ -97,6 +97,10 @@ class PipelineConfig:
     cache_block_tokens: int = 64
     cache_reserve_frac: float = 0.5
     cache_evict_policy: str = "lru"
+    # measured-calibration artifacts (CALIB_*.json) for the sim engines'
+    # cost models; None = REPRO_CALIB_DIR env / artifacts/bench default,
+    # with analytic-roofline fallback when no artifact exists
+    calib_dir: Optional[str] = None
 
 
 class ServingFabric:
@@ -155,8 +159,10 @@ class AgenticPipeline(ServingFabric):
         self.controller.attach_graph(self.graph)
 
         model_cfg = get_config(cfg.model)
-        self.costmodel = CostModel(model_cfg, chips=cfg.tester_chips)
-        self.dev_costmodel = CostModel(model_cfg, chips=cfg.dev_chips)
+        self.costmodel = costmodel_for(model_cfg, chips=cfg.tester_chips,
+                                       calib_dir=cfg.calib_dir)
+        self.dev_costmodel = costmodel_for(model_cfg, chips=cfg.dev_chips,
+                                           calib_dir=cfg.calib_dir)
         # page granularity bounds the effective prefix-cache block size
         # from below: keep it <= header_tokens so the shared system
         # header fills whole blocks and is actually reusable at defaults
@@ -350,6 +356,8 @@ class WorkflowConfig:
     kv_bandwidth: float = 12.5e9         # disagg handoff interconnect
     adaptive_roles: bool = False         # install a RoleBalancerPolicy
                                          # per role-typed tier
+    calib_dir: Optional[str] = None      # CALIB_*.json dir for tier
+                                         # cost models (None = env/default)
 
 
 class WorkflowPipeline(ServingFabric):
@@ -366,7 +374,8 @@ class WorkflowPipeline(ServingFabric):
 
         # --- shared engine pool, one router over every tier ----------------
         self.costmodels = {
-            tier: CostModel(get_config(ts.model), chips=ts.chips)
+            tier: costmodel_for(get_config(ts.model), chips=ts.chips,
+                                calib_dir=cfg.calib_dir)
             for tier, ts in cfg.tiers.items()}
         self.router = Router(self.loop, "workflow-router",
                              policy=cfg.router_policy,

@@ -400,6 +400,7 @@ _builtin("queue_len", "Current length of the admission queue; lower is better un
 _builtin("num_running", "Current number of running sequences.")
 _builtin("page_util", "KV page pool utilization as a fraction; higher is better for throughput, but 1.0 means preemption pressure.")
 _builtin("step_time", "Engine step time in seconds; lower is better.")
+_builtin("mean_step_time", "EWMA of measured engine step time in seconds, published every step; lower is better. The hardware-honesty signal intents trigger on when measured step time drifts from the CostModel's prediction.")
 _builtin("ttft", "Time to first token in seconds; lower is better.")
 _builtin("latency", "End-to-end request latency in seconds; lower is better.")
 _builtin("tpt", "Time per output token in seconds; lower is better.")

@@ -7,9 +7,11 @@
 """
 from repro.models.transformer import (decode_step, default_positions, encode,
                                       forward, init, init_cache, loss_fn,
-                                      model_defs, param_count, prefill)
+                                      model_defs, paged_extract, paged_insert,
+                                      param_count, prefill, prefill_paged)
 
 __all__ = [
     "decode_step", "default_positions", "encode", "forward", "init",
-    "init_cache", "loss_fn", "model_defs", "param_count", "prefill",
+    "init_cache", "loss_fn", "model_defs", "paged_extract", "paged_insert",
+    "param_count", "prefill", "prefill_paged",
 ]

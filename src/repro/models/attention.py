@@ -235,6 +235,122 @@ def attention_cached(q: jax.Array, cache: KVCache, q_pos: jax.Array, *,
 
 
 # ---------------------------------------------------------------------------
+# Paged-pool KV cache (the measured fast path)
+# ---------------------------------------------------------------------------
+
+
+class PagedKVCache(NamedTuple):
+    """Shared KV page pool for one layer: ``(num_pages + 1, page, Hkv,
+    dh)``.  Physical page ids come from ``serving.kv_cache.PageAllocator``
+    — page ``i`` of the pool IS allocator page ``i``, so the scheduling
+    plane's accounting and the attention memory layout are one structure,
+    and sequences acquiring a shared prefix block attend through the
+    *same* physical pages with zero KV copies.
+
+    The extra last page is a write sink: batch rows whose block-table
+    entry is -1 (inactive slots, positions past the mapped tail) scatter
+    there instead of corrupting page 0.  Reads clamp -1 to page 0 and
+    mask by position, matching the Pallas kernel's contract."""
+
+    k: jax.Array       # (num_pages + 1, page, Hkv, dh)
+    v: jax.Array       # (num_pages + 1, page, Hkv, dh)
+
+
+def init_paged_kv_cache(num_pages: int, page: int, hkv: int, dh: int,
+                        dtype) -> PagedKVCache:
+    return PagedKVCache(
+        k=jnp.zeros((num_pages + 1, page, hkv, dh), dtype),
+        v=jnp.zeros((num_pages + 1, page, hkv, dh), dtype),
+    )
+
+
+def _phys_slots(cache: PagedKVCache, tables: jax.Array,
+                pos: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Map absolute token positions (B,S) through block tables (B,P) to
+    (physical page, in-page slot); unmapped positions hit the sink."""
+    page = cache.k.shape[1]
+    p_max = tables.shape[1]
+    sink = cache.k.shape[0] - 1
+    logical = pos // page
+    phys = jnp.take_along_axis(tables, jnp.clip(logical, 0, p_max - 1),
+                               axis=1)
+    bad = (phys < 0) | (logical < 0) | (logical >= p_max)
+    return jnp.where(bad, sink, phys), pos % page
+
+
+def paged_cache_write(cache: PagedKVCache, k_new: jax.Array,
+                      v_new: jax.Array, start_pos: jax.Array,
+                      tables: jax.Array) -> PagedKVCache:
+    """Append S_new tokens at absolute positions start_pos..+S_new
+    through per-sequence block tables (B, P) of physical page ids.
+    Live rows own their mapped pages exclusively, so scatters never
+    collide; -1 rows (inactive slots) land in the sink page."""
+    b, s_new = k_new.shape[:2]
+    pos = start_pos[:, None] + jnp.arange(s_new)[None, :]         # (B, S)
+    return paged_cache_write_at(cache, k_new, v_new, pos, tables)
+
+
+def paged_cache_write_at(cache: PagedKVCache, k_new: jax.Array,
+                         v_new: jax.Array, pos: jax.Array,
+                         tables: jax.Array) -> PagedKVCache:
+    """Scatter tokens at explicit absolute positions (B, S); negative
+    positions (unwritten ring slots during KV injection) hit the sink."""
+    phys, slot = _phys_slots(cache, tables, pos)
+    k = cache.k.at[phys, slot].set(k_new)
+    v = cache.v.at[phys, slot].set(v_new)
+    return PagedKVCache(k, v)
+
+
+def paged_view(cache: PagedKVCache, tables: jax.Array) -> KVCache:
+    """Gather a (B, P·page) contiguous view of each sequence's pages —
+    the pure-jnp oracle for the Pallas paged kernel, and the prefill
+    path (the kernel is decode-only).  Returned as a ring-layout
+    ``KVCache`` so the masked-softmax core is shared: ``kpos`` is the
+    absolute position (logical index) for mapped pages, -1 for the
+    unmapped tail."""
+    b, p_max = tables.shape
+    page, hkv, dh = cache.k.shape[1:]
+    phys = jnp.maximum(tables, 0)
+    kg = cache.k[phys].reshape(b, p_max * page, hkv, dh)
+    vg = cache.v[phys].reshape(b, p_max * page, hkv, dh)
+    t = p_max * page
+    kpos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+    kpos = jnp.where(jnp.repeat(tables >= 0, page, axis=1), kpos, -1)
+    return KVCache(kg, vg, kpos)
+
+
+def self_attention_paged(params: dict, x: jax.Array, cache: PagedKVCache,
+                         cfg: ModelConfig, spec: BlockSpec,
+                         positions: jax.Array, tables: jax.Array,
+                         ) -> tuple[jax.Array, PagedKVCache]:
+    """Write-then-attend over the shared page pool.  Serves both decode
+    (Sq = 1) and suffix prefill (Sq = uncached prompt tokens, attending
+    back into prefix pages a sibling request already populated).
+
+    Decode with ``cfg.use_pallas`` runs the Pallas paged kernel
+    (``ops.paged_decode_attention``) straight over the pool + live block
+    tables; everything else uses the jnp gather oracle, which is also
+    the interpret-parity reference the tests pin the kernel against."""
+    q, k, v = qkv_project(params, x, cfg, positions)
+    pos1 = _pos1d(positions)
+    cache = paged_cache_write(cache, k, v, pos1[:, 0], tables)
+    sq = q.shape[1]
+    if cfg.use_pallas and sq == 1:
+        from repro.kernels import ops
+        # write-then-attend: the just-written token is position pos, so
+        # ctx = pos + 1; rows with an unmapped head page are inactive
+        # padding slots — zero context (the kernel emits zeros there)
+        ctx = jnp.where(tables[:, 0] >= 0, pos1[:, 0] + 1, 0)
+        out = ops.paged_decode_attention(q, cache.k, cache.v, tables, ctx,
+                                         window=spec.window)
+    else:
+        view = paged_view(cache, tables)
+        out = attention_cached(q, view, pos1, window=spec.window,
+                               chunk=cfg.attn_chunk)
+    return out_project(params, out), cache
+
+
+# ---------------------------------------------------------------------------
 # Full attention block entry points (proj + rope + core + out-proj)
 # ---------------------------------------------------------------------------
 

@@ -17,11 +17,12 @@ import jax.numpy as jnp
 
 from repro.configs.base import BlockSpec, ModelConfig
 from repro.models import ssm
-from repro.models.attention import (CrossKV, attn_defs,
+from repro.models.attention import (CrossKV, PagedKVCache, attn_defs,
                                     cross_attention, cross_attention_cached,
                                     cross_kv_precompute, init_kv_cache,
-                                    kv_cache_size, self_attention,
-                                    self_attention_cached,
+                                    init_paged_kv_cache, kv_cache_size,
+                                    self_attention, self_attention_cached,
+                                    self_attention_paged,
                                     self_attention_prefill)
 from repro.models.layers import mlp, mlp_defs, rmsnorm, rmsnorm_defs
 from repro.models.moe import moe_defs, moe_ffn
@@ -89,6 +90,21 @@ def init_block_cache(cfg: ModelConfig, spec: BlockSpec, batch: int,
     return cache
 
 
+def init_paged_block_cache(cfg: ModelConfig, spec: BlockSpec,
+                           num_pages: int, page_size: int, dtype):
+    """Paged-pool decode state for one layer.  The pool is shared across
+    slots (no batch axis) and sized by the *allocator's* page count, so
+    PageAllocator accounting is the single source of truth for capacity.
+    Only plain attention blocks page cleanly — recurrent state and cross
+    KV have no page structure."""
+    if spec.kind not in ("attn", "dec") or spec.cross_attention:
+        raise ValueError(
+            f"paged KV layout supports attention-only blocks, not "
+            f"{spec.kind!r} (cross={spec.cross_attention})")
+    return {"kv": init_paged_kv_cache(num_pages, page_size,
+                                      cfg.n_kv_heads, cfg.d_head, dtype)}
+
+
 # ---------------------------------------------------------------------------
 # Apply
 # ---------------------------------------------------------------------------
@@ -114,8 +130,10 @@ def _ffn(params: dict, x: jax.Array, cfg: ModelConfig,
 
 def block_apply(params: dict, x: jax.Array, cfg: ModelConfig,
                 spec: BlockSpec, positions: jax.Array, mode: str,
-                cache=None, memory: Optional[jax.Array] = None) -> BlockOut:
-    """x: (B,S,d); positions: (B,S) or (B,S,3)."""
+                cache=None, memory: Optional[jax.Array] = None,
+                tables: Optional[jax.Array] = None) -> BlockOut:
+    """x: (B,S,d); positions: (B,S) or (B,S,3); tables: (B,P) physical
+    page ids when the cache is paged (see attention.PagedKVCache)."""
     zero = jnp.zeros((), jnp.float32)
 
     if spec.kind == "mlstm":
@@ -162,6 +180,12 @@ def block_apply(params: dict, x: jax.Array, cfg: ModelConfig,
     if mode == "train":
         a = self_attention(params["attn"], xr, cfg, spec, positions,
                            causal=causal)
+    elif isinstance(cache.get("kv"), PagedKVCache):
+        # paged pool: prefill and step are the same write-then-attend
+        # gather (a suffix prefill must see a sibling's prefix pages)
+        a, kv = self_attention_paged(params["attn"], xr, cache["kv"], cfg,
+                                     spec, positions, tables)
+        new_cache["kv"] = kv
     elif mode == "prefill":
         a, kv = self_attention_prefill(params["attn"], xr, cache["kv"], cfg,
                                        spec, positions)

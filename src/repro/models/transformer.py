@@ -18,7 +18,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, Segment
 from repro.models import params as prm
-from repro.models.blocks import block_apply, block_defs, init_block_cache
+from repro.models.blocks import (block_apply, block_defs, init_block_cache,
+                                 init_paged_block_cache)
 from repro.models.layers import (chunked_unembed_xent, embed, embed_defs,
                                  rmsnorm, rmsnorm_defs, softmax_xent,
                                  unembed, unembed_defs, unembed_tied)
@@ -100,7 +101,8 @@ def _constrain_act(x: jax.Array, cfg: ModelConfig,
         return x
 
 
-def _scan_blocks(p_stack, spec, x, cfg, positions, mode, cache_stack, memory):
+def _scan_blocks(p_stack, spec, x, cfg, positions, mode, cache_stack, memory,
+                 tables=None):
     """Scan over one stacked run of identical blocks.
 
     ``cfg.scan_layers=False`` unrolls the stack into a python loop —
@@ -120,7 +122,8 @@ def _scan_blocks(p_stack, spec, x, cfg, positions, mode, cache_stack, memory):
 
     def body_cached(xc, xs):
         p, c = xs
-        out = block_apply(p, xc, cfg, spec, positions, mode, c, memory)
+        out = block_apply(p, xc, cfg, spec, positions, mode, c, memory,
+                          tables)
         return _constrain_act(out.x, cfg), (out.cache, out.aux)
 
     if mode == "train":
@@ -151,7 +154,7 @@ def _scan_blocks(p_stack, spec, x, cfg, positions, mode, cache_stack, memory):
 
 
 def _run_segment(seg_params, seg: Segment, x, cfg, positions, mode,
-                 seg_cache, memory):
+                 seg_cache, memory, tables=None):
     aux_total = jnp.zeros((), jnp.float32)
 
     if seg.repeat == 1:
@@ -159,7 +162,7 @@ def _run_segment(seg_params, seg: Segment, x, cfg, positions, mode,
         for j, (spec, n) in enumerate(seg.pattern):
             c = seg_cache[f"e{j}"] if seg_cache is not None else None
             x, nc, aux = _scan_blocks(seg_params[f"e{j}"], spec, x, cfg,
-                                      positions, mode, c, memory)
+                                      positions, mode, c, memory, tables)
             new_cache[f"e{j}"] = nc
             aux_total += aux
         return x, (new_cache if mode != "train" else None), aux_total
@@ -179,7 +182,7 @@ def _run_segment(seg_params, seg: Segment, x, cfg, positions, mode,
         new_cs = {}
         for j, (spec, n) in enumerate(seg.pattern):
             xc, nc, a = _scan_blocks(ps[f"e{j}"], spec, xc, cfg, positions,
-                                     mode, cs[f"e{j}"], memory)
+                                     mode, cs[f"e{j}"], memory, tables)
             new_cs[f"e{j}"] = nc
             aux += a
         return xc, (new_cs, aux)
@@ -208,13 +211,14 @@ def _run_segment(seg_params, seg: Segment, x, cfg, positions, mode,
     return x, caches, aux_total + jnp.sum(auxes)
 
 
-def _run_plan(plan, params_list, x, cfg, positions, mode, cache_list, memory):
+def _run_plan(plan, params_list, x, cfg, positions, mode, cache_list, memory,
+              tables=None):
     aux = jnp.zeros((), jnp.float32)
     new_caches = []
     for i, seg in enumerate(plan):
         c = cache_list[i] if cache_list is not None else None
         x, nc, a = _run_segment(params_list[i], seg, x, cfg, positions,
-                                mode, c, memory)
+                                mode, c, memory, tables)
         new_caches.append(nc)
         aux += a
     return x, (new_caches if mode != "train" else None), aux
@@ -327,14 +331,26 @@ def loss_fn(params, cfg: ModelConfig, batch: dict):
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_context: int,
-               enc_len: int = 0) -> dict:
+               enc_len: int = 0, layout: str = "ring",
+               num_pages: int = 0, page_size: int = 128) -> dict:
+    """Decode-state pytree.  ``layout='ring'`` (default) builds the
+    slot-contiguous ring buffers; ``layout='paged'`` builds one shared
+    page pool per layer sized by the allocator's ``num_pages`` — block
+    tables (traced per step) then map each slot onto its pages, so
+    admission/eviction never changes the compiled shapes."""
     dtype = jnp.dtype(cfg.dtype)
+    if layout == "paged" and num_pages <= 0:
+        raise ValueError("paged cache layout needs num_pages > 0")
 
     def seg_cache(seg: Segment):
         out = {}
         for j, (spec, n) in enumerate(seg.pattern):
-            one = init_block_cache(cfg, spec, batch, max_context, dtype,
-                                   enc_len)
+            if layout == "paged":
+                one = init_paged_block_cache(cfg, spec, num_pages,
+                                             page_size, dtype)
+            else:
+                one = init_block_cache(cfg, spec, batch, max_context, dtype,
+                                       enc_len)
             dims = (seg.repeat, n) if seg.repeat > 1 else (n,)
             out[f"e{j}"] = jax.tree.map(
                 lambda a: jnp.tile(a, dims + (1,) * a.ndim), one)
@@ -364,8 +380,11 @@ def prefill(params, cfg: ModelConfig, tokens: jax.Array, cache: dict, *,
     return logits, new_cache
 
 
-def decode_step(params, cfg: ModelConfig, tokens: jax.Array, cache: dict):
-    """tokens: (B, 1) — one new token per sequence.  Returns
+def decode_step(params, cfg: ModelConfig, tokens: jax.Array, cache: dict,
+                tables=None):
+    """tokens: (B, 1) — one new token per sequence.  ``tables`` (B, P)
+    carries the live allocator block tables for a paged-layout cache
+    (traced, so page churn never recompiles).  Returns
     (logits (B,V), updated cache)."""
     b = tokens.shape[0]
     pos = cache["pos"]                                   # (B,)
@@ -375,7 +394,147 @@ def decode_step(params, cfg: ModelConfig, tokens: jax.Array, cache: dict):
                                      (b, 1, len(cfg.mrope_sections)))
     x = embed(params["embed"], tokens)
     x, segs, _ = _run_plan(cfg.plan(), params["decoder"], x, cfg, positions,
-                           "step", cache["segments"], None)
+                           "step", cache["segments"], None, tables)
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
     logits = _logits(params, cfg, x)[:, 0]
     return logits, {"segments": segs, "pos": pos + 1}
+
+
+def prefill_paged(params, cfg: ModelConfig, tokens: jax.Array, cache: dict,
+                  tables: jax.Array, start: jax.Array, slot: jax.Array):
+    """Suffix prefill into the shared page pool.
+
+    tokens (1, S): the *uncached* prompt suffix; start (1,) int32: the
+    cached-prefix length (absolute position of tokens[0]); tables (1, P):
+    the sequence's block-table row (prefix pages first — already holding
+    a sibling's KV — then private pages); slot: the batch slot whose
+    ``pos`` to advance.  The cached prefix is never recomputed and never
+    copied: its pages are simply referenced by id, which is the
+    zero-copy shared-prefix admission path.  Returns (last-token logits
+    (1, V), updated cache)."""
+    b, s = tokens.shape
+    positions = default_positions(cfg, b, s, offset=start)
+    x = _embed_inputs(params, cfg, tokens, None)
+    x, segs, _ = _run_plan(cfg.plan(), params["decoder"], x, cfg, positions,
+                           "prefill", cache["segments"], None, tables)
+    x_last = rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    logits = _logits(params, cfg, x_last)[:, 0]
+    pos = cache["pos"].at[slot].set(start[0] + s)
+    return logits, {"segments": segs, "pos": pos}
+
+
+# ---------------------------------------------------------------------------
+# Paged <-> ring state bridge (KV migration for paged engines)
+# ---------------------------------------------------------------------------
+
+
+def _map_paged_kv(cache: dict, fn):
+    """Apply ``fn(paged_kv, stack_dims)`` to every PagedKVCache in the
+    cache's segment tree (leaves carry leading layer-stack dims)."""
+    from repro.models.attention import PagedKVCache
+
+    def walk(node):
+        if isinstance(node, PagedKVCache):
+            return fn(node)
+        if isinstance(node, dict):
+            return {k: walk(v) for k, v in node.items()}
+        if isinstance(node, list):
+            return [walk(v) for v in node]
+        return node
+
+    return walk(cache["segments"])
+
+
+def paged_extract(cfg: ModelConfig, cache: dict, table_row, ctx: int,
+                  max_context: int, slot: int) -> dict:
+    """Pull one sequence out of the paged pool as a batch-1 *ring*-layout
+    cache — the same format ring engines extract/inject, so KV migration
+    is layout-agnostic (a paged engine can hand a sequence to a ring
+    engine and vice versa)."""
+    from repro.models import attention as attn
+
+    tables = jnp.asarray(table_row, jnp.int32)[None]       # (1, P)
+
+    def one(pkv):
+        def leaf(k, v):
+            # collapse layer-stack dims, gather per layer, re-stack
+            stack = k.shape[:-4]
+            kf = k.reshape((-1,) + k.shape[-4:])
+            vf = v.reshape((-1,) + v.shape[-4:])
+            outs = [_pool_to_ring(cfg, attn.PagedKVCache(kf[i], vf[i]),
+                                  tables, ctx, max_context)
+                    for i in range(kf.shape[0])]
+            stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+            return jax.tree.map(
+                lambda a: a.reshape(stack + a.shape[1:]), stacked)
+        return leaf(pkv.k, pkv.v)
+
+    segs = _map_paged_kv(cache, one)
+    pos = jax.lax.dynamic_slice_in_dim(cache["pos"], slot, 1)
+    return {"segments": segs, "pos": pos}
+
+
+def _pool_to_ring(cfg, pkv, tables, ctx: int, max_context: int):
+    from repro.models import attention as attn
+    view = attn.paged_view(pkv, tables)                  # (1, P*page, ...)
+    size = max_context
+    ring = attn.init_kv_cache(1, size, pkv.k.shape[-2], pkv.k.shape[-1],
+                              pkv.k.dtype)
+    if ctx <= 0:
+        return ring
+    n = min(ctx, view.k.shape[1])
+    return attn.cache_write(ring, view.k[:, :n], view.v[:, :n],
+                            jnp.zeros((1,), jnp.int32))
+
+
+def paged_insert(cfg: ModelConfig, cache: dict, sub: dict, table_row,
+                 slot) -> dict:
+    """Install a batch-1 ring-layout cache (from ``paged_extract`` or a
+    ring engine's extract) into the paged pool at ``table_row``'s pages.
+    Ring slots are scattered through their absolute ``kpos`` (wrapped
+    SWA rings land at the right logical pages; empty slots hit the
+    sink)."""
+    from repro.models import attention as attn
+
+    tables = jnp.asarray(table_row, jnp.int32)[None]       # (1, P)
+    sub_leaves = []
+
+    def collect(node):
+        if isinstance(node, attn.KVCache):
+            sub_leaves.append(node)
+            return node
+        if isinstance(node, dict):
+            for v in node.values():
+                collect(v)
+        elif isinstance(node, list):
+            for v in node:
+                collect(v)
+        return node
+
+    collect(sub["segments"])
+    it = iter(sub_leaves)
+
+    def one(pkv):
+        ring = next(it)
+
+        def leaf(k, v, rk, rv, rpos):
+            stack = k.shape[:-4]
+            kf = k.reshape((-1,) + k.shape[-4:])
+            vf = v.reshape((-1,) + v.shape[-4:])
+            rkf = rk.reshape((-1,) + rk.shape[-4:])
+            rvf = rv.reshape((-1,) + rv.shape[-4:])
+            rpf = rpos.reshape((-1,) + rpos.shape[-2:])
+            outs = [attn.paged_cache_write_at(
+                        attn.PagedKVCache(kf[i], vf[i]),
+                        rkf[i].astype(kf.dtype), rvf[i].astype(kf.dtype),
+                        rpf[i], tables)
+                    for i in range(kf.shape[0])]
+            ks = jnp.stack([o.k for o in outs]).reshape(stack + k.shape[-4:])
+            vs = jnp.stack([o.v for o in outs]).reshape(stack + v.shape[-4:])
+            return attn.PagedKVCache(ks, vs)
+        return leaf(pkv.k, pkv.v, ring.k, ring.v, ring.kpos)
+
+    segs = _map_paged_kv(cache, one)
+    pos = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], sub["pos"].astype(jnp.int32), slot, axis=0)
+    return {"segments": segs, "pos": pos}

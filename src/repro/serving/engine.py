@@ -1,4 +1,4 @@
-"""Real JAX engine: actual forward passes with slot-batched ring caches.
+"""Real JAX engine: actual forward passes with slot-batched KV caches.
 
 The decode hot path is ONE fixed-shape jitted step over all slots
 (continuous batching, TPU-style: inactive slots ride along as padding so
@@ -6,14 +6,33 @@ the compiled executable never changes shape).  Sampling is **fused into
 the step**: the jitted function runs forward pass → logits →
 greedy/temperature sample and returns int32 token ids, so the (B, V)
 logits never leave the device and the only host transfer per step is
-the sampled tokens themselves.  Prefill runs per request at its exact
-prompt length (CPU container: a handful of lengths per test/example; on
-TPU you'd bucket).  Slot state surgery uses serving/cache_utils; KV
-migration uses serving/kv_transfer.
+the sampled tokens themselves.
+
+Two KV layouts, selected by the ``cache_layout`` knob:
+
+* ``ring``  — the classic slot-contiguous ring buffers.  Prefill always
+  recomputes the full prompt into a fresh batch-1 sub-cache, then the
+  slice is inserted into the batched cache (serving/cache_utils).
+* ``paged`` — one shared page pool per layer, sized by the scheduler's
+  ``PageAllocator`` (pool page *i* IS allocator page *i*).  The jitted
+  decode step takes the live block tables as a **traced** ``(slots,
+  P_max) int32`` input, so admission/eviction/preemption churn never
+  recompiles, and decode attention runs ``ops.paged_decode_attention``
+  straight over allocator state when ``cfg.use_pallas`` is set.
+  Prefill computes only the *uncached suffix* of the prompt: a shared
+  prefix acquired from the prefix cache is just page ids in the block
+  table — zero KV copies at admission.
+
+Prefill runs per request at its exact suffix length (CPU container: a
+handful of lengths per test/example; on TPU you'd bucket).  Slot state
+surgery uses serving/cache_utils (ring) or the transformer's
+paged_extract/paged_insert bridge (paged); KV migration uses
+serving/kv_transfer in both layouts.
 """
 from __future__ import annotations
 
 import time
+from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -21,15 +40,26 @@ import numpy as np
 
 from repro import models
 from repro.configs.base import ModelConfig
+from repro.core.knobs import KnobSpec
 from repro.core.types import Request, RequestState
 from repro.serving import cache_utils, sampler
 from repro.serving.engine_base import EngineCore
+from repro.serving.kv_cache import block_tables
 from repro.serving.scheduler import SchedulerConfig, StepKind
 
 
 class Engine(EngineCore):
+    KNOB_SPECS = EngineCore.KNOB_SPECS + (
+        KnobSpec("cache_layout", kind="str", choices=("ring", "paged"),
+                 attr="_cache_layout", on_change="_cache_layout_changed",
+                 doc="KV cache layout: 'ring' slot-contiguous buffers or "
+                     "'paged' shared page pool driven by live allocator "
+                     "block tables (the Pallas fast path)"),
+    )
+
     def __init__(self, cfg: ModelConfig, params, sched_cfg: SchedulerConfig,
-                 name: str = "engine", collector=None, seed: int = 0):
+                 name: str = "engine", collector=None, seed: int = 0,
+                 cache_layout: str | None = None):
         sched_cfg.require_complete_prompt = True   # one-shot real prefill
         super().__init__(name, cfg.name, sched_cfg, collector)
         self.cfg = cfg
@@ -37,11 +67,20 @@ class Engine(EngineCore):
         self._t0 = time.monotonic()
         self._key = jax.random.key(seed)
         self._axes = cache_utils.batch_axes(cfg, sched_cfg.max_context)
-        self.cache = models.init_cache(cfg, sched_cfg.max_slots,
-                                       sched_cfg.max_context)
+        # fixed block-table width: the allocator can never hand a live
+        # sequence more pages than a max_context footprint
+        self._p_max = self.scheduler.alloc.pages_for(sched_cfg.max_context)
+        if cache_layout is None:
+            cache_layout = "paged" if cfg.use_pallas else "ring"
+        self._cache_layout = cache_layout
         self._last_token = np.zeros((sched_cfg.max_slots,), np.int32)
+        self._build_cache()
 
-        @jax.jit
+        # every step consumes the previous cache and returns the next one,
+        # so the cache buffers are donated: the in-place update XLA can do
+        # then is what makes the shared page pool (one big buffer per
+        # layer, scatter-written every step) cost the same as the ring
+        @partial(jax.jit, donate_argnums=(2,))
         def _prefill(params, tokens, cache, key, temperature):
             # forward + first-token sample in one program: logits are
             # consumed on-device, only the token id comes back
@@ -49,13 +88,28 @@ class Engine(EngineCore):
             tok = sampler.sample(logits, key, temperature)
             return tok, cache
 
-        @jax.jit
+        @partial(jax.jit, donate_argnums=(2,))
         def _decode(params, tokens, cache, key, temperature):
             logits, cache = models.decode_step(params, cfg, tokens, cache)
             tok = sampler.sample(logits, key, temperature)
             return tok, cache
 
-        @jax.jit
+        @partial(jax.jit, donate_argnums=(2,))
+        def _prefill_paged(params, tokens, cache, tables, start, slot, key,
+                           temperature):
+            logits, cache = models.prefill_paged(params, cfg, tokens, cache,
+                                                 tables, start, slot)
+            tok = sampler.sample(logits, key, temperature)
+            return tok, cache
+
+        @partial(jax.jit, donate_argnums=(2,))
+        def _decode_paged(params, tokens, cache, tables, key, temperature):
+            logits, cache = models.decode_step(params, cfg, tokens, cache,
+                                               tables)
+            tok = sampler.sample(logits, key, temperature)
+            return tok, cache
+
+        @partial(jax.jit, donate_argnums=(0,))
         def _insert(cache, sub, slot):
             return cache_utils.cache_insert(cache, sub, slot, self._axes)
 
@@ -65,8 +119,50 @@ class Engine(EngineCore):
 
         self._prefill_fn = _prefill
         self._decode_fn = _decode
+        self._prefill_paged_fn = _prefill_paged
+        self._decode_paged_fn = _decode_paged
         self._insert_fn = _insert
         self._extract_fn = _extract
+
+    # ----------------------------------------------------------- cache layout
+    @property
+    def cache_layout(self) -> str:
+        return self._cache_layout
+
+    def _build_cache(self) -> None:
+        sc = self.scheduler.cfg
+        if self._cache_layout == "paged":
+            self.cache = models.init_cache(
+                self.cfg, sc.max_slots, sc.max_context, layout="paged",
+                num_pages=sc.num_pages, page_size=sc.page_size)
+        else:
+            self.cache = models.init_cache(self.cfg, sc.max_slots,
+                                           sc.max_context)
+
+    def _cache_layout_changed(self, old: str, new: str) -> None:
+        if old == new:
+            return
+        if self.scheduler.num_running > 0:
+            self._cache_layout = old            # revert before failing
+            raise RuntimeError(
+                f"{self.name}: cache_layout flip needs an idle engine "
+                f"({self.scheduler.num_running} sequences running)")
+        self._build_cache()
+
+    def _block_table_rows(self, reqs: list[Request]) -> np.ndarray:
+        """(max_slots, P_max) int32 table for the jitted step: live rows
+        come straight from ``PageAllocator.page_table`` (physical ids in
+        logical order); inactive slots are all -1 (their writes land in
+        the pool's sink page, their reads mask out)."""
+        slots = self.scheduler.cfg.max_slots
+        out = np.full((slots, self._p_max), -1, np.int32)
+        live = [r for r in reqs if 0 <= r.slot < slots]
+        if live:
+            rows = block_tables(self.scheduler.alloc,
+                                [r.req_id for r in live], width=self._p_max)
+            for r, row in zip(live, rows):
+                out[r.slot] = row
+        return out
 
     # ------------------------------------------------------------------ time
     def now(self) -> float:
@@ -86,8 +182,13 @@ class Engine(EngineCore):
         if plan.kind == StepKind.PREFILL:
             firsts = []
             for work in plan.prefills:
-                firsts.append(self._run_prefill(work.req))
-                work.chunk = work.req.prompt_len       # real engine: one shot
+                if self._cache_layout == "paged":
+                    # suffix prefill: only the uncached tokens compute
+                    work.chunk = work.req.prompt_len - work.req.prefilled
+                    firsts.append(self._run_prefill_paged(work.req))
+                else:
+                    work.chunk = work.req.prompt_len   # ring: one shot
+                    firsts.append(self._run_prefill(work.req))
             self.apply_prefill(plan.prefills, firsts, self.now())
         elif plan.kind == StepKind.DECODE:
             live = [r for r in plan.decodes
@@ -118,12 +219,35 @@ class Engine(EngineCore):
         self._last_token[req.slot] = int(tok[0])
         return int(tok[0])
 
+    def _run_prefill_paged(self, req: Request) -> int:
+        """Prefill the *uncached suffix* straight into the shared pool.
+
+        ``req.prefilled`` tokens of prompt are already resident in shared
+        prefix pages (acquired by id at admission — never copied); the
+        block-table row lays those pages first, so the suffix attends
+        back into a sibling's KV through the ordinary paged gather."""
+        cached = min(req.prefilled, req.prompt_len - 1)
+        tokens = jnp.asarray(req.prompt_tokens[cached:], jnp.int32)[None, :]
+        row = self._block_table_rows([req])[req.slot][None, :]
+        tok, self.cache = self._prefill_paged_fn(
+            self.params, tokens, self.cache, jnp.asarray(row),
+            jnp.full((1,), cached, jnp.int32), jnp.int32(req.slot),
+            self._next_key(), jnp.float32(self.temperature))
+        self._last_token[req.slot] = int(tok[0])
+        return int(tok[0])
+
     # ----------------------------------------------------------------- decode
     def _run_decode(self, reqs: list[Request]) -> list[int]:
         tokens = jnp.asarray(self._last_token[:, None])
-        toks, self.cache = self._decode_fn(self.params, tokens, self.cache,
-                                           self._next_key(),
-                                           jnp.float32(self.temperature))
+        if self._cache_layout == "paged":
+            tables = jnp.asarray(self._block_table_rows(reqs))
+            toks, self.cache = self._decode_paged_fn(
+                self.params, tokens, self.cache, tables, self._next_key(),
+                jnp.float32(self.temperature))
+        else:
+            toks, self.cache = self._decode_fn(
+                self.params, tokens, self.cache, self._next_key(),
+                jnp.float32(self.temperature))
         toks = np.asarray(toks)
         out = []
         for r in reqs:
@@ -134,8 +258,18 @@ class Engine(EngineCore):
 
     # ------------------------------------------------------------ kv transfer
     def extract_state(self, req: Request):
-        """(cache-slice pytree, last_token, nbytes) for migration."""
-        sub = self._extract_fn(self.cache, jnp.int32(req.slot))
+        """(cache-slice pytree, last_token, nbytes) for migration.  Both
+        layouts export the same batch-1 ring-format pytree, so the
+        transfer plane and the receiving engine never care which layout
+        produced it."""
+        if self._cache_layout == "paged":
+            row = self._block_table_rows([req])[req.slot]
+            ctx = int(jax.device_get(self.cache["pos"])[req.slot])
+            sub = models.paged_extract(self.cfg, self.cache, row, ctx,
+                                       self.scheduler.cfg.max_context,
+                                       req.slot)
+        else:
+            sub = self._extract_fn(self.cache, jnp.int32(req.slot))
         return {"cache": jax.device_get(sub),
                 "last_token": int(self._last_token[req.slot]),
                 "nbytes": cache_utils.cache_nbytes(sub)}
@@ -143,8 +277,14 @@ class Engine(EngineCore):
     def inject_state(self, req: Request, state: dict) -> None:
         """Install a migrated request into a fresh slot (already admitted:
         req.slot assigned, scheduler pages reserved)."""
-        self.cache = self._insert_fn(self.cache, state["cache"],
-                                     jnp.int32(req.slot))
+        if self._cache_layout == "paged":
+            row = self._block_table_rows([req])[req.slot]
+            self.cache = models.paged_insert(self.cfg, self.cache,
+                                             state["cache"], row,
+                                             req.slot)
+        else:
+            self.cache = self._insert_fn(self.cache, state["cache"],
+                                         jnp.int32(req.slot))
         self._last_token[req.slot] = state["last_token"]
         req.state = RequestState.RUNNING
         req.prefilled = req.prompt_len

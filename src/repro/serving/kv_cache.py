@@ -212,11 +212,24 @@ class PageAllocator:
 
 
 def block_tables(alloc: PageAllocator, seq_ids,
-                 pad_to: int = 0) -> list[list[int]]:
+                 pad_to: int = 0, width: int | None = None) -> list[list[int]]:
     """Batched kernel block tables: one row per sequence, physical page
     ids in logical order, right-padded with -1 to a rectangle (at least
     ``pad_to`` columns).  Feed directly to
-    ``kernels.ops.paged_decode_attention``."""
+    ``kernels.ops.paged_decode_attention``.
+
+    ``width`` pins the exact column count (the engine's jitted step
+    traces a fixed (slots, P_max) table so page churn never recompiles);
+    a row longer than ``width`` means the allocator granted a sequence
+    more context than the engine compiled for — a real invariant
+    violation, so it raises."""
     rows = [alloc.page_table(s) for s in seq_ids]
-    width = max([len(r) for r in rows] + [pad_to, 1])
+    if width is not None:
+        for s, r in zip(seq_ids, rows):
+            if len(r) > width:
+                raise ValueError(
+                    f"page table for {s!r} has {len(r)} pages > fixed "
+                    f"width {width}")
+    else:
+        width = max([len(r) for r in rows] + [pad_to, 1])
     return [r + [-1] * (width - len(r)) for r in rows]

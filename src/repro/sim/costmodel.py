@@ -208,3 +208,22 @@ class CostModel:
         cm.bytes_scale = calib.bytes_scale
         cm.step_overhead = calib.step_overhead
         return cm
+
+
+DEFAULT_CALIB_DIR = "artifacts/bench"
+
+
+def costmodel_for(cfg: ModelConfig, chips: int = 1,
+                  calib_dir=None) -> CostModel:
+    """The one constructor sim engines should use: resolve the per-model
+    measured-calibration artifact ``CALIB_{cfg.name}.json`` (written by
+    ``benchmarks/calibrate.py``) under ``calib_dir``, the
+    ``REPRO_CALIB_DIR`` environment variable, or the default benchmark
+    artifact dir, and build the CostModel from it.  Missing/invalid
+    artifacts fall back to the analytic roofline constants, so sims stay
+    runnable on a fresh checkout."""
+    import os
+    if calib_dir is None:
+        calib_dir = os.environ.get("REPRO_CALIB_DIR", DEFAULT_CALIB_DIR)
+    artifact = Path(calib_dir) / f"CALIB_{cfg.name}.json"
+    return CostModel.from_calibration(cfg, chips, artifact)
