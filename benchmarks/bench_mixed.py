@@ -1,0 +1,168 @@
+"""Stall-free mixed batching vs serialized prefill on the sim substrate.
+
+The decode-stall pathology this measures: with serialized continuous
+batching, a long prompt's prefill monopolizes whole engine steps, so
+every co-resident decode stream stalls for the full prefill — inter-
+token latency spikes by orders of magnitude whenever an agent with a
+big context shows up.  Mixed batching (scheduler ``mixed`` knob) fuses
+one budgeted prefill chunk into every live decode step instead, so the
+stall is bounded by one chunk's step time.
+
+Three configs over the same arrival trace (interactive decode streams
+plus periodic long-prefill arrivals), virtual-clock deterministic:
+
+* ``serialized`` — mixed off, one-shot prefill (the pre-ISSUE-9 path);
+* ``mixed``      — mixed on, fixed ``prefill_chunk``;
+* ``adaptive``   — mixed on, ``ChunkPolicy`` retuning ``prefill_chunk``
+  from the engine's published ``itl_p95`` gauge (the software-defined
+  knob loop).
+
+Headline: p95 ITL and p95 TTFT reduction vs serialized, with decode
+throughput (tokens per engine-busy second) held within noise — the
+ISSUE-9 acceptance gate checks >=30% p95 ITL reduction at <=5% decode
+throughput cost from BENCH_mixed.json.
+"""
+from __future__ import annotations
+
+from benchmarks.common import Report, pctl
+from repro.configs import get_config
+from repro.core import Controller, MetricBus, Registry
+from repro.core.metrics import CentralPoller, Collector, StateStore
+from repro.core.policies import ChunkPolicy
+from repro.core.types import Request
+from repro.serving.engine_sim import SimEngine
+from repro.serving.scheduler import SchedulerConfig
+from repro.sim.clock import EventLoop
+from repro.sim.costmodel import CostModel
+
+MODEL = "agent-7b"
+CHUNK = 256
+ADAPTIVE_CHUNK0 = 1024        # deliberately misconfigured starting point
+ITL_SLO = 0.03
+
+# open-loop arrival trace: steady interactive streams + long prefills
+INT_PERIOD, INT_PROMPT, INT_NEW = 0.06, 128, 32
+LONG_PERIOD, LONG_PROMPT, LONG_NEW = 1.5, 4000, 8
+
+
+def _workload(n_interactive: int, n_long: int):
+    arrivals = []
+    for i in range(n_interactive):
+        arrivals.append((i * INT_PERIOD, INT_PROMPT, INT_NEW))
+    for i in range(n_long):
+        arrivals.append(((i + 1) * LONG_PERIOD, LONG_PROMPT, LONG_NEW))
+    arrivals.sort()
+    return arrivals
+
+
+def run_cell(mode: str, n_interactive: int, n_long: int) -> dict:
+    loop = EventLoop()
+    cm = CostModel(get_config(MODEL))
+    mixed = mode != "serialized"
+    chunk0 = {"serialized": 0, "mixed": CHUNK,
+              "adaptive": ADAPTIVE_CHUNK0}[mode]
+    sc = SchedulerConfig(max_slots=16, num_pages=8192, max_context=8192,
+                         page_size=16, max_batch_tokens=512,
+                         prefill_chunk=chunk0, mixed=mixed)
+    name = f"mx-{mode}"
+
+    col = None
+    if mode == "adaptive":
+        bus = MetricBus()
+        reg = Registry()
+        store = StateStore()
+        poller = CentralPoller(store)
+        col = Collector("bench", bus=bus)
+        poller.attach(col)
+
+    eng = SimEngine(loop, cm, sc, name=name, collector=col)
+
+    pol = None
+    if mode == "adaptive":
+        reg.register(eng)
+        ctl = Controller(loop, reg, poller, interval=0.25, bus=bus)
+        # clear_frac=0 disables the grow-back path: the demo is pure
+        # converge-down-from-misconfiguration (growing mid-prefill would
+        # re-create the stall it just removed and thrash the knob)
+        pol = ChunkPolicy(name, itl_slo=ITL_SLO, chunk_min=64,
+                          chunk_max=ADAPTIVE_CHUNK0, dwell=0.5,
+                          clear_frac=0.0)
+        ctl.install(pol)
+        ctl.start()
+
+    ttfts: list[float] = []
+    gaps: list[float] = []
+
+    def on_token(r: Request, tok: int, t: float) -> None:
+        prev = r.meta.get("_bench_prev")
+        r.meta["_bench_prev"] = t
+        if prev is None:
+            ttfts.append(t - r.arrival_time)
+        else:
+            gaps.append(t - prev)
+
+    eng.on_token = on_token
+
+    reqs = []
+    for t, prompt, new in _workload(n_interactive, n_long):
+        r = Request(prompt_len=prompt, max_new_tokens=new)
+        reqs.append(r)
+        loop.call_at(t, lambda r=r: eng.submit(r))
+    loop.run_until(3600.0)                      # drain everything
+    done = sum(1 for r in reqs if r.state.value == "finished")
+    return {
+        "done": done,
+        "n": len(reqs),
+        "ttft_p95": pctl(ttfts, 0.95),
+        "itl_p95": pctl(gaps, 0.95),
+        "itl_p50": pctl(gaps, 0.50),
+        "tokens": eng.tokens_generated,
+        "busy_s": eng.busy_time,
+        "decode_tput": eng.tokens_generated / max(eng.busy_time, 1e-9),
+        "chunk_moves": len(pol.moves) if pol else 0,
+        "chunk_final": (sc.prefill_chunk if mixed else 0),
+    }
+
+
+def main(report: Report | None = None, smoke: bool = False) -> Report:
+    rep = report or Report("mixed: stall-free batching vs serialized "
+                           "prefill (sim, agent-7b roofline)")
+    n_interactive, n_long = (100, 8) if smoke else (300, 24)
+    cells = {m: run_cell(m, n_interactive, n_long)
+             for m in ("serialized", "mixed", "adaptive")}
+    base = cells["serialized"]
+    for mode, r in cells.items():
+        itl_red = (1.0 - r["itl_p95"] / base["itl_p95"]) * 100.0
+        ttft_red = (1.0 - r["ttft_p95"] / base["ttft_p95"]) * 100.0
+        tput_delta = (r["decode_tput"] / base["decode_tput"] - 1.0) * 100.0
+        rep.add(f"mixed.{mode}",
+                done=f"{r['done']}/{r['n']}",
+                ttft_p95=f"{r['ttft_p95']:.4f}",
+                itl_p95=f"{r['itl_p95']:.4f}",
+                itl_p50=f"{r['itl_p50']:.4f}",
+                decode_tput=f"{r['decode_tput']:.1f}",
+                itl_p95_reduction_pct=f"{itl_red:.1f}",
+                ttft_p95_reduction_pct=f"{ttft_red:.1f}",
+                decode_tput_delta_pct=f"{tput_delta:.2f}",
+                chunk_final=r["chunk_final"],
+                chunk_moves=r["chunk_moves"])
+    mx = cells["mixed"]
+    itl_red = (1.0 - mx["itl_p95"] / base["itl_p95"]) * 100.0
+    tput_delta = (mx["decode_tput"] / base["decode_tput"] - 1.0) * 100.0
+    rep.note(f"acceptance: mixed itl_p95 reduction {itl_red:.1f}% "
+             f"(gate >=30), decode tput delta {tput_delta:+.2f}% "
+             f"(gate within 5)")
+    rep.note("serialized stalls every decode stream for a whole "
+             f"{LONG_PROMPT}-token prefill; mixed bounds the stall at one "
+             f"{CHUNK}-token fused chunk; adaptive starts misconfigured at "
+             f"{ADAPTIVE_CHUNK0} and ChunkPolicy walks the knob down off "
+             "the engine's own itl_p95 gauge")
+    if itl_red < 30.0:
+        rep.note("WARNING: itl_p95 reduction below the 30% gate")
+    if abs(tput_delta) > 5.0 and tput_delta < 0:
+        rep.note("WARNING: decode throughput regressed beyond 5%")
+    return rep
+
+
+if __name__ == "__main__":
+    print(main().render())

@@ -31,8 +31,8 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all",
                     help="comma list: fig3,fig6,fig7,prefix,workflow,"
-                         "disagg,tenancy,trace,kernels,paged,calibrate,"
-                         "roofline")
+                         "disagg,tenancy,trace,kernels,paged,mixed,"
+                         "calibrate,roofline")
     ap.add_argument("--out-dir", default="artifacts/bench",
                     help="directory for BENCH_*.json summaries")
     ap.add_argument("--smoke", action="store_true",
@@ -44,7 +44,7 @@ def main() -> int:
     summary: dict[str, dict] = {}
     names = [n for n in ("fig3", "fig6", "fig7", "prefix", "workflow",
                          "disagg", "tenancy", "trace", "kernels", "paged",
-                         "calibrate", "roofline")
+                         "mixed", "calibrate", "roofline")
              if want is None or n in want]
     for name in names:
         t0 = time.time()
@@ -81,6 +81,9 @@ def main() -> int:
         elif name == "paged":
             from benchmarks import bench_paged_engine
             report = bench_paged_engine.main(smoke=args.smoke)
+        elif name == "mixed":
+            from benchmarks import bench_mixed
+            report = bench_mixed.main(smoke=args.smoke)
         elif name == "calibrate":
             from benchmarks import calibrate
             report = calibrate.main(smoke=args.smoke,

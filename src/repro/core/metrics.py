@@ -404,6 +404,7 @@ _builtin("mean_step_time", "EWMA of measured engine step time in seconds, publis
 _builtin("ttft", "Time to first token in seconds; lower is better.")
 _builtin("latency", "End-to-end request latency in seconds; lower is better.")
 _builtin("tpt", "Time per output token in seconds; lower is better.")
+_builtin("itl_p95", "Windowed p95 inter-token latency in seconds, published every step; lower is better. The decode-stall signal: a long serialized prefill spikes it, which is what adaptive chunked-prefill intents and ChunkPolicy trigger on.")
 _builtin("throughput", "Completed requests per second; higher is better.")
 _builtin("tokens_total", "Cumulative number of generated tokens.")
 _builtin("task_latency", "End-to-end pipeline task latency in seconds; lower is better.")

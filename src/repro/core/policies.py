@@ -364,6 +364,67 @@ class StageTierPolicy(Policy):
             self.shifts.append((ctx.now, s, want))
 
 
+class ChunkPolicy(Policy):
+    """Mixed-batching plane: retune an engine's chunked-prefill size from
+    its runtime decode-stall signal — the paper's software-defined knob
+    loop closed over the ``prefill_chunk`` attribute.
+
+    Sustained ``itl_p95`` above the SLO means the co-running prefill
+    chunk is stealing too much of each fused step: halve the chunk
+    (floored at ``chunk_min``, so prefill always progresses).  When ITL
+    is calm with margin AND prompt tokens are backed up behind prefill,
+    grow the chunk back (capped at ``chunk_max``) so TTFT recovers.
+    ``dwell`` rate-limits moves (anti-flap), and a ``prefill_chunk`` of
+    0 (= whole prompt) is treated as ``chunk_max`` when shrinking.
+    Acts only through the engine's registered Table-1 knob, so the same
+    behaviour is expressible in intent as
+
+        rule stall on engine e0.itl_p95 > 0.05:
+            => set engine e0.prefill_chunk 256
+    """
+
+    name = "chunk-policy"
+
+    def __init__(self, engine: str, itl_slo: float,
+                 chunk_min: int = 64, chunk_max: int = 1024,
+                 shrink: float = 0.5, grow: float = 2.0,
+                 clear_frac: float = 0.5, dwell: float = 0.5):
+        assert 0 < shrink < 1 < grow
+        self.engine = engine
+        self.itl_slo = itl_slo
+        self.chunk_min = chunk_min
+        self.chunk_max = chunk_max
+        self.shrink = shrink
+        self.grow = grow
+        self.clear_frac = clear_frac     # grow only below slo*clear_frac
+        self.dwell = dwell
+        self._last_move = -1e18
+        self.moves: list[tuple[float, int]] = []
+
+    def on_tick(self, ctx: ControlContext) -> None:
+        itl = ctx.metric(f"{self.engine}.itl_p95", "last",
+                         default=float("nan"))
+        if itl != itl:
+            return                       # no decode signal yet
+        if ctx.now - self._last_move < self.dwell:
+            return
+        cur = int(ctx.get(self.engine, "prefill_chunk"))
+        eff = cur if cur > 0 else self.chunk_max
+        want = eff
+        if itl > self.itl_slo:
+            want = max(self.chunk_min, int(eff * self.shrink))
+        elif itl < self.itl_slo * self.clear_frac:
+            backlog = ctx.metric(f"{self.engine}.prefill_queue_tokens",
+                                 "last", default=0.0)
+            if backlog > 0 and eff < self.chunk_max:
+                want = min(self.chunk_max, int(eff * self.grow))
+        if want == cur:
+            return
+        ctx.set(self.engine, "prefill_chunk", want)
+        self._last_move = ctx.now
+        self.moves.append((ctx.now, want))
+
+
 class RoleBalancerPolicy(Policy):
     """Disaggregation plane (ISSUE 4): flip engine *roles* from fleet
     pressure — the SDN-native version of disaggregated serving.  Reads

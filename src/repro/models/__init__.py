@@ -8,10 +8,11 @@
 from repro.models.transformer import (decode_step, default_positions, encode,
                                       forward, init, init_cache, loss_fn,
                                       model_defs, paged_extract, paged_insert,
-                                      param_count, prefill, prefill_paged)
+                                      param_count, prefill, prefill_paged,
+                                      prefill_paged_padded)
 
 __all__ = [
     "decode_step", "default_positions", "encode", "forward", "init",
     "init_cache", "loss_fn", "model_defs", "paged_extract", "paged_insert",
-    "param_count", "prefill", "prefill_paged",
+    "param_count", "prefill", "prefill_paged", "prefill_paged_padded",
 ]

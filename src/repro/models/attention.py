@@ -333,7 +333,12 @@ def self_attention_paged(params: dict, x: jax.Array, cache: PagedKVCache,
     the interpret-parity reference the tests pin the kernel against."""
     q, k, v = qkv_project(params, x, cfg, positions)
     pos1 = _pos1d(positions)
-    cache = paged_cache_write(cache, k, v, pos1[:, 0], tables)
+    # write through the explicit per-token positions (identical to the
+    # consecutive-from-start form for ordinary prefill/decode, since
+    # positions ARE consecutive there) so a padded mixed-step chunk can
+    # mark its tail -1: those writes route to the sink page instead of
+    # scribbling past the valid frontier of the sequence's pages
+    cache = paged_cache_write_at(cache, k, v, pos1, tables)
     sq = q.shape[1]
     if cfg.use_pallas and sq == 1:
         from repro.kernels import ops

@@ -423,6 +423,36 @@ def prefill_paged(params, cfg: ModelConfig, tokens: jax.Array, cache: dict,
     return logits, {"segments": segs, "pos": pos}
 
 
+def prefill_paged_padded(params, cfg: ModelConfig, tokens: jax.Array,
+                         cache: dict, tables: jax.Array, start: jax.Array,
+                         slot: jax.Array, n: jax.Array):
+    """Shape-stable suffix prefill: a fixed-capacity chunk buffer with a
+    *traced* valid length.
+
+    tokens (1, C): prompt-chunk buffer at fixed capacity C; only the
+    first ``n`` tokens are real (``n`` is a traced int32, so varying
+    chunk fill never retraces — the mixed step's contract).  Padded tail
+    positions are -1: their KV writes route to the pool's sink page
+    (``_phys_slots``) and their queries mask to nothing, so the padding
+    is inert.  Logits are taken at index ``n - 1`` (the last *valid*
+    token) and ``pos[slot]`` advances to ``start + n``.  ``start`` and
+    ``slot`` are scalar traced int32."""
+    b, c = tokens.shape
+    idx = jnp.arange(c, dtype=jnp.int32)[None, :]
+    positions = jnp.where(idx < n, start + idx, -1)
+    if cfg.mrope_sections:
+        positions = jnp.broadcast_to(positions[..., None],
+                                     (b, c, len(cfg.mrope_sections)))
+    x = _embed_inputs(params, cfg, tokens, None)
+    x, segs, _ = _run_plan(cfg.plan(), params["decoder"], x, cfg, positions,
+                           "prefill", cache["segments"], None, tables)
+    x_last = jax.lax.dynamic_slice_in_dim(x, n - 1, 1, axis=1)
+    x_last = rmsnorm(params["final_norm"], x_last, cfg.norm_eps)
+    logits = _logits(params, cfg, x_last)[:, 0]
+    pos = cache["pos"].at[slot].set(start + n)
+    return logits, {"segments": segs, "pos": pos}
+
+
 # ---------------------------------------------------------------------------
 # Paged <-> ring state bridge (KV migration for paged engines)
 # ---------------------------------------------------------------------------

@@ -23,9 +23,15 @@ Two KV layouts, selected by the ``cache_layout`` knob:
   prefix acquired from the prefix cache is just page ids in the block
   table — zero KV copies at admission.
 
-Prefill runs per request at its exact suffix length (CPU container: a
-handful of lengths per test/example; on TPU you'd bucket).  Slot state
-surgery uses serving/cache_utils (ring) or the transformer's
+Serialized prefill runs per request at its exact suffix length (CPU
+container: a handful of lengths per test/example; on TPU you'd bucket).
+With the scheduler's ``mixed`` knob on (paged layout only), prefill
+stops serializing against decode entirely: one jitted ``_mixed_step``
+co-runs every live decode slot with one padded prefill chunk —
+fixed-capacity chunk buffer, traced valid length, traced block tables —
+so the executable compiles exactly once per engine and a long prompt
+never stalls the decode batch.  Slot state surgery uses
+serving/cache_utils (ring) or the transformer's
 paged_extract/paged_insert bridge (paged); KV migration uses
 serving/kv_transfer in both layouts.
 """
@@ -109,6 +115,32 @@ class Engine(EngineCore):
             tok = sampler.sample(logits, key, temperature)
             return tok, cache
 
+        # stall-free mixed step: ALL decode slots + one padded prefill
+        # chunk in a single jitted program.  Every input is shape-stable
+        # (fixed slot count, fixed chunk capacity, fixed-width block
+        # tables; start/valid-length/slot are traced scalars), so the
+        # executable compiles exactly once per engine — allocator churn,
+        # admission, and varying chunk fill never retrace.  The decode
+        # sub-forward runs first (its writes land in the decode
+        # sequences' own pages); the prefill chunk then attends into its
+        # resident prefix pages and sets its slot's pos absolutely,
+        # overwriting the blanket pos+1 the decode bookkeeping applied.
+        @partial(jax.jit, donate_argnums=(3,))
+        def _mixed_step(params, dec_tokens, pf_tokens, cache, dec_tables,
+                        pf_tables, pf_start, pf_n, pf_slot, key, temperature):
+            self.mixed_step_traces += 1     # python side effect: runs per
+            #                                 TRACE, not per call — the
+            #                                 compile-once acceptance gate
+            dec_logits, cache = models.decode_step(params, cfg, dec_tokens,
+                                                   cache, dec_tables)
+            pf_logits, cache = models.prefill_paged_padded(
+                params, cfg, pf_tokens, cache, pf_tables, pf_start, pf_slot,
+                pf_n)
+            kd, kp = jax.random.split(key)
+            dec_tok = sampler.sample(dec_logits, kd, temperature)
+            pf_tok = sampler.sample(pf_logits, kp, temperature)
+            return dec_tok, pf_tok, cache
+
         @partial(jax.jit, donate_argnums=(0,))
         def _insert(cache, sub, slot):
             return cache_utils.cache_insert(cache, sub, slot, self._axes)
@@ -121,8 +153,19 @@ class Engine(EngineCore):
         self._decode_fn = _decode
         self._prefill_paged_fn = _prefill_paged
         self._decode_paged_fn = _decode_paged
+        self._mixed_fn = _mixed_step
         self._insert_fn = _insert
         self._extract_fn = _extract
+        # fixed chunk-buffer capacity for the mixed step, set once at
+        # construction so retuning the prefill_chunk knob never changes
+        # the compiled shape (knob values above the cap are clamped)
+        self._mixed_cap = min(sched_cfg.max_batch_tokens,
+                              sched_cfg.max_context)
+        self.mixed_step_traces = 0
+        if sched_cfg.mixed and self._cache_layout != "paged":
+            raise RuntimeError(
+                f"{name}: mixed batching needs the paged cache layout "
+                f"(got {self._cache_layout!r})")
 
     # ----------------------------------------------------------- cache layout
     @property
@@ -147,7 +190,20 @@ class Engine(EngineCore):
             raise RuntimeError(
                 f"{self.name}: cache_layout flip needs an idle engine "
                 f"({self.scheduler.num_running} sequences running)")
+        if new == "ring" and self.scheduler.cfg.mixed:
+            self._cache_layout = old            # revert before failing
+            raise RuntimeError(
+                f"{self.name}: cache_layout 'ring' is incompatible with "
+                "mixed batching — set mixed false first")
         self._build_cache()
+
+    def on_knob_set(self, name: str, old, new) -> None:
+        if name == "mixed" and new and self._cache_layout != "paged":
+            self.scheduler.cfg.mixed = old      # revert before failing
+            raise RuntimeError(
+                f"{self.name}: mixed batching needs the paged cache "
+                f"layout (current: {self._cache_layout!r})")
+        super().on_knob_set(name, old, new)
 
     def _block_table_rows(self, reqs: list[Request]) -> np.ndarray:
         """(max_slots, P_max) int32 table for the jitted step: live rows
@@ -183,13 +239,18 @@ class Engine(EngineCore):
             firsts = []
             for work in plan.prefills:
                 if self._cache_layout == "paged":
-                    # suffix prefill: only the uncached tokens compute
-                    work.chunk = work.req.prompt_len - work.req.prefilled
-                    firsts.append(self._run_prefill_paged(work.req))
+                    # the scheduler's chunk is honored as planned: a
+                    # chunked prefill spans multiple steps (the
+                    # prefill_chunk knob is live on real hardware, not
+                    # just in the sim)
+                    firsts.append(self._run_prefill_paged(work.req,
+                                                          work.chunk))
                 else:
                     work.chunk = work.req.prompt_len   # ring: one shot
                     firsts.append(self._run_prefill(work.req))
             self.apply_prefill(plan.prefills, firsts, self.now())
+        elif plan.kind == StepKind.MIXED:
+            self._run_mixed(plan)
         elif plan.kind == StepKind.DECODE:
             live = [r for r in plan.decodes
                     if self.scheduler.ensure_decode_capacity(r)]
@@ -219,22 +280,73 @@ class Engine(EngineCore):
         self._last_token[req.slot] = int(tok[0])
         return int(tok[0])
 
-    def _run_prefill_paged(self, req: Request) -> int:
-        """Prefill the *uncached suffix* straight into the shared pool.
+    def _run_prefill_paged(self, req: Request, chunk: int):
+        """Prefill ``chunk`` uncached prompt tokens straight into the
+        shared pool, honoring the scheduler's chunked-prefill plan.
 
-        ``req.prefilled`` tokens of prompt are already resident in shared
-        prefix pages (acquired by id at admission — never copied); the
-        block-table row lays those pages first, so the suffix attends
-        back into a sibling's KV through the ordinary paged gather."""
-        cached = min(req.prefilled, req.prompt_len - 1)
-        tokens = jnp.asarray(req.prompt_tokens[cached:], jnp.int32)[None, :]
+        ``req.prefilled`` tokens of prompt are already resident (shared
+        prefix pages acquired by id at admission — never copied, or
+        earlier chunks of this same prefill); the block-table row lays
+        those pages first, so the chunk attends back into resident KV
+        through the ordinary paged gather.  Returns the sampled first
+        token when this chunk completes the prompt, else None (the
+        request keeps prefilling next step)."""
+        start = min(req.prefilled, req.prompt_len - 1)
+        chunk = min(chunk, req.prompt_len - start)
+        tokens = jnp.asarray(req.prompt_tokens[start:start + chunk],
+                             jnp.int32)[None, :]
         row = self._block_table_rows([req])[req.slot][None, :]
         tok, self.cache = self._prefill_paged_fn(
             self.params, tokens, self.cache, jnp.asarray(row),
-            jnp.full((1,), cached, jnp.int32), jnp.int32(req.slot),
+            jnp.full((1,), start, jnp.int32), jnp.int32(req.slot),
             self._next_key(), jnp.float32(self.temperature))
+        if start + chunk < req.prompt_len:
+            return None                     # chunk not final: no token yet
         self._last_token[req.slot] = int(tok[0])
         return int(tok[0])
+
+    # ------------------------------------------------------------------ mixed
+    def _run_mixed(self, plan) -> None:
+        """One fused step: every live decode slot advances a token while
+        one prefill chunk computes — the stall-free continuous-batching
+        hot path.  All jit inputs are shape-stable; see ``_mixed_step``
+        in ``__init__``."""
+        if self._cache_layout != "paged":
+            raise RuntimeError(
+                f"{self.name}: mixed batching needs the paged cache "
+                f"layout (current: {self._cache_layout!r})")
+        work = plan.prefills[0]
+        req = work.req
+        live = [r for r in plan.decodes
+                if self.scheduler.ensure_decode_capacity(r)]
+        cap = self._mixed_cap
+        chunk = min(work.chunk, cap)
+        work.chunk = chunk                  # bookkeeping sees the clamp
+        start = req.prefilled
+        buf = np.zeros((1, cap), np.int32)
+        buf[0, :chunk] = req.prompt_tokens[start:start + chunk]
+        dec_tables = self._block_table_rows(live)
+        pf_row = self._block_table_rows([req])[req.slot][None, :]
+        dec_tok, pf_tok, self.cache = self._mixed_fn(
+            self.params, jnp.asarray(self._last_token[:, None]),
+            jnp.asarray(buf), self.cache, jnp.asarray(dec_tables),
+            jnp.asarray(pf_row), jnp.int32(start), jnp.int32(chunk),
+            jnp.int32(req.slot), self._next_key(),
+            jnp.float32(self.temperature))
+        dec_tok = np.asarray(dec_tok)
+        toks = []
+        for r in live:
+            t = int(dec_tok[r.slot])
+            self._last_token[r.slot] = t
+            toks.append(t)
+        final = (start + chunk) >= req.prompt_len
+        first = int(pf_tok[0]) if final else None
+        if final:
+            self._last_token[req.slot] = first
+        now = self.now()
+        self.apply_prefill([work], [first], now)
+        if live:
+            self.apply_decode(live, toks, now)
 
     # ----------------------------------------------------------------- decode
     def _run_decode(self, reqs: list[Request]) -> list[int]:

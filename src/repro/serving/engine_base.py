@@ -9,6 +9,7 @@ advertises at registration.
 """
 from __future__ import annotations
 
+from collections import deque
 from typing import Callable, Optional
 
 from repro.core.knobs import ControlSurface, KnobSpec
@@ -29,8 +30,10 @@ class EngineCore(ControlSurface):
     kind = "llm"
     CAPABILITIES = ("kv_transfer", "pause", "priority", "role")
     METRICS = ("queue_len", "num_running", "page_util", "step_time",
-               "mean_step_time", "ttft", "latency", "tpt", "throughput",
-               "prefill_queue_tokens", "decode_slot_util")
+               "mean_step_time", "ttft", "latency", "tpt", "itl_p95",
+               "throughput", "prefill_queue_tokens", "decode_slot_util")
+
+    ITL_WINDOW = 256                 # rolling inter-token-latency samples
     KNOB_SPECS = tuple(
         s.delegated("scheduler", clamp="_clamp_max_num_seqs")
         if s.name == "max_num_seqs" else s.delegated("scheduler")
@@ -60,6 +63,11 @@ class EngineCore(ControlSurface):
         self.mean_step_time = 0.0
         self.step_time_total = 0.0
         self.tokens_generated = 0
+        # rolling inter-token-latency samples (per-request gaps between
+        # consecutive emitted tokens): the decode-stall signal — a long
+        # serialized prefill shows up here as a batch-wide ITL spike,
+        # which is exactly what adaptive chunk policies trigger on
+        self._itl_samples: deque[float] = deque(maxlen=self.ITL_WINDOW)
         self.finished: list[Request] = []
         self.on_finish: Optional[Callable[[Request, float], None]] = None
         self.on_token: Optional[Callable[[Request, int, float], None]] = None
@@ -266,6 +274,7 @@ class EngineCore(ControlSurface):
                                0.9 * self.mean_step_time + 0.1 * duration)
         self._gauge("mean_step_time", self.mean_step_time)
         self._gauge("tokens_total", self.tokens_generated)
+        self._gauge("itl_p95", self.itl_p95)
         self._gauge("prefill_queue_tokens", s.prefill_queue_tokens)
         self._gauge("decode_slot_util", s.decode_slot_util)
 
@@ -332,7 +341,23 @@ class EngineCore(ControlSurface):
                 continue
             self._emit_token(r, int(tok), t)
 
+    @property
+    def itl_p95(self) -> float:
+        """Windowed p95 inter-token latency over the engine's recent
+        emissions (0.0 until two tokens of one request have landed)."""
+        if not self._itl_samples:
+            return 0.0
+        xs = sorted(self._itl_samples)
+        return xs[min(int(0.95 * len(xs)), len(xs) - 1)]
+
+    def _note_itl(self, r: Request, t: float) -> None:
+        prev = r.meta.get("last_token_t")
+        r.meta["last_token_t"] = t
+        if prev is not None and t >= prev:
+            self._itl_samples.append(t - prev)
+
     def _emit_token(self, r: Request, tok: int, t: float) -> None:
+        self._note_itl(r, t)
         r.generated += 1
         r.output_tokens.append(tok)
         self.tokens_generated += 1

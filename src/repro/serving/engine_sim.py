@@ -47,6 +47,20 @@ class SimEngine(EngineCore):
             dur = sum(self.cm.prefill_time(w.chunk, context=w.req.prefilled)
                       for w in plan.prefills)
             self.loop.call_after(dur, lambda: self._finish_prefill(plan, dur))
+        elif plan.kind == StepKind.MIXED:
+            # fused prefill-chunk + decode-batch step, priced by the
+            # CostModel's mixed roofline (weights read once) — the sim
+            # substrate sees the same semantics as the real engine's
+            # jitted mixed step
+            live = [r for r in plan.decodes
+                    if self.scheduler.ensure_decode_capacity(r)]
+            w = plan.prefills[0]
+            ctx = (sum(r.total_len for r in live) / len(live)
+                   if live else 0.0)
+            dur = self.cm.mixed_time(w.chunk, w.req.prefilled,
+                                     len(live), ctx)
+            self.loop.call_after(
+                dur, lambda: self._finish_mixed(plan, live, dur))
         else:
             live = [r for r in plan.decodes
                     if self.scheduler.ensure_decode_capacity(r)]
@@ -63,6 +77,16 @@ class SimEngine(EngineCore):
             final = (w.req.prefilled + w.chunk) >= w.req.prompt_len
             firsts.append(w.req.generated if final else None)  # synthetic id
         self.apply_prefill(plan.prefills, firsts, self.now())
+        self._end_step(dur)
+
+    def _finish_mixed(self, plan, live, dur: float) -> None:
+        firsts = []
+        for w in plan.prefills:
+            final = (w.req.prefilled + w.chunk) >= w.req.prompt_len
+            firsts.append(w.req.generated if final else None)
+        self.apply_prefill(plan.prefills, firsts, self.now())
+        if live:
+            self.apply_decode(live, [r.generated for r in live], self.now())
         self._end_step(dur)
 
     def _finish_decode(self, reqs, dur: float) -> None:

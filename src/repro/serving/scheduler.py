@@ -48,6 +48,7 @@ from repro.serving.kv_cache import PageAllocator
 class StepKind(str, enum.Enum):
     PREFILL = "prefill"
     DECODE = "decode"
+    MIXED = "mixed"           # all live decodes + one chunked prefill
     IDLE = "idle"
 
 
@@ -181,6 +182,7 @@ class SchedulerConfig:
     max_slots: int = 8
     max_batch_tokens: int = 2048
     prefill_chunk: int = 0            # 0 = whole prompt in one step
+    mixed: bool = False               # co-run prefill chunk with decode batch
     max_context: int = 4096
     page_size: int = 128
     num_pages: int = 1024
@@ -213,6 +215,10 @@ class Scheduler(ControlSurface):
                  doc="prefill token budget per step"),
         KnobSpec("prefill_chunk", kind="int", lo=0, attr="cfg.prefill_chunk",
                  doc="chunked-prefill size; 0 = whole prompt"),
+        KnobSpec("mixed", kind="bool", attr="cfg.mixed",
+                 doc="stall-free continuous batching: co-run one chunked "
+                     "prefill with all live decode slots in a single fused "
+                     "step (unified role only)"),
         KnobSpec("admit_priority_min", kind="int",
                  attr="cfg.admit_priority_min",
                  doc="admission floor: requests below are not admitted"),
@@ -498,6 +504,26 @@ class Scheduler(ControlSurface):
                    and r.prefilled < min(r.prompt_len, r.available)]
         if self.cfg.require_complete_prompt:
             pending = [r for r in pending if r.available >= r.prompt_len]
+        if pending and self.cfg.mixed and self.cfg.role == "unified":
+            # stall-free continuous batching: the token budget is filled
+            # with every live decode slot first (one token each), then
+            # one head-of-line prefill chunk takes whatever remains —
+            # a long prompt never serializes against the decode batch.
+            decodes = [r for r in self.running
+                       if r.state == RequestState.RUNNING]
+            budget = self.cfg.max_batch_tokens - len(decodes)
+            chunkcfg = self.cfg.prefill_chunk
+            r = pending[0]
+            remaining = min(r.prompt_len, r.available) - r.prefilled
+            chunk = remaining if chunkcfg <= 0 else min(chunkcfg, remaining)
+            chunk = min(chunk, budget)
+            if chunk > 0:
+                return StepPlan(StepKind.MIXED,
+                                prefills=[PrefillWork(r, chunk)],
+                                decodes=decodes)
+            if decodes:          # budget exhausted by decode slots alone
+                return StepPlan(StepKind.DECODE, decodes=decodes)
+            return StepPlan(StepKind.IDLE)
         if pending:
             budget = self.cfg.max_batch_tokens
             chunkcfg = self.cfg.prefill_chunk

@@ -162,6 +162,26 @@ class CostModel:
     def decode_time(self, batch: int, mean_context: float) -> float:
         return self._roofline(*self.decode_cost(batch, mean_context))
 
+    def mixed_cost(self, prefill_tokens: int, context: int, batch: int,
+                   mean_context: float) -> tuple[float, float]:
+        """Analytic (FLOPs, bytes) of one *mixed* step: a prefill chunk
+        co-running with ``batch`` decode slots in a single fused forward.
+        FLOPs add; bytes add MINUS one full weight read — the fusion
+        saving that makes mixed batching cheaper than a prefill step
+        plus a decode step run back to back (the weights stream through
+        the chip once, amortized over both workloads)."""
+        pf_f, pf_b = self.prefill_cost(prefill_tokens, context=context)
+        if batch <= 0:
+            return pf_f, pf_b
+        dc_f, dc_b = self.decode_cost(batch, mean_context)
+        weight_read = self.n_active_params() * BYTES_PER_PARAM
+        return pf_f + dc_f, pf_b + dc_b - weight_read
+
+    def mixed_time(self, prefill_tokens: int, context: int, batch: int,
+                   mean_context: float) -> float:
+        return self._roofline(*self.mixed_cost(prefill_tokens, context,
+                                               batch, mean_context))
+
     def call_time(self, prompt_tokens: int, new_tokens: int,
                   context: int = 0, batch: int = 1) -> float:
         """Estimated end-to-end time of one agent call: prefill the

@@ -1,0 +1,470 @@
+"""Stall-free mixed batching: chunked prefill fused into the live
+decode step.
+
+Gates for the ISSUE-9 tentpole: the scheduler's MIXED plan budget
+semantics, honored ``prefill_chunk`` on the live paged engine
+(regression: it used to be silently overridden to one-shot), bit-exact
+greedy token parity of the fused step against the serialized oracle
+across GQA/MQA and chunk sizes, the compile-once guarantee of the
+jitted mixed step under admission/allocator churn, the ``itl_p95``
+decode-stall gauge and its bus-threshold path, tracer segment tiling
+with mixed steps, the CostModel mixed roofline, and the adaptive
+ChunkPolicy / intent loop closed over the ``prefill_chunk`` knob.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro import models
+from repro.configs import get_config
+from repro.core import Controller, MetricBus, Registry, compile_intent
+from repro.core.metrics import (BUILTIN_SPECS, CentralPoller, Collector,
+                                StateStore)
+from repro.core.policies import ChunkPolicy
+from repro.core.trace import SEGMENTS, Tracer, request_decomposition
+from repro.core.types import Request, RequestState
+from repro.serving.engine import Engine
+from repro.serving.engine_sim import SimEngine
+from repro.serving.scheduler import (Scheduler, SchedulerConfig, StepKind)
+from repro.sim.clock import EventLoop
+from repro.sim.costmodel import BYTES_PER_PARAM, CostModel
+
+
+BASE = get_config("tiny-agent").replace(dtype="float32")
+PAGE = 16
+
+
+def _params(cfg):
+    return models.init(cfg, jax.random.key(0))
+
+
+def _engine(cfg, params, *, mixed=False, chunk=0, layout="paged",
+            max_slots=3, max_batch_tokens=64, name=None):
+    sched = SchedulerConfig(max_slots=max_slots, num_pages=64,
+                            max_context=128, page_size=PAGE,
+                            max_batch_tokens=max_batch_tokens,
+                            prefill_chunk=chunk, mixed=mixed)
+    name = name or f"mx-{'mixed' if mixed else 'serial'}-{chunk}"
+    return Engine(cfg, params, sched, name=name, cache_layout=layout)
+
+
+def _run(eng, prompts, max_new=6):
+    reqs = [Request(prompt_len=len(p), max_new_tokens=max_new,
+                    prompt_tokens=np.asarray(p, np.int32)) for p in prompts]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_idle()
+    for r in reqs:
+        assert r.state == RequestState.FINISHED
+    return [r.output_tokens for r in reqs]
+
+
+def _prompts(*lens, seed=3):
+    return [np.arange(seed + i, seed + i + n) % BASE.vocab
+            for i, n in enumerate(lens)]
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: MIXED plan semantics
+# ---------------------------------------------------------------------------
+
+def _sched(**kw):
+    cfg = SchedulerConfig(max_slots=4, num_pages=64, max_context=128,
+                          page_size=PAGE, role="unified", **kw)
+    return Scheduler(cfg)
+
+
+def _admit_running(s, n, ctx=20):
+    """n requests already decoding (state RUNNING, fully prefilled)."""
+    out = []
+    for _ in range(n):
+        r = Request(prompt_len=ctx, max_new_tokens=64)
+        s.submit(r)
+        out.append(r)
+    # drain admission: plan until everyone is resident, then mark prefilled
+    s.plan_step()
+    for r in out:
+        r.prefilled = r.prompt_len
+        r.state = RequestState.RUNNING
+        r.generated = 1
+    return out
+
+
+def test_mixed_plan_fills_budget_decodes_first():
+    s = _sched(mixed=True, prefill_chunk=256, max_batch_tokens=32)
+    decs = _admit_running(s, 2)
+    pf = Request(prompt_len=100, max_new_tokens=4)
+    s.submit(pf)
+    s.plan_step()                      # admits pf into a slot (PREFILL)
+    plan = s.plan_step()
+    assert plan.kind == StepKind.MIXED
+    assert set(r.req_id for r in plan.decodes) == {r.req_id for r in decs}
+    w = plan.prefills[0]
+    assert w.req is pf
+    # budget = max_batch_tokens - decodes; chunk clamped to it
+    assert w.chunk == 32 - 2
+
+
+def test_mixed_plan_chunk_knob_caps_chunk():
+    s = _sched(mixed=True, prefill_chunk=8, max_batch_tokens=64)
+    pf = Request(prompt_len=100, max_new_tokens=4)
+    s.submit(pf)
+    s.plan_step()
+    plan = s.plan_step()
+    assert plan.kind == StepKind.MIXED and plan.prefills[0].chunk == 8
+    # chunk 0 = whole remaining prompt (still budget-clamped)
+    s2 = _sched(mixed=True, prefill_chunk=0, max_batch_tokens=64)
+    pf2 = Request(prompt_len=100, max_new_tokens=4)
+    s2.submit(pf2)
+    s2.plan_step()
+    plan2 = s2.plan_step()
+    assert plan2.kind == StepKind.MIXED and plan2.prefills[0].chunk == 64
+
+
+def test_mixed_plan_degrades_to_decode_when_budget_exhausted():
+    s = _sched(mixed=True, prefill_chunk=256, max_batch_tokens=2)
+    _admit_running(s, 2)
+    pf = Request(prompt_len=100, max_new_tokens=4)
+    s.submit(pf)
+    s.plan_step()
+    plan = s.plan_step()
+    assert plan.kind == StepKind.DECODE     # no headroom for even 1 token
+
+
+def test_mixed_off_keeps_serialized_prefill():
+    s = _sched(mixed=False, prefill_chunk=8)
+    pf = Request(prompt_len=100, max_new_tokens=4)
+    s.submit(pf)
+    s.plan_step()
+    plan = s.plan_step()
+    assert plan.kind == StepKind.PREFILL
+
+
+# ---------------------------------------------------------------------------
+# Satellite 1 regression: prefill_chunk honored on the live paged engine
+# ---------------------------------------------------------------------------
+
+def test_live_engine_honors_prefill_chunk_across_steps():
+    """A 35-token prompt with prefill_chunk=8 must take ceil(35/8)=5
+    serialized prefill steps — the engine used to override work.chunk
+    with the whole remaining prompt, making the knob a no-op — and the
+    chunked run must emit the same tokens as the one-shot run."""
+    params = _params(BASE)
+    prompts = _prompts(35)
+
+    oneshot = _run(_engine(BASE, params, chunk=0, name="os"), prompts)
+
+    eng = _engine(BASE, params, chunk=8, name="ck")
+    kinds = []
+    orig = eng.scheduler.plan_step
+
+    def spy():
+        plan = orig()
+        kinds.append(plan.kind)
+        return plan
+
+    eng.scheduler.plan_step = spy
+    chunked = _run(eng, prompts)
+    assert chunked == oneshot
+    n_prefill = sum(1 for k in kinds if k == StepKind.PREFILL)
+    assert n_prefill == 5, f"expected 5 chunked prefill steps, got {n_prefill}"
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: fused-step token parity vs the serialized oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_kv_heads", [2, 1], ids=["gqa", "mqa"])
+@pytest.mark.parametrize("chunk", [0, 7, 16], ids=["whole", "c7", "c16"])
+def test_mixed_token_parity(n_kv_heads, chunk):
+    """Greedy decode is bit-identical whether prefills run serialized
+    one-shot or chunked + fused into the live decode step: each token
+    depends only on its own sequence history, so interleaving cannot
+    change it."""
+    cfg = BASE.replace(n_kv_heads=n_kv_heads)
+    params = _params(cfg)
+    prompts = _prompts(35, 27, 37)
+
+    ref = _run(_engine(cfg, params, name=f"ref{n_kv_heads}"), prompts)
+    got = _run(_engine(cfg, params, mixed=True, chunk=chunk,
+                       name=f"mx{n_kv_heads}-{chunk}"), prompts)
+    assert got == ref
+
+
+def test_mixed_parity_with_pallas_kernel_path():
+    cfg = BASE.replace(use_pallas=True)
+    params = _params(cfg)
+    prompts = _prompts(33, 21)
+    ref = _run(_engine(cfg, params, name="pl-ref"), prompts)
+    got = _run(_engine(cfg, params, mixed=True, chunk=8, name="pl-mx"),
+               prompts)
+    assert got == ref
+
+
+# ---------------------------------------------------------------------------
+# Satellite 2: the jitted mixed step compiles exactly once per engine
+# ---------------------------------------------------------------------------
+
+def test_mixed_step_compiles_once_across_churn():
+    """Admission churn, freed/reallocated pages, varying chunk fill and
+    varying live-decode counts must all replay the SAME traced program:
+    the counter inside the jitted body increments per trace, not per
+    call."""
+    params = _params(BASE)
+    eng = _engine(BASE, params, mixed=True, chunk=8, name="once")
+    _run(eng, _prompts(35, 27, 37), max_new=5)
+    assert eng.mixed_step_traces == 1
+    # second wave: different lengths, recycled slots/pages, partial tail
+    # chunks of different sizes
+    _run(eng, _prompts(19, 41, seed=11), max_new=3)
+    assert eng.mixed_step_traces == 1
+    # knob move changes chunk geometry — still the same traced shapes
+    eng.set_param("prefill_chunk", 5)
+    _run(eng, _prompts(23, seed=29), max_new=3)
+    assert eng.mixed_step_traces == 1
+
+
+def test_mixed_requires_paged_layout():
+    params = _params(BASE)
+    with pytest.raises(RuntimeError, match="paged"):
+        _engine(BASE, params, mixed=True, layout="ring")
+    # flipping the knob on a ring engine fails AND reverts
+    eng = _engine(BASE, params, layout="ring", name="ring-guard")
+    with pytest.raises(RuntimeError, match="paged"):
+        eng.set_param("mixed", True)
+    assert eng.get_param("mixed") is False
+    # flipping a mixed paged engine to ring refuses too
+    mx = _engine(BASE, params, mixed=True, name="flip-guard")
+    with pytest.raises(RuntimeError):
+        mx.set_param("cache_layout", "ring")
+    assert mx.get_param("cache_layout") == "paged"
+
+
+# ---------------------------------------------------------------------------
+# Satellite 3: itl_p95 gauge + bus threshold path
+# ---------------------------------------------------------------------------
+
+def test_itl_p95_builtin_spec_and_engine_metric():
+    assert "itl_p95" in BUILTIN_SPECS
+    assert "itl_p95" in Engine.METRICS
+    spec = BUILTIN_SPECS["itl_p95"]
+    assert spec.direction == "lower_better"
+    assert "inter-token" in spec.description.lower()
+
+
+def test_itl_p95_tracks_decode_stall():
+    """Per-request token gaps land in the rolling window; a stall (one
+    long gap) drags the p95 up."""
+    loop = EventLoop()
+    cm = CostModel(get_config("agent-7b"))
+    eng = SimEngine(loop, cm, SchedulerConfig(max_slots=4, num_pages=512,
+                                              max_context=2048))
+    r = Request(prompt_len=4, max_new_tokens=2)
+    r.meta["last_token_t"] = 0.0
+    eng._note_itl(r, 0.01)
+    assert eng.itl_p95 == pytest.approx(0.01)
+    for t in (0.02, 0.03, 0.04):
+        eng._note_itl(r, t)
+    eng._note_itl(r, 1.0)                   # the stall
+    assert eng.itl_p95 == pytest.approx(0.96)
+    # a fresh request's first token opens no gap
+    r2 = Request(prompt_len=4, max_new_tokens=2)
+    before = len(eng._itl_samples)
+    eng._note_itl(r2, 5.0)
+    assert len(eng._itl_samples) == before
+
+
+def test_itl_p95_published_and_bus_threshold_fires():
+    bus = MetricBus()
+    fired = []
+    bus.subscribe("mxsim.itl_p95", lambda n, v, t: fired.append(v),
+                  above=0.0, edge=False)
+    loop = EventLoop()
+    cm = CostModel(get_config("agent-7b"))
+    col = Collector("node0", bus=bus)
+    eng = SimEngine(loop, cm,
+                    SchedulerConfig(max_slots=4, num_pages=1024,
+                                    max_context=4096, max_batch_tokens=512,
+                                    prefill_chunk=128, mixed=True),
+                    name="mxsim", collector=col)
+    for n in (600, 800):
+        eng.submit(Request(prompt_len=n, max_new_tokens=8))
+    loop.run_until(60.0)
+    assert fired and max(fired) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# Satellite 4: tracer segments still tile e2e latency with mixed steps
+# ---------------------------------------------------------------------------
+
+def test_mixed_segments_tile_latency_within_1pct():
+    loop = EventLoop()
+    cm = CostModel(get_config("agent-7b"))
+    eng = SimEngine(loop, cm,
+                    SchedulerConfig(max_slots=4, num_pages=2048,
+                                    max_context=4096, max_batch_tokens=512,
+                                    prefill_chunk=128, mixed=True),
+                    name="mxtr")
+    tr = Tracer(loop.now)
+    tr.set_scope(None, 1.0)
+    eng.tracer = tr
+    reqs = [Request(prompt_len=n, max_new_tokens=12)
+            for n in (900, 700, 1100, 500)]
+    for r in reqs:
+        eng.submit(r)
+    loop.run_until(120.0)
+    assert all(r.state == RequestState.FINISHED for r in reqs)
+    decomp = request_decomposition(tr.all_spans())
+    assert len(decomp) == len(reqs)
+    for span, segs, dur in decomp:
+        assert set(segs) <= set(SEGMENTS)
+        total = sum(segs.values())
+        assert abs(total - dur) <= 0.01 * max(dur, 1e-9), (
+            f"{span.name}: segments {total:.6f}s != e2e {dur:.6f}s")
+        # fused steps attribute to BOTH phases, not one catch-all bucket
+        assert segs.get("prefill", 0.0) > 0.0
+        assert segs.get("decode", 0.0) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# CostModel: mixed roofline pricing
+# ---------------------------------------------------------------------------
+
+def test_costmodel_mixed_prices_fusion_saving():
+    cm = CostModel(get_config("agent-7b"))
+    pf_f, pf_b = cm.prefill_cost(256, context=512)
+    dc_f, dc_b = cm.decode_cost(8, 1024.0)
+    mx_f, mx_b = cm.mixed_cost(256, 512, 8, 1024.0)
+    assert mx_f == pytest.approx(pf_f + dc_f)        # FLOPs add
+    weight_read = cm.n_active_params() * BYTES_PER_PARAM
+    assert mx_b == pytest.approx(pf_b + dc_b - weight_read)
+    # one fused step beats prefill + decode back to back
+    assert cm.mixed_time(256, 512, 8, 1024.0) < (
+        cm.prefill_time(256, context=512) + cm.decode_time(8, 1024.0))
+    # and degenerates to plain prefill with no live decodes
+    assert cm.mixed_cost(256, 512, 0, 0.0) == cm.prefill_cost(256,
+                                                              context=512)
+
+
+def test_sim_engine_mixed_reduces_decode_stall():
+    """Same arrival trace, serialized vs mixed: every request finishes
+    on both, and the mixed engine's worst inter-token gap is strictly
+    smaller because long prefills no longer monopolize whole steps."""
+    def run(mixed):
+        loop = EventLoop()
+        cm = CostModel(get_config("agent-7b"))
+        eng = SimEngine(loop, cm,
+                        SchedulerConfig(max_slots=8, num_pages=4096,
+                                        max_context=8192,
+                                        max_batch_tokens=512,
+                                        prefill_chunk=128, mixed=mixed),
+                        name=f"sim-{mixed}")
+        worst = {}
+
+        def on_token(r, tok, t):
+            prev = r.meta.get("_t_prev")
+            r.meta["_t_prev"] = t
+            if prev is not None:
+                worst[r.req_id] = max(worst.get(r.req_id, 0.0), t - prev)
+
+        eng.on_token = on_token
+        reqs = [Request(prompt_len=64, max_new_tokens=48)]
+        for _ in range(4):                   # long prefills arrive behind
+            reqs.append(Request(prompt_len=2000, max_new_tokens=8))
+        for r in reqs:
+            eng.submit(r)
+        loop.run_until(600.0)
+        assert all(r.state == RequestState.FINISHED for r in reqs)
+        return max(worst.values())
+
+    assert run(True) < run(False)
+
+
+# ---------------------------------------------------------------------------
+# Control plane: ChunkPolicy + intent rule close the loop on the knob
+# ---------------------------------------------------------------------------
+
+def _control(objs, bus):
+    loop = EventLoop()
+    reg = Registry()
+    for o in objs:
+        reg.register(o)
+    store = StateStore()
+    poller = CentralPoller(store)
+    c = Controller(loop, reg, poller, interval=0.05, bus=bus)
+    col = Collector(bus=bus)
+    poller.attach(col)
+    return loop, reg, col, c
+
+
+class FakeMixedEngine:
+    """Knob-surface stub: just prefill_chunk, for policy unit tests."""
+    name, kind = "e0", "llm"
+
+    def __init__(self, chunk=512):
+        self.values = {"prefill_chunk": chunk}
+        self._defaults = {}
+
+    def card(self):
+        from repro.core.types import AgentCard
+        return AgentCard(name=self.name, kind=self.kind,
+                         knobs=dict(self.values),
+                         metrics=("itl_p95",), capabilities=())
+
+    def get_param(self, k):
+        return self.values[k]
+
+    def set_param(self, k, v):
+        self._defaults.setdefault(k, self.values[k])
+        self.values[k] = v
+
+    def reset_param(self, k):
+        self.values[k] = self._defaults.get(k, self.values[k])
+
+
+def test_chunk_policy_shrinks_on_stall_and_regrows():
+    bus = MetricBus()
+    eng = FakeMixedEngine(chunk=512)
+    loop, reg, col, c = _control([eng], bus)
+    pol = ChunkPolicy("e0", itl_slo=0.05, chunk_min=64, chunk_max=512,
+                      dwell=0.0)
+    c.install(pol)
+    c.start()
+    col.gauge("e0.itl_p95", 0.2, 0.01)            # stalled
+    loop.run_until(0.4)
+    # halves per tick down to the floor, then holds
+    assert [w for _, w in pol.moves[:3]] == [256, 128, 64]
+    assert eng.values["prefill_chunk"] == 64
+    # calm + backlog => grow back
+    col.gauge("e0.itl_p95", 0.001, 0.41)
+    col.gauge("e0.prefill_queue_tokens", 4000, 0.41)
+    loop.run_until(0.6)
+    assert eng.values["prefill_chunk"] > 64
+
+
+def test_chunk_policy_calm_without_backlog_holds():
+    bus = MetricBus()
+    eng = FakeMixedEngine(chunk=128)
+    loop, reg, col, c = _control([eng], bus)
+    c.install(ChunkPolicy("e0", itl_slo=0.05, dwell=0.0))
+    c.start()
+    col.gauge("e0.itl_p95", 0.001, 0.01)          # calm, no queue signal
+    loop.run_until(0.2)
+    assert eng.values["prefill_chunk"] == 128     # nothing to grow for
+
+
+def test_intent_rule_sets_prefill_chunk_on_itl_breach():
+    bus = MetricBus()
+    eng = FakeMixedEngine(chunk=0)
+    loop, reg, col, c = _control([eng], bus)
+    c.install(compile_intent("""
+rule stall on engine e0.itl_p95 > 0.05:
+    => set engine e0.prefill_chunk 256
+"""))
+    col.gauge("e0.itl_p95", 0.01, 0.01)           # under threshold
+    loop.run_until(0.02)
+    assert eng.values["prefill_chunk"] == 0
+    col.gauge("e0.itl_p95", 0.12, 0.05)           # breach
+    loop.run_until(0.1)
+    assert eng.values["prefill_chunk"] == 256
+    assert any(a.kind == "set" for a in c.action_log())
