@@ -1,0 +1,152 @@
+"""Tool-call suspend/resume benchmark: does tiered KV offload multiply
+effective decode capacity?
+
+Agentic workflows spend seconds-long stretches waiting on tools
+(search, code execution, retrieval) with heavy-tailed latency.  The
+pre-ISSUE-10 posture — ``pin`` — keeps the tool-waiting sequence in its
+decode slot for the whole dwell, so a handful of outstanding tool calls
+can park an engine's entire slot budget.  The ``suspend`` arm spills
+the sequence's private KV pages to the host tier (shared prefix blocks
+stay refcounted in HBM), returns the slot immediately, and restores on
+tool completion through cache-aware placement — the same context
+continues token-exact, priced by the CostModel's host-bandwidth
+roofline.
+
+Two tool-heavy shapes (debate's fan-in factcheck, deep_review's
+per-reviewer research chain), heavy-tailed 1-10 s tools, EQUAL chip
+budget per arm.
+
+Acceptance (ISSUE 10): suspend/resume >= 40% goodput gain over
+pin-the-slot on each shape, with p95 post-tool TTFT <= 1.5x the
+never-suspended (pinned) baseline.
+
+    PYTHONPATH=src python benchmarks/bench_toolcalls.py [--smoke]
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+_ROOT = Path(__file__).resolve().parent.parent
+for p in (str(_ROOT), str(_ROOT / "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+from benchmarks.common import Report, pctl  # noqa: E402
+from repro.agents import (AgenticPipeline, TierSpec, WorkflowConfig,
+                          debate, deep_review)  # noqa: E402
+from repro.agents.workloads import GraphBurst  # noqa: E402
+
+# 8-chip budget per arm: 2x4-chip engines.  Slots are deliberately
+# scarce relative to outstanding tool calls — the regime the paper's
+# tool-call plane targets (capacity bound by parked sequences, not
+# FLOPs).
+ARMS = {
+    "pin": "off",              # baseline: tool dwell holds the slot
+    "suspend": "aggressive",   # spill every tool wait to the host tier
+}
+
+
+def _tiers():
+    return {"large": TierSpec("agent-7b", chips=4, replicas=2, slots=2)}
+
+
+def shapes(smoke: bool):
+    """(label, graph builder, stagger) — medians 2-4 s, cv=1 lognormal
+    tails reaching past 10 s, capped by the tool timeout.  Stagger is
+    tuned per shape so decode demand and tool dwell genuinely contend
+    for slots (a synchronized wave would let the pin arm park for free
+    while the queues are empty)."""
+    out = [("debate/tool4s", lambda: debate(
+        tool_latency=4.0, tool_latency_cv=1.0, tool_timeout=12.0), 1.0)]
+    if not smoke:
+        out.append(("deep_review/d4/tool2s", lambda: deep_review(
+            depth=4, tool_latency=2.0, tool_latency_cv=1.0,
+            tool_timeout=10.0), 1.0))
+    return out
+
+
+def run_arm(build_graph, offload: str, n_tasks: int, stagger: float):
+    wp = AgenticPipeline.build(build_graph(), WorkflowConfig(
+        tiers=_tiers(), router_policy="least_loaded", critical_path=True))
+    for w in wp.workers:
+        w.engine.set_param("offload", offload)
+    for st in wp.stages.values():
+        if st.tool is not None:
+            # external tools (search APIs, sandboxes) are wide: the
+            # contended resource under test is decode capacity, not the
+            # tool endpoint's own concurrency limit
+            st.tool.set_param("concurrency", 64)
+    burst = GraphBurst(wp, n_tasks, prompt_tokens=128, stagger=stagger)
+    burst.start()
+    wp.run(until=3000.0)
+    assert len(wp.done) == n_tasks, (offload, len(wp.done), n_tasks)
+    lats = wp.latencies()
+    makespan = (max(t.finished_at for t in wp.done)
+                - min(t.submitted_at for t in wp.done))
+    engines = [w.engine for w in wp.workers]
+    ttfts = [x for e in engines for x in e.restore_ttfts]
+    hits = sum(e.scheduler.resume_hits for e in engines)
+    recomputes = sum(e.scheduler.resume_recomputes for e in engines)
+    return {
+        "goodput": n_tasks / makespan,
+        "makespan": makespan,
+        "p95": pctl(lats, 0.95),
+        "post_tool_ttft_p95": pctl(ttfts, 0.95) if ttfts else 0.0,
+        "suspends": sum(e.suspend_count for e in engines),
+        "resume_hits": hits,
+        "resume_recomputes": recomputes,
+        "hit_rate": hits / (hits + recomputes) if hits + recomputes else 1.0,
+    }
+
+
+def main(smoke: bool = False):
+    report = Report("tool-call plane: pin-the-slot vs suspend/resume "
+                    "(equal 8-chip budget, heavy-tail 1-10 s tools)")
+    n_tasks = 16 if smoke else 24
+    verdicts = []
+    for label, build, stagger in shapes(smoke):
+        res = {arm: run_arm(build, offload, n_tasks, stagger)
+               for arm, offload in ARMS.items()}
+        base = res["pin"]
+        for arm in ARMS:
+            r = res[arm]
+            report.add(f"{label}/{arm}",
+                       goodput_tps=round(r["goodput"], 4),
+                       makespan_s=round(r["makespan"], 2),
+                       p95_s=round(r["p95"], 2),
+                       post_tool_ttft_p95_s=round(
+                           r["post_tool_ttft_p95"], 4),
+                       suspends=r["suspends"],
+                       resume_hits=r["resume_hits"],
+                       resume_recomputes=r["resume_recomputes"],
+                       hit_rate=round(r["hit_rate"], 3),
+                       goodput_gain_pct=round(
+                           100 * (r["goodput"] / base["goodput"] - 1), 1))
+        sus = res["suspend"]
+        gain = sus["goodput"] / base["goodput"] - 1
+        # floor the pinned baseline at 50 ms: a pinned resume is nearly
+        # instant, and sub-perceptual differences in that regime would
+        # make the 1.5x ratio pure noise — the gate is about not making
+        # users *notice* the restore after a tool returns
+        ratio = (sus["post_tool_ttft_p95"]
+                 / max(base["post_tool_ttft_p95"], 0.05))
+        ok = gain >= 0.40 and ratio <= 1.5
+        verdicts.append(ok)
+        report.note(f"{label}: goodput gain {gain * 100:.1f}% "
+                    f"(gate >=40%), post-tool TTFT p95 ratio "
+                    f"{ratio:.2f}x pinned (gate <=1.5x) -> "
+                    f"{'PASS' if ok else 'FAIL'}")
+        if not ok:
+            report.note(f"WARNING: {label} below the suspend/resume "
+                        "acceptance gate")
+    report.note("acceptance (every shape >=40% goodput gain at <=1.5x "
+                f"post-tool TTFT): "
+                f"{'PASS' if all(verdicts) else 'FAIL'} "
+                f"({sum(verdicts)}/{len(verdicts)} shapes)")
+    return report
+
+
+if __name__ == "__main__":
+    rep = main(smoke="--smoke" in sys.argv)
+    print(rep.render())

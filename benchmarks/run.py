@@ -31,8 +31,8 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all",
                     help="comma list: fig3,fig6,fig7,prefix,workflow,"
-                         "disagg,tenancy,trace,kernels,paged,mixed,"
-                         "calibrate,roofline")
+                         "toolcalls,disagg,tenancy,trace,kernels,paged,"
+                         "mixed,calibrate,roofline")
     ap.add_argument("--out-dir", default="artifacts/bench",
                     help="directory for BENCH_*.json summaries")
     ap.add_argument("--smoke", action="store_true",
@@ -43,8 +43,9 @@ def main() -> int:
 
     summary: dict[str, dict] = {}
     names = [n for n in ("fig3", "fig6", "fig7", "prefix", "workflow",
-                         "disagg", "tenancy", "trace", "kernels", "paged",
-                         "mixed", "calibrate", "roofline")
+                         "toolcalls", "disagg", "tenancy", "trace",
+                         "kernels", "paged", "mixed", "calibrate",
+                         "roofline")
              if want is None or n in want]
     for name in names:
         t0 = time.time()
@@ -65,6 +66,9 @@ def main() -> int:
         elif name == "workflow":
             from benchmarks import bench_workflow
             report = bench_workflow.main(smoke=args.smoke)
+        elif name == "toolcalls":
+            from benchmarks import bench_toolcalls
+            report = bench_toolcalls.main(smoke=args.smoke)
         elif name == "disagg":
             from benchmarks import bench_disagg
             report = bench_disagg.main(smoke=args.smoke)

@@ -10,12 +10,15 @@ requests *incrementally* (progressive prefill under STREAM), maintains
 per-session KV residency via the SessionDirectory, and triggers reactive
 KV pulls when a session's state lives on a sibling instance.
 
-``ToolAgent`` — a non-LLM tool (e.g. code executor) with fixed-latency
-semantics and the same set()/reset() surface, demonstrating that the
-Table-1 interface covers tools, not just models.
+``ToolAgent`` — a non-LLM tool (e.g. code executor) with heavy-tailed
+latency, timeout/retry semantics, and the same set()/reset() surface,
+demonstrating that the Table-1 interface covers tools, not just models.
 """
 from __future__ import annotations
 
+import math
+import random
+import zlib
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
@@ -288,34 +291,58 @@ class TesterAgent:
 
 
 class ToolAgent(ControlSurface):
-    """A fixed-latency tool (code executor / retriever / file system).
+    """A tool endpoint (code executor / retriever / file system).
 
     Not an LLM: its metrics are call latency and queue depth, and its
     knobs are concurrency and an artificial throttle — the §3.2 point
     that tools need *different* metrics under the same unified plane.
+
+    Real tool latency is heavy-tailed, so beyond the fixed ``latency``
+    a ``latency_cv`` coefficient of variation samples per-call
+    durations from a lognormal with *median* ``latency`` (the mean is
+    then ``latency * exp(sigma^2/2)`` — the tail pulls it up, which is
+    exactly what critical-path estimates must account for).  A
+    ``timeout`` knob caps any attempt: a timed-out call burns the full
+    timeout, then retries with a fresh sample up to ``max_retries``
+    times (fail-open after that), with timeout/retry counters on the
+    bus for OffloadPolicy and the benchmarks.
     """
 
     kind = "tool"
     CAPABILITIES = ("throttle",)
-    METRICS = ("tool_latency", "tool_queue")
+    METRICS = ("tool_latency", "tool_queue", "tool_timeouts",
+               "tool_retries")
     KNOB_SPECS = (
         KnobSpec("concurrency", kind="int", lo=1,
                  doc="max simultaneous tool calls"),
         KnobSpec("throttle", kind="float", lo=0.0,
                  doc="artificial per-call latency in seconds"),
+        KnobSpec("timeout", kind="float", lo=0.0,
+                 doc="per-attempt wall-clock cap in seconds; a timed-out "
+                     "attempt retries with a fresh latency sample "
+                     "(0 = no timeout)"),
     )
 
     def __init__(self, name: str, loop: EventLoop, latency: float = 0.05,
-                 concurrency: int = 2, collector=None):
+                 concurrency: int = 2, collector=None,
+                 latency_cv: float = 0.0, timeout: float = 0.0,
+                 max_retries: int = 1, seed: int | None = None):
         self.name = name
         self.loop = loop
         self.latency = latency
+        self.latency_cv = latency_cv
         self.concurrency = concurrency
         self.throttle = 0.0
+        self.timeout = timeout
+        self.max_retries = max_retries
         self.collector = collector
         self._busy = 0
         self._queue: list[tuple[Message, Callable]] = []
         self.calls = 0
+        self.timeouts = 0
+        self.retries = 0
+        self._rng = random.Random(
+            seed if seed is not None else zlib.crc32(name.encode()))
         if collector is not None:
             collector.describe(
                 f"{name}.tool_latency",
@@ -323,6 +350,24 @@ class ToolAgent(ControlSurface):
 
     def on_knob_set(self, name: str, old, new) -> None:
         self._pump()                    # raised concurrency drains the queue
+
+    # -- latency model --------------------------------------------------------
+    def sample_latency(self) -> float:
+        """One attempt's duration: lognormal(median=latency) when
+        latency_cv > 0, the fixed latency otherwise; throttle on top."""
+        if self.latency_cv <= 0:
+            return self.latency + self.throttle
+        sigma = math.sqrt(math.log1p(self.latency_cv ** 2))
+        z = self._rng.gauss(0.0, 1.0)
+        return self.latency * math.exp(sigma * z) + self.throttle
+
+    def mean_latency(self) -> float:
+        """Expected per-call wall clock including the heavy tail and
+        timeout retries — what suspend policies and critical-path
+        estimates should charge, not the fixed median."""
+        return expected_tool_latency(self.latency + self.throttle,
+                                     self.latency_cv, self.timeout,
+                                     self.max_retries)
 
     # -- endpoint -------------------------------------------------------------
     def deliver(self, msg: Message, on_done: Optional[Callable] = None) -> None:
@@ -337,20 +382,71 @@ class ToolAgent(ControlSurface):
             msg, on_done = self._queue.pop(0)
             self._busy += 1
             t0 = self.loop.now()
-            dur = self.latency + self.throttle
+            self._attempt(msg, on_done, t0, tries=0)
 
-            def _fin(msg=msg, on_done=on_done, t0=t0):
-                self._busy -= 1
-                self.calls += 1
+    def _attempt(self, msg, on_done, t0: float, tries: int) -> None:
+        dur = self.sample_latency()
+        if 0 < self.timeout < dur and tries < self.max_retries:
+            # the attempt burns the whole timeout window, then retries
+            def _retry(msg=msg, on_done=on_done, t0=t0, tries=tries):
+                self.timeouts += 1
+                self.retries += 1
                 if self.collector is not None:
-                    self.collector.observe(f"{self.name}.tool_latency",
-                                           self.loop.now() - t0,
-                                           self.loop.now())
-                if on_done is not None:
-                    on_done(msg)
-                self._pump()
+                    now = self.loop.now()
+                    self.collector.gauge(f"{self.name}.tool_timeouts",
+                                         self.timeouts, now)
+                    self.collector.gauge(f"{self.name}.tool_retries",
+                                         self.retries, now)
+                self._attempt(msg, on_done, t0, tries + 1)
 
-            self.loop.call_after(dur, _fin)
+            self.loop.call_after(self.timeout, _retry)
+            return
+        if 0 < self.timeout < dur:
+            # retry budget exhausted: fail open at the timeout so a
+            # pathological tail can't wedge the workflow
+            dur = self.timeout
+            self.timeouts += 1
+            if self.collector is not None:
+                self.collector.gauge(f"{self.name}.tool_timeouts",
+                                     self.timeouts, self.loop.now())
+
+        def _fin(msg=msg, on_done=on_done, t0=t0):
+            self._busy -= 1
+            self.calls += 1
+            if self.collector is not None:
+                self.collector.observe(f"{self.name}.tool_latency",
+                                       self.loop.now() - t0,
+                                       self.loop.now())
+            if on_done is not None:
+                on_done(msg)
+            self._pump()
+
+        self.loop.call_after(dur, _fin)
 
     def load(self) -> float:
         return self._busy + len(self._queue)
+
+
+def expected_tool_latency(latency: float, cv: float = 0.0,
+                          timeout: float = 0.0,
+                          max_retries: int = 1) -> float:
+    """Expected wall clock of one tool call under the lognormal model.
+
+    ``latency`` is the distribution's *median*; the heavy tail lifts the
+    mean to ``latency * exp(sigma^2/2)``.  With a timeout, each attempt
+    is capped (first order: ``min(mean, timeout)``) but a timed-out
+    attempt burns the full window before retrying, adding
+    ``P(X > timeout) * timeout`` per allowed retry."""
+    if latency <= 0:
+        return max(latency, 0.0)
+    if cv <= 0:
+        return latency if timeout <= 0 else min(latency, timeout)
+    sigma2 = math.log1p(cv * cv)
+    mean = latency * math.exp(0.5 * sigma2)
+    if timeout <= 0:
+        return mean
+    # lognormal tail: P(X > T) = 1 - Phi(ln(T/median)/sigma)
+    sigma = math.sqrt(sigma2)
+    x = math.log(timeout / latency) / sigma
+    p_tail = 0.5 * (1.0 - math.erf(x / math.sqrt(2.0)))
+    return min(mean, timeout) + p_tail * timeout * max(max_retries, 0)

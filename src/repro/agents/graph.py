@@ -58,6 +58,9 @@ class GraphTask:
     task_id: str = field(default_factory=lambda: fresh_id("wtask"))
     submitted_at: float = 0.0
     finished_at: float = 0.0
+    # runtime scratch (e.g. live requests held open across a TOOL stage
+    # by the suspend/resume plane)
+    meta: dict = field(default_factory=dict)
 
 
 class WorkflowGraph:
@@ -265,10 +268,15 @@ def map_reduce(width: int = 8, out_tokens: int = 48,
 
 
 def deep_review(depth: int = 4, out_tokens: int = 64,
-                reviewer_tier: str = "large") -> WorkflowGraph:
+                reviewer_tier: str = "large", tool_latency: float = 0.0,
+                tool_latency_cv: float = 0.0,
+                tool_timeout: float = 0.0) -> WorkflowGraph:
     """An author draft walked through a depth-``depth`` reviewer chain,
     closed by an editor — the long-critical-path shape where EDF over
-    propagated deadlines matters most."""
+    propagated deadlines matters most.  ``tool_latency > 0`` inserts a
+    research TOOL stage after each reviewer (a literature lookup), which
+    turns the chain into the suspend/resume plane's stress shape:
+    every reviewer's context parks for a heavy-tailed tool wait."""
     g = WorkflowGraph(f"deep_review_d{depth}")
     g.stage("author", kind=StageKind.CHAIN, out_tokens=128)
     names = ["author"]
@@ -276,6 +284,12 @@ def deep_review(depth: int = 4, out_tokens: int = 64,
         g.stage(f"reviewer-{i}", kind=StageKind.CHAIN,
                 out_tokens=out_tokens, model_tier=reviewer_tier)
         names.append(f"reviewer-{i}")
+        if tool_latency > 0:
+            g.stage(f"research-{i}", kind=StageKind.TOOL,
+                    tool_latency=tool_latency,
+                    tool_latency_cv=tool_latency_cv,
+                    tool_timeout=tool_timeout)
+            names.append(f"research-{i}")
     g.stage("editor", kind=StageKind.CHAIN, out_tokens=96)
     names.append("editor")
     g.chain(*names)
@@ -283,7 +297,8 @@ def deep_review(depth: int = 4, out_tokens: int = 64,
 
 
 def debate(side_tokens: int = 80, side_tier: str = "large",
-           tool_latency: float = 0.05) -> WorkflowGraph:
+           tool_latency: float = 0.05, tool_latency_cv: float = 0.0,
+           tool_timeout: float = 0.0) -> WorkflowGraph:
     """Branching debate with a tool stage: a moderator frames the
     question, pro and con argue in parallel, a fact-check *tool* joins
     both transcripts, a judge rules, and a verdict BRANCH routes each
@@ -294,7 +309,8 @@ def debate(side_tokens: int = 80, side_tier: str = "large",
             model_tier=side_tier)
     g.stage("con", kind=StageKind.CHAIN, out_tokens=side_tokens,
             model_tier=side_tier)
-    g.stage("factcheck", kind=StageKind.TOOL, tool_latency=tool_latency)
+    g.stage("factcheck", kind=StageKind.TOOL, tool_latency=tool_latency,
+            tool_latency_cv=tool_latency_cv, tool_timeout=tool_timeout)
     g.stage("judge", kind=StageKind.CHAIN, out_tokens=72)
     g.stage("verdict", kind=StageKind.BRANCH, out_tokens=24)
     g.stage("accept", kind=StageKind.CHAIN, out_tokens=16,

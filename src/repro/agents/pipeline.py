@@ -30,7 +30,8 @@ import math
 from dataclasses import dataclass, field
 from typing import Optional
 
-from repro.agents.agent import DeveloperAgent, TesterAgent, ToolAgent
+from repro.agents.agent import (DeveloperAgent, TesterAgent, ToolAgent,
+                                expected_tool_latency)
 from repro.agents.graph import GraphTask, WorkflowGraph, fig1
 from repro.agents.stage import EngineWorker, StageAgent, StageKind
 from repro.configs import get_config
@@ -39,7 +40,7 @@ from repro.core.dataplane import Channel
 from repro.core.metrics import CentralPoller, Collector, MetricBus, StateStore
 from repro.core.registry import Registry
 from repro.core.trace import FlightRecorder, Tracer
-from repro.core.types import Granularity, Priority, fresh_id
+from repro.core.types import Granularity, Priority, RequestState, fresh_id
 from repro.serving.disagg import DisaggPool
 from repro.serving.engine_sim import SimEngine
 from repro.serving.kv_transfer import KVTransferManager, SessionDirectory
@@ -350,6 +351,11 @@ class WorkflowConfig:
     num_pages: int = 4096
     max_context: int = 8192
     page_size: int = 64
+    # tool-call plane: "hold" suspends the live sequence across a TOOL
+    # stage (the post-tool turn resumes its KV); "reissue" is the legacy
+    # complete-and-reissue flow (every post-tool turn re-prefills)
+    tool_context: str = "hold"
+    host_capacity_pages: int = 4096      # per-engine host KV tier
     msg_bandwidth: float = 1.25e9
     msg_proc_time: float = 1.0e-3
     controller_interval: float = 0.05
@@ -391,6 +397,8 @@ class WorkflowPipeline(ServingFabric):
                                     num_pages=cfg.num_pages,
                                     max_context=cfg.max_context,
                                     page_size=cfg.page_size,
+                                    host_capacity_pages=(
+                                        cfg.host_capacity_pages),
                                     role=role),
                     name=f"wf-{tier}-{i}", collector=self.collector)
                 eng.tracer = self.tracer
@@ -437,10 +445,21 @@ class WorkflowPipeline(ServingFabric):
             if spec.kind is StageKind.TOOL:
                 ag.tool = ToolAgent(f"{name}.tool", self.loop,
                                     latency=spec.tool_latency,
+                                    latency_cv=spec.tool_latency_cv,
+                                    timeout=spec.tool_timeout,
                                     collector=self.collector)
                 self.registry.register(ag.tool)
             self.stages[name] = ag
             self.registry.register(ag)
+
+        # --- tool-call suspend/resume plane: which stage feeds which
+        # TOOL stage (its calls hold their sequence open), and which
+        # engine belongs to which tier (cross-engine resume placement)
+        self._feeds_tool: dict[str, str] = {}
+        for (u, v) in graph.edges:
+            if graph.stages[v].kind is StageKind.TOOL:
+                self._feeds_tool[u] = v
+        self._engine_tier = {w.name: w.tier for w in self.workers}
 
         # --- one data-plane channel per graph edge -------------------------
         self.channels: dict[tuple[str, str], Channel] = {}
@@ -475,7 +494,12 @@ class WorkflowPipeline(ServingFabric):
         ag = self.stages.get(spec.name)
         tier = ag.model_tier if ag is not None else spec.model_tier
         if spec.kind is StageKind.TOOL:
-            return spec.tool_latency
+            # the *expected* dwell under the heavy-tailed latency model,
+            # not the median — tool-bound paths are systematically
+            # longer than their nominal latency suggests
+            return expected_tool_latency(spec.tool_latency,
+                                         spec.tool_latency_cv,
+                                         spec.tool_timeout)
         cm = self.costmodels.get(tier)
         ts = self.cfg.tiers.get(tier)
         if cm is None:                    # tier not in this pool: calls
@@ -522,6 +546,65 @@ class WorkflowPipeline(ServingFabric):
     def route_call(self, msg) -> None:
         self.router.deliver(msg)
 
+    # -- tool-call suspend/resume plane --------------------------------------
+    def hold_enabled(self) -> bool:
+        return self.cfg.tool_context == "hold"
+
+    def tool_hold_est(self, stage: str):
+        """Expected tool dwell when ``stage`` feeds a TOOL stage — the
+        price signal the engine's offload policy weighs a suspend
+        against.  None when the stage feeds no tool (or the hold flow
+        is off): its calls complete normally."""
+        if not self.hold_enabled():
+            return None
+        tool = self._feeds_tool.get(stage)
+        if tool is None:
+            return None
+        ag = self.stages[tool].tool
+        return ag.mean_latency() if ag is not None else None
+
+    def tool_fanin(self, stage: str) -> int:
+        """How many input stages the TOOL fed by ``stage`` waits for.
+        >1 means a held call parks while *sibling* stages still need
+        slots — the configuration where a pinned hold can wedge an
+        engine (debate's pro/con -> factcheck)."""
+        tool = self._feeds_tool.get(stage)
+        return len(self.graph.preds(tool)) if tool is not None else 0
+
+    def engine_tier(self, req) -> str:
+        eng = req.meta.get("engine")
+        return self._engine_tier.get(getattr(eng, "name", ""), "")
+
+    def resume_request(self, req) -> None:
+        """Land a held-open request back on silicon after its tool
+        returned: pay the host→HBM restore cost, then resume on the
+        home engine — and when home is out of slots, migrate the host
+        KV copy to the least-loaded same-tier peer (cache-aware
+        placement: the resume runs where capacity is, not where the
+        sequence happened to start)."""
+        eng = req.meta.get("engine")
+        if eng is None:
+            return
+        d = eng.restore_cost(req)
+        if d > 0.0:
+            self.loop.call_after(d, lambda: self._resume_land(eng, req))
+        else:
+            self._resume_land(eng, req)
+
+    def _resume_land(self, eng, req) -> None:
+        if eng.resume_suspended(req) != "wait":
+            return
+        tier = self._engine_tier.get(eng.name, "")
+        peers = sorted((w.engine for w in self.workers
+                        if w.tier == tier and w.engine is not eng
+                        and w.engine.scheduler._free_slots),
+                       key=lambda e: e.load())
+        for peer in peers:
+            if eng.migrate_suspended(req, peer):
+                return
+        # no capacity anywhere: stays on the home scheduler's
+        # resume-pending list, retried ahead of fresh admissions
+
     def task_merge(self, task: GraphTask, arrived: int) -> None:
         """A stage dispatched after absorbing ``arrived`` input
         activations: they merge into the stage's single activation."""
@@ -545,6 +628,12 @@ class WorkflowPipeline(ServingFabric):
         if self._pending[tid] <= 0:
             del self._pending[tid]
             self._inflight.pop(tid, None)
+            # a task can finish with sequences still parked (e.g. its
+            # BRANCH arm never reached the post-tool stage): release them
+            for r in (task.meta.pop("held", []) if task.meta else []):
+                eng = r.meta.get("engine")
+                if eng is not None and r.state == RequestState.SUSPENDED:
+                    eng.finish_suspended(r)
             t = self.loop.now()
             task.finished_at = t
             self.tracer.end_task(tid, t)

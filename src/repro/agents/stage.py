@@ -36,7 +36,7 @@ from typing import Callable, Optional
 
 from repro.core.knobs import ControlSurface, KnobSpec
 from repro.core.metrics import RollingStat
-from repro.core.types import Message, Priority, Request
+from repro.core.types import Message, Priority, Request, RequestState
 from repro.sim.clock import EventLoop
 
 
@@ -60,7 +60,9 @@ class StageSpec:
     join_timeout: float = 0.0        # JOIN: max wait for stragglers (0 = forever)
     prompt_tokens: int = 96          # stage-local instruction prompt
     out_tokens: int = 64             # tokens generated per call
-    tool_latency: float = 0.05       # TOOL: fixed per-call latency
+    tool_latency: float = 0.05       # TOOL: median per-call latency
+    tool_latency_cv: float = 0.0     # TOOL: lognormal tail (0 = fixed)
+    tool_timeout: float = 0.0        # TOOL: per-attempt cap (0 = none)
     deadline_slack: float = 0.0      # 0 = inherit the pipeline default
     branch_fn: Optional[Callable[[str], int]] = None  # task_id -> succ index
 
@@ -270,6 +272,10 @@ class StageAgent(ControlSurface):
         self._gauge_queue()
 
     def _dispatch_tool(self, run: _StageRun) -> None:
+        # the tool is now in flight: its feeders' held requests are no
+        # longer demotable — their resume is what frees the slot
+        for r in run.task.meta.get("held", ()):
+            r.meta.pop("tool_blocked", None)
         msg = Message(src=self.name, dst=self.tool.name, payload={},
                       tokens=run.tokens, task_id=run.task.task_id)
         run.calls_open = 1
@@ -281,6 +287,11 @@ class StageAgent(ControlSurface):
         share = max((run.tokens + parts - 1) // parts, 0)
         deadline, cp_rem = self._deadline_and_cp(task)
         prio = self._boosted(task, cp_rem)
+        held = self._take_held(task, parts)
+        if held is not None:
+            self._continue_held(run, held, share, prio, deadline, cp_rem)
+            return
+        hold_est = self.p.tool_hold_est(self.spec.name)
         run.calls_open = parts
         for i in range(parts):
             req = Request(
@@ -295,6 +306,12 @@ class StageAgent(ControlSurface):
                                  (f"in:{task.task_id}", share)),
                       "on_finish":
                           lambda r, t, run=run: self._call_done(run, r, t)})
+            if hold_est is not None:
+                # this stage feeds a TOOL stage: keep the sequence alive
+                # at completion so the post-tool turn resumes its KV
+                # instead of re-prefilling the whole transcript
+                req.meta["hold_open"] = True
+                req.meta["tool_latency_est"] = hold_est
             self.p.route_call(Message(
                 src=self.name, dst="pool",
                 payload={"request": req, "tier": self.model_tier,
@@ -303,15 +320,101 @@ class StageAgent(ControlSurface):
                 created_at=self.loop.now()))
             self.calls += 1
 
+    # -- tool-call suspend/resume continuations ------------------------------
+    def _take_held(self, task, parts: int):
+        """Claim the task's held-open (suspended) request if this stage
+        can decode straight on top of its live KV: single call, same
+        tier as the engine parking the cache.  Held requests this stage
+        cannot use are released — the stage falls back to fresh calls."""
+        meta = getattr(task, "meta", None)
+        if not meta or "held" not in meta:
+            return None
+        held = meta.pop("held")
+        keep = None
+        if parts == 1:
+            live = [r for r in held
+                    if r.state == RequestState.SUSPENDED
+                    and self.p.engine_tier(r) == self.model_tier]
+            if live:
+                keep = max(live, key=lambda r: r.total_len)
+        for r in held:
+            if r is not keep:
+                self._release_held(r)
+        return keep
+
+    def _release_held(self, req: Request) -> None:
+        eng = req.meta.get("engine")
+        if eng is not None and req.state == RequestState.SUSPENDED:
+            eng.finish_suspended(req)
+
+    def _continue_held(self, run: _StageRun, req: Request, share: int,
+                       prio: Priority, deadline: float,
+                       cp_rem: float) -> None:
+        """Resume the suspended pre-tool request in place of a fresh
+        call: the tool result arrives as ``share`` appended prompt
+        tokens (still prefilled — only the pre-tool context is warm),
+        then this stage's out_tokens decode on top of it."""
+        run.calls_open = 1
+        req.meta.pop("tool_blocked", None)
+        req.meta["continued_base"] = req.generated
+        req.prompt_len += share
+        req.available = req.prompt_len
+        req.max_new_tokens += self.spec.out_tokens
+        req.priority = prio
+        req.deadline = deadline
+        req.stage = self.spec.name
+        req.meta["stage"] = self.spec.name
+        req.meta["task"] = run.task.task_id
+        req.meta["cp_remaining"] = cp_rem
+        req.meta["on_finish"] = (
+            lambda r, t, run=run: self._call_done(run, r, t))
+        hold_est = self.p.tool_hold_est(self.spec.name)
+        if hold_est is not None:
+            req.meta["hold_open"] = True
+            req.meta["tool_latency_est"] = hold_est
+        req.meta["post_tool_t0"] = self.loop.now()
+        self.calls += 1
+        self.p.resume_request(req)
+
     # -- completion ---------------------------------------------------------
     def _tool_done(self, run: _StageRun) -> None:
+        self._prune_held(run.task)
         run.calls_open = 0
         run.out_tokens = run.tokens       # tools pass content through
         self._complete(run, self.loop.now())
 
+    def _prune_held(self, task) -> None:
+        """The tool returned: keep only the richest-context held request
+        (it carries the most reusable KV into the post-tool turn) and
+        release the rest — e.g. only one of pro/con survives a join."""
+        meta = getattr(task, "meta", None)
+        if not meta or "held" not in meta:
+            return
+        live = [r for r in meta["held"]
+                if r.state == RequestState.SUSPENDED]
+        if not live:
+            meta.pop("held", None)
+            return
+        keep = max(live, key=lambda r: r.total_len)
+        for r in live:
+            if r is not keep:
+                self._release_held(r)
+        meta["held"] = [keep]
+
     def _call_done(self, run: _StageRun, req: Request, t: float) -> None:
         run.calls_open -= 1
-        run.out_tokens += req.generated
+        run.out_tokens += req.generated - req.meta.pop("continued_base", 0)
+        if req.state == RequestState.SUSPENDED:
+            # the engine held the sequence open for our TOOL successor:
+            # park it on the task until the post-tool stage claims it
+            run.task.meta.setdefault("held", []).append(req)
+            if self.p.tool_fanin(self.spec.name) > 1:
+                # the TOOL this hold targets waits on *sibling* stages
+                # whose calls still need slots: a pinned hold here can
+                # wedge a fully parked engine (debate's pro holds the
+                # slot its own con needs), so flag it demotable for the
+                # scheduler's liveness rung until the tool dispatches
+                req.meta["tool_blocked"] = True
         if run.calls_open <= 0:
             self._complete(run, t)
 

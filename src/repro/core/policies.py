@@ -425,6 +425,53 @@ class ChunkPolicy(Policy):
         self.moves.append((ctx.now, want))
 
 
+class OffloadPolicy(Policy):
+    """Tool-call suspend/resume plane: escalate an engine's KV offload
+    stance from queue pressure.  Under light load the ``auto`` rule is
+    right — pinning a tool-waiting sequence in its slot is free when
+    nobody wants the slot.  Once admission backs up, every parked
+    sequence is stolen decode capacity: push the engine to
+    ``aggressive`` (spill every suspend to the host tier), and relax
+    back to ``auto`` only below the hysteresis low-water mark.  Acts
+    only through the engine's registered Table-1 ``offload`` knob, so
+    the same behaviour is expressible in intent as
+
+        rule offload on engine e0.queue_len > 8:
+            => set engine e0.offload aggressive
+    """
+
+    name = "offload-policy"
+
+    def __init__(self, engine: str, queue_hi: float = 8.0,
+                 queue_lo: float = 2.0, dwell: float = 0.5):
+        assert queue_lo <= queue_hi
+        self.engine = engine
+        self.queue_hi = queue_hi
+        self.queue_lo = queue_lo
+        self.dwell = dwell
+        self._last_move = -1e18
+        self.moves: list[tuple[float, str]] = []
+
+    def on_tick(self, ctx: ControlContext) -> None:
+        q = ctx.metric(f"{self.engine}.queue_len", "last",
+                       default=float("nan"))
+        if q != q:
+            return                       # engine not reporting yet
+        if ctx.now - self._last_move < self.dwell:
+            return
+        cur = str(ctx.get(self.engine, "offload"))
+        want = cur
+        if q > self.queue_hi:
+            want = "aggressive"
+        elif q <= self.queue_lo and cur == "aggressive":
+            want = "auto"
+        if want == cur:
+            return
+        ctx.set(self.engine, "offload", want)
+        self._last_move = ctx.now
+        self.moves.append((ctx.now, want))
+
+
 class RoleBalancerPolicy(Policy):
     """Disaggregation plane (ISSUE 4): flip engine *roles* from fleet
     pressure — the SDN-native version of disaggregated serving.  Reads

@@ -48,6 +48,7 @@ class RequestState(str, enum.Enum):
     RUNNING = "running"
     PREEMPTED = "preempted"
     HANDOFF = "handoff"      # prefill done; KV in flight to a decode engine
+    SUSPENDED = "suspended"  # parked on an external wait (tool call)
     FINISHED = "finished"
     FAILED = "failed"
 

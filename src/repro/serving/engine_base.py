@@ -31,7 +31,9 @@ class EngineCore(ControlSurface):
     CAPABILITIES = ("kv_transfer", "pause", "priority", "role")
     METRICS = ("queue_len", "num_running", "page_util", "step_time",
                "mean_step_time", "ttft", "latency", "tpt", "itl_p95",
-               "throughput", "prefill_queue_tokens", "decode_slot_util")
+               "throughput", "prefill_queue_tokens", "decode_slot_util",
+               "suspended_seqs", "host_pages_used", "restore_hit_rate",
+               "restore_ttft")
 
     ITL_WINDOW = 256                 # rolling inter-token-latency samples
     KNOB_SPECS = tuple(
@@ -43,6 +45,13 @@ class EngineCore(ControlSurface):
                  doc="sampling temperature; 0 = greedy"),
         KnobSpec("paused", kind="bool", on_change="_paused_changed",
                  doc="freeze the step loop (resume kicks it)"),
+        KnobSpec("offload", kind="str",
+                 choices=("off", "auto", "aggressive"),
+                 doc="tool-call suspend policy: off pins the slot for the "
+                     "tool's duration; auto offloads KV to the host tier "
+                     "when predicted tool latency under queue pressure "
+                     "beats the offload+restore cost; aggressive always "
+                     "offloads"),
     )
 
     def __init__(self, name: str, model_name: str, sched_cfg: SchedulerConfig,
@@ -77,6 +86,14 @@ class EngineCore(ControlSurface):
         self.tracer = None
         self.scheduler.on_admit = self._trace_admit
         self.scheduler.on_preempt = self._trace_preempt
+        # -- tool-call plane: suspend/resume with tiered KV offload --------
+        self.offload = "auto"
+        self._host_store: dict[str, dict] = {}  # req_id -> extracted KV
+        self.suspend_count = 0
+        self.demote_count = 0
+        self.restore_ttfts: list[float] = []    # post-tool first-token gaps
+        self.scheduler.on_resume = self._resume_landed
+        self.scheduler.demote_fn = self._demote_starved_pin
         # -- disaggregation plane hooks (wired by a DisaggPool) ------------
         self.disagg = None                          # owning handoff fabric
         self.kv_ready_fn: Optional[Callable[[Request], float]] = None
@@ -186,6 +203,149 @@ class EngineCore(ControlSurface):
         self.scheduler.release_for_handoff(req)
         self._trace_seg(req, "handoff_wait")
         self._gauge("num_running", self.scheduler.num_running)
+
+    # ------------------------------------- tool-call suspend/resume plane
+    @property
+    def restore_hit_rate(self) -> float:
+        return self.scheduler.restore_hit_rate
+
+    def restore_cost(self, req: Request) -> float:
+        """Modeled host→HBM refill delay a resume pays before landing.
+        0 on the real engine (the DMA rides ``inject_state``'s measured
+        wall clock); the sim engine prices it from the CostModel."""
+        return 0.0
+
+    def _offload_pays(self, req: Request, latency_est: float) -> bool:
+        """The ``auto`` rule: offload only when there is queue pressure
+        for the freed capacity AND the predicted tool latency beats the
+        round-trip spill cost (unknown estimates default to offloading
+        under pressure — a pinned slot can never pay for itself)."""
+        s = self.scheduler
+        pressured = (s.queue_len > 0 or not s._free_slots
+                     or bool(s._resume_pending))
+        if not pressured:
+            return False
+        cm = getattr(self, "cm", None)
+        if cm is None or latency_est <= 0:
+            return True
+        cost = (cm.offload_time(req.total_len)
+                + cm.restore_time(req.total_len))
+        return latency_est > 2.0 * cost
+
+    def suspend_request(self, req: Request, offload: bool | None = None,
+                        latency_est: float = 0.0) -> str:
+        """Park a RUNNING request for an external wait (a tool call).
+        ``offload=None`` lets the engine's ``offload`` knob decide; the
+        KV is extracted *before* the scheduler frees its pages so the
+        host copy rides the live block table.  Returns the tier:
+        ``pin`` | ``host`` | ``drop`` | ``none``."""
+        if offload is None:
+            offload = (self.offload == "aggressive"
+                       or (self.offload == "auto"
+                           and self._offload_pays(req, latency_est)))
+        want_host = offload and self.scheduler.alloc.host_room_for(req.req_id)
+        state = self.extract_state(req) if want_host else None
+        tier = self.scheduler.suspend(req, offload=offload)
+        if tier == "none":
+            return tier
+        if tier == "host" and state is not None:
+            self._host_store[req.req_id] = state
+        self.suspend_count += 1
+        req.meta["engine"] = self
+        self._trace_seg(req, "suspended")
+        self._suspend_gauges()
+        self.kick()                     # the freed slot may admit work
+        return tier
+
+    def _demote_starved_pin(self) -> None:
+        """Scheduler's pin-deadlock breaker: every slot-holder is a
+        parked pin and work is waiting.  Demote the oldest pin to a real
+        offload — this runs regardless of the ``offload`` knob, because
+        it is a liveness guarantee, not a policy choice."""
+        victim = self.scheduler.pin_starved()
+        if victim is None:
+            return
+        want_host = self.scheduler.alloc.host_room_for(victim.req_id)
+        state = self.extract_state(victim) if want_host else None
+        tier = self.scheduler.offload_pinned(victim)
+        if tier == "none":
+            return
+        if tier == "host" and state is not None:
+            self._host_store[victim.req_id] = state
+        self.demote_count += 1
+        victim.meta["engine"] = self
+        self._trace_seg(victim, "suspended")
+        self._suspend_gauges()
+
+    def resume_suspended(self, req: Request) -> str:
+        """Bring a suspended request back: ``pin``/``hit`` land now (the
+        scheduler's ``on_resume`` hook re-injects host KV), ``wait``
+        queues it ahead of fresh admissions, ``recompute`` re-enters
+        normal admission with the tail folded into the prompt."""
+        out = self.scheduler.resume(req)
+        self._suspend_gauges()
+        self.kick()
+        return out
+
+    def migrate_suspended(self, req: Request, dest: "EngineCore") -> bool:
+        """Cross-engine resume — cache-aware placement when the home
+        engine is out of capacity: the host KV copy lands on ``dest``
+        through the same ``admit_direct``/``inject_state`` sequence a
+        disaggregation handoff uses.  Only offloaded-with-state suspends
+        migrate (a pinned request already holds its home slot)."""
+        if req.state != RequestState.SUSPENDED \
+                or req in self.scheduler.running:
+            return False
+        state = self._host_store.get(req.req_id)
+        if state is None:
+            return False
+        if not dest.scheduler.admit_direct(req):
+            return False
+        self.scheduler.forget_suspended(req)
+        self._host_store.pop(req.req_id, None)
+        dest.inject_state(req, state)
+        dest.scheduler.resume_hits += 1
+        req.meta["engine"] = dest
+        self._suspend_gauges()
+        dest._suspend_gauges()
+        self.kick()
+        dest.kick()
+        return True
+
+    def finish_suspended(self, req: Request) -> None:
+        """Abandon a held-open suspended request (its continuation went
+        to a sibling): release the parked state and account it done."""
+        t = self.now()
+        self._host_store.pop(req.req_id, None)
+        self.scheduler.finish_suspended(req, t)
+        self.finished.append(req)
+        self._observe("latency", t - req.arrival_time)
+        self._trace_finish(req, t)
+        self._suspend_gauges()
+        self.kick()
+
+    def _resume_landed(self, req: Request, outcome: str) -> None:
+        """Scheduler hook: a resume reached its terminal path."""
+        state = self._host_store.pop(req.req_id, None)
+        if outcome == "hit" and state is not None:
+            self.inject_state(req, state)
+        elif outcome == "pin":
+            self._trace_seg(req, "decode")
+        self._suspend_gauges()
+
+    def _suspend_gauges(self) -> None:
+        s = self.scheduler
+        self._gauge("suspended_seqs", s.suspended_seqs)
+        self._gauge("host_pages_used", s.alloc.host_pages)
+        self._gauge("restore_hit_rate", s.restore_hit_rate)
+
+    # subclasses provide the actual KV movement (sim: bookkeeping; real
+    # engine: the paged_extract/paged_insert batch-1 bridge)
+    def extract_state(self, req: Request) -> dict:
+        raise NotImplementedError
+
+    def inject_state(self, req: Request, state: dict) -> None:
+        raise NotImplementedError
 
     # ------------------------------------------------------------- tracing
     # Segment spans tile [arrival, finish] exactly: each lifecycle
@@ -362,9 +522,25 @@ class EngineCore(ControlSurface):
         r.output_tokens.append(tok)
         self.tokens_generated += 1
         self.scheduler.charge(r, 1, t)
+        t0 = r.meta.pop("post_tool_t0", None)
+        if t0 is not None:
+            # post-tool TTFT: tool completion -> first resumed token
+            # (restore/recompute latency + any capacity wait)
+            self._observe("restore_ttft", t - t0)
+            self.restore_ttfts.append(t - t0)
         if self.on_token is not None:
             self.on_token(r, tok, t)
         if r.done:
+            if r.meta.pop("hold_open", False):
+                # the *call* is complete but the sequence lives on: park
+                # it for the tool's duration instead of finishing, so the
+                # post-tool turn resumes on a warm cache.  Stage
+                # bookkeeping still advances through on_finish.
+                self.suspend_request(
+                    r, latency_est=float(r.meta.get("tool_latency_est", 0.0)))
+                if self.on_finish is not None:
+                    self.on_finish(r, t)
+                return
             self.scheduler.finish(r, t)
             self.finished.append(r)
             self._observe("latency", t - r.arrival_time)

@@ -108,6 +108,21 @@ class SimEngine(EngineCore):
                 "nbytes": self.cm.kv_transfer_bytes(req.total_len)}
 
     def inject_state(self, req: Request, state: dict) -> None:
-        req.state = RequestState.RUNNING
-        req.prefilled = req.prompt_len
+        # continuation resumes may carry appended, un-prefilled prompt
+        # tokens (a tool result): keep ``prefilled`` where the suspend
+        # left it and land in PREFILL so their ingestion is charged;
+        # handoffs arrive fully prefilled and go straight to RUNNING
+        req.prefilled = min(req.prefilled, req.prompt_len)
+        req.state = (RequestState.PREFILL
+                     if req.prefilled < req.prompt_len
+                     else RequestState.RUNNING)
         self.kick()
+
+    # ----------------------------------------------------- tool-call plane
+    def restore_cost(self, req: Request) -> float:
+        """Virtual-clock price of the host→HBM refill a warm resume pays
+        (pinned or recompute resumes move no host KV)."""
+        if req.req_id in self._host_store \
+                or self.scheduler.alloc.is_suspended(req.req_id):
+            return self.cm.restore_time(req.total_len)
+        return 0.0

@@ -18,9 +18,19 @@ Two page classes:
   ⇒ *idle*, i.e. evictable by the prefix cache's policy) until
   ``drop_block`` reclaims them.
 
+* **host** pages — a spill tier for tool-call suspend/resume
+  (serving/scheduler.py): ``suspend`` moves a live sequence's private
+  pages HBM→host and releases its shared blocks (decref only, so
+  sharers keep the prefix hot), ``restore`` reclaims fresh HBM pages
+  and re-acquires the remembered blocks, and ``drop_suspended`` is the
+  bottom rung of the eviction ladder HBM → host → drop-and-recompute.
+  Host pages get physical ids in their own range ``[num_pages,
+  num_pages + host_capacity_pages)`` so the two tiers never alias.
+
 Invariant (the hypothesis property tests pin this down):
 
     free_pages + private_pages + shared_pages == num_pages
+    host_free + host_used                     == host_capacity_pages
 
 Beyond the page *counts*, the allocator assigns every page a concrete
 **physical id** in ``[0, num_pages)``: each sequence holds an ordered
@@ -50,6 +60,7 @@ class SharedBlock:
 class PageAllocator:
     num_pages: int
     page_size: int = 128
+    host_capacity_pages: int = 0
     _used: dict[str, int] = field(default_factory=dict)   # seq -> pages
     _blocks: dict[str, SharedBlock] = field(default_factory=dict)
     _seq_blocks: dict[str, list[str]] = field(default_factory=dict)
@@ -57,10 +68,19 @@ class PageAllocator:
     _free_ids: list[int] = field(default_factory=list)
     _seq_ids: dict[str, list[int]] = field(default_factory=dict)
     _block_ids: dict[str, list[int]] = field(default_factory=dict)
+    # host spill tier: ids live in [num_pages, num_pages + capacity)
+    _host_free_ids: list[int] = field(default_factory=list)
+    _host_ids: dict[str, list[int]] = field(default_factory=dict)
+    _host_blocks: dict[str, list[str]] = field(default_factory=dict)
 
     def __post_init__(self):
         if not self._free_ids and not self._seq_ids and not self._block_ids:
             self._free_ids = list(range(self.num_pages))
+        if not self._host_free_ids and not self._host_ids:
+            self._host_free_ids = list(
+                range(self.num_pages,
+                      self.num_pages + self.host_capacity_pages))
+        self._host_next = self.num_pages + self.host_capacity_pages
 
     # -- queries --------------------------------------------------------------
     @property
@@ -93,8 +113,25 @@ class PageAllocator:
     def utilization(self) -> float:
         return 1.0 - self.free_pages / max(self.num_pages, 1)
 
+    @property
+    def host_pages(self) -> int:
+        return sum(len(ids) for ids in self._host_ids.values())
+
+    @property
+    def host_free_pages(self) -> int:
+        return len(self._host_free_ids)
+
+    def is_suspended(self, seq_id: str) -> bool:
+        return seq_id in self._host_ids
+
+    def host_room_for(self, seq_id: str) -> bool:
+        """Would ``suspend(seq_id)`` land on the host tier (vs drop)?"""
+        return self._used.get(seq_id, 0) <= len(self._host_free_ids)
+
     # -- private-page mutation -------------------------------------------------
     def allocate(self, seq_id: str, tokens: int) -> bool:
+        if seq_id in self._host_ids:          # suspended sequences can't grow
+            return False
         need = self.pages_for(tokens)
         have = self._used.get(seq_id, 0)
         grow = max(0, need - have)
@@ -122,6 +159,99 @@ class PageAllocator:
         self._free_ids.extend(self._seq_ids.pop(seq_id, ()))
         return self._used.pop(seq_id, 0)
 
+    # -- host spill tier (tool-call suspend/resume) ----------------------------
+    def suspend(self, seq_id: str) -> str:
+        """Spill a live sequence for an external wait.  Private pages move
+        HBM→host (fresh ids from the host range); acquired shared blocks
+        are decref'd — sharers keep them hot — but remembered so
+        ``restore`` can re-acquire the exact prefix chain.  Returns
+        ``"host"`` on a successful spill or ``"drop"`` when the host tier
+        has no room (the sequence's state is simply released and resume
+        must recompute)."""
+        if seq_id in self._host_ids:
+            return "host"
+        blocks = self._seq_blocks.pop(seq_id, [])
+        for bid in blocks:
+            blk = self._blocks.get(bid)
+            if blk is not None and blk.refs > 0:
+                blk.refs -= 1
+        ids = self._seq_ids.pop(seq_id, [])
+        self._used.pop(seq_id, None)
+        self._free_ids.extend(ids)
+        n = len(ids)
+        if n > len(self._host_free_ids):
+            return "drop"
+        self._host_ids[seq_id] = self._host_free_ids[:n]
+        del self._host_free_ids[:n]
+        self._host_blocks[seq_id] = blocks
+        return "host"
+
+    def host_holds(self, seq_id: str) -> int:
+        return len(self._host_ids.get(seq_id, ()))
+
+    def restore_ready(self, seq_id: str) -> str:
+        """Why (or whether) a warm restore can proceed right now:
+        ``ok`` | ``no_pages`` (HBM full — transient) | ``no_blocks``
+        (prefix chain partially evicted — recompute) | ``gone`` (no host
+        copy — recompute)."""
+        ids = self._host_ids.get(seq_id)
+        if ids is None:
+            return "gone"
+        if any(b not in self._blocks
+               for b in self._host_blocks.get(seq_id, ())):
+            return "no_blocks"
+        return "ok" if len(ids) <= len(self._free_ids) else "no_pages"
+
+    def can_restore(self, seq_id: str) -> bool:
+        """True iff a host-suspended sequence can come back warm: the host
+        copy exists, every remembered prefix block is still resident, and
+        the HBM pool has room for its private pages."""
+        return self.restore_ready(seq_id) == "ok"
+
+    def restore(self, seq_id: str) -> bool:
+        """Reclaim HBM pages for a host-suspended sequence and re-acquire
+        its prefix blocks (all-or-nothing: a partially evicted chain means
+        recompute, not a broken prefix)."""
+        if not self.can_restore(seq_id):
+            return False
+        host = self._host_ids.pop(seq_id)   # un-suspend first: acquire()
+        for bid in self._host_blocks.pop(seq_id, ()):   # refuses parked seqs
+            self.acquire(seq_id, bid)
+        n = len(host)
+        if n:
+            self._used[seq_id] = n
+            self._seq_ids[seq_id] = self._free_ids[:n]
+            del self._free_ids[:n]
+        self._host_free_ids.extend(host)
+        return True
+
+    def drop_suspended(self, seq_id: str) -> int:
+        """Bottom of the eviction ladder: discard the host copy (resume
+        will drop-and-recompute).  Returns the host pages reclaimed."""
+        self._host_blocks.pop(seq_id, None)
+        ids = self._host_ids.pop(seq_id, ())
+        self._host_free_ids.extend(ids)
+        return len(ids)
+
+    def set_host_capacity(self, pages: int) -> int:
+        """Grow/shrink the host tier; shrink is clamped above the pages
+        currently holding spilled sequences.  Returns the capacity that
+        actually took effect."""
+        pages = max(0, int(pages))
+        cur = self.host_capacity_pages
+        if pages > cur:
+            grow = pages - cur
+            self._host_free_ids.extend(
+                range(self._host_next, self._host_next + grow))
+            self._host_next += grow
+        elif pages < cur:
+            drop = min(cur - pages, len(self._host_free_ids))
+            if drop:
+                del self._host_free_ids[-drop:]
+            pages = cur - drop
+        self.host_capacity_pages = pages
+        return pages
+
     # -- shared-block mutation -------------------------------------------------
     def share(self, block_id: str, pages: int) -> bool:
         """Make a block resident with refcount 0 (cache-owned).  No-op if
@@ -146,8 +276,8 @@ class PageAllocator:
         """Reference a resident block from a sequence (idempotent per
         seq/block pair)."""
         blk = self._blocks.get(block_id)
-        if blk is None:
-            return False
+        if blk is None or seq_id in self._host_ids:
+            return False                  # suspended: no HBM references
         held = self._seq_blocks.setdefault(seq_id, [])
         if block_id in held:
             return True
@@ -161,6 +291,8 @@ class PageAllocator:
         prefix blocks enter the cache without double-counting."""
         if block_id in self._blocks:
             return self.acquire(seq_id, block_id)
+        if seq_id in self._host_ids:
+            return False                  # suspended: no HBM references
         have = self._used.get(seq_id, 0)
         if pages > have:
             return False
@@ -209,6 +341,11 @@ class PageAllocator:
         self._free_ids = list(range(self.num_pages))
         self._seq_ids.clear()
         self._block_ids.clear()
+        self._host_ids.clear()
+        self._host_blocks.clear()
+        self._host_free_ids = list(
+            range(self.num_pages, self.num_pages + self.host_capacity_pages))
+        self._host_next = self.num_pages + self.host_capacity_pages
 
 
 def block_tables(alloc: PageAllocator, seq_ids,

@@ -198,6 +198,9 @@ class SchedulerConfig:
     role: str = "unified"             # unified | prefill | decode
     # tenancy plane: the queue discipline deciding who is served next
     discipline: str = "fifo_priority"  # fifo_priority | weighted_fair
+    # tool-call plane: host-memory spill tier for suspended sequences
+    # (0 = no offload tier: suspend drops straight to recompute)
+    host_capacity_pages: int = 0
 
 
 class Scheduler(ControlSurface):
@@ -205,7 +208,8 @@ class Scheduler(ControlSurface):
     kind = "scheduler"
     CAPABILITIES = ("priority", "preempt")
     METRICS = ("queue_len", "num_running", "page_util",
-               "prefill_queue_tokens", "decode_slot_util")
+               "prefill_queue_tokens", "decode_slot_util",
+               "suspended_seqs", "host_pages_used")
     KNOB_SPECS = (
         KnobSpec("max_num_seqs", kind="int", lo=1, attr="cfg.max_slots",
                  on_change="_resize_slots",
@@ -231,13 +235,20 @@ class Scheduler(ControlSurface):
                  choices=tuple(DISCIPLINES), attr="cfg.discipline",
                  on_change="_discipline_changed",
                  doc="queue discipline: fifo_priority | weighted_fair"),
+        KnobSpec("host_capacity_pages", kind="int", lo=0,
+                 attr="cfg.host_capacity_pages",
+                 on_change="_host_capacity_changed",
+                 doc="host-memory spill tier for tool-call suspend "
+                     "(pages); 0 = no offload tier, suspended sequences "
+                     "drop straight to recompute"),
     )
 
     def __init__(self, cfg: SchedulerConfig, name: str = "scheduler",
                  cache=None, tenants=None):
         self.name = name
         self.cfg = cfg
-        self.alloc = PageAllocator(cfg.num_pages, cfg.page_size)
+        self.alloc = PageAllocator(cfg.num_pages, cfg.page_size,
+                                   host_capacity_pages=cfg.host_capacity_pages)
         self.cache = cache               # Optional[PrefixCache] over alloc
         self.tenants = tenants           # Optional[TenantDirectory]
         self.discipline = DISCIPLINES[cfg.discipline]()
@@ -246,6 +257,13 @@ class Scheduler(ControlSurface):
         self.running: list[Request] = []
         self._free_slots = list(range(cfg.max_slots))
         self.preempt_count = 0
+        # tool-call plane: offloaded (slotless) suspended requests, plus
+        # the restore-capable ones waiting for a free slot/pages — those
+        # are retried with priority over fresh admissions every plan_step
+        self.suspended: list[Request] = []
+        self._resume_pending: list[Request] = []
+        self.resume_hits = 0
+        self.resume_recomputes = 0
         # disaggregation fabric hook: where a decode-role scheduler
         # sends preempted victims (it can never re-admit them itself —
         # they need a fresh prefill on a prefill-capable engine)
@@ -254,12 +272,24 @@ class Scheduler(ControlSurface):
         # at the exact admit/preempt instants the spans must tile on
         self.on_admit: Optional[Callable[[Request], None]] = None
         self.on_preempt: Optional[Callable[[Request], None]] = None
+        # resume hook: the owning engine re-injects host KV (or notes a
+        # recompute) at the exact instant a suspended request lands back
+        self.on_resume: Optional[Callable[[Request, str], None]] = None
+        # pin-deadlock breaker: when every slot-holder is a parked pin
+        # and work is waiting, plan_step asks the engine to demote one
+        # pin down the eviction ladder (the engine owns the KV movement)
+        self.demote_fn: Optional[Callable[[], None]] = None
 
     def _resize_slots(self, old: int, new: int) -> None:
         if new > old:
             self._free_slots.extend(range(old, new))
         elif new < old:
             self._free_slots = [s for s in self._free_slots if s < new]
+
+    def _host_capacity_changed(self, old: int, new: int) -> None:
+        # shrink is clamped above pages holding live spills: reflect the
+        # capacity that actually took effect back into the knob value
+        self.cfg.host_capacity_pages = self.alloc.set_host_capacity(new)
 
     def _discipline_changed(self, old: str, new: str) -> None:
         # fresh accounting on a switch: virtual time from a previous
@@ -308,6 +338,25 @@ class Scheduler(ControlSurface):
 
     def slots_in_use(self) -> int:
         return self.cfg.max_slots - len(self._free_slots)
+
+    @property
+    def suspended_seqs(self) -> int:
+        """Requests parked on an external wait: offloaded (slotless) plus
+        pinned-in-place ones still holding their slot."""
+        pinned = sum(1 for r in self.running
+                     if r.state == RequestState.SUSPENDED)
+        return len(self.suspended) + pinned
+
+    @property
+    def host_pages_used(self) -> int:
+        return self.alloc.host_pages
+
+    @property
+    def restore_hit_rate(self) -> float:
+        """Warm-restore fraction of completed resumes (1.0 until any
+        resume has gone the drop-and-recompute path)."""
+        total = self.resume_hits + self.resume_recomputes
+        return self.resume_hits / total if total else 1.0
 
     # -- disaggregation gauges (fleet policies aggregate these) -------------
     @property
@@ -437,6 +486,194 @@ class Scheduler(ControlSurface):
         self._release(req)
         req.state = RequestState.HANDOFF
 
+    # -- tool-call suspend/resume ------------------------------------------------
+    def suspend(self, req: Request, offload: bool = True) -> str:
+        """Park a RUNNING request on an external wait (a tool call).
+
+        ``offload=False`` *pins*: the request keeps its slot and pages
+        (it simply stops being planned into decode steps) — the
+        baseline behavior this plane exists to beat.  ``offload=True``
+        returns the slot to the pool immediately and spills private KV
+        pages to the allocator's host tier (shared prefix blocks are
+        only decref'd, so sharers keep them hot).  Returns the tier the
+        request landed on: ``pin`` | ``host`` | ``drop`` (host tier
+        full — resume will recompute) | ``none`` (not suspendable)."""
+        if req.state != RequestState.RUNNING or req not in self.running:
+            return "none"
+        req.state = RequestState.SUSPENDED
+        if not offload:
+            req.meta["suspend_tier"] = "pin"
+            return "pin"
+        return self._spill(req)
+
+    def _spill(self, req: Request) -> str:
+        """Move a SUSPENDED slot-holder down the ladder: KV to the host
+        tier (or dropped when it is full), slot back to the pool."""
+        tier = self.alloc.suspend(req.req_id)
+        if tier == "drop" and self.cache is not None:
+            self.cache.seq_done(req.req_id)
+        if 0 <= req.slot < self.cfg.max_slots:
+            self._free_slots.append(req.slot)
+        req.slot = -1
+        self.running.remove(req)
+        self.suspended.append(req)
+        req.meta["suspend_tier"] = tier
+        return tier
+
+    def offload_pinned(self, req: Request) -> str:
+        """Demote a *pinned* suspended request to a real offload — the
+        anti-deadlock rung.  A pin is best-effort: if every slot-holder
+        is parked on a tool wait and queued work includes the very calls
+        those tools are waiting on (a fan-in like debate's pro/con ->
+        factcheck), no slot would ever free.  The caller (the engine's
+        ``demote_fn``) extracts KV first, exactly like a knob-driven
+        offload."""
+        if req.state != RequestState.SUSPENDED or req not in self.running:
+            return "none"
+        return self._spill(req)
+
+    def pin_starved(self) -> Optional[Request]:
+        """The demotion trigger — a *true* wedge, not mere pressure: no
+        free slot, work waiting, and every slot-holder is a parked pin
+        whose tool cannot even *start* until a queued sibling call runs
+        (the workflow layer stamps those ``tool_blocked``).  If any
+        occupant is still decoding, or is parked on a tool already in
+        flight, the engine makes progress on its own — that is latency,
+        not deadlock, and the pin baseline stays pinned through it."""
+        if self._free_slots or not self.running:
+            return None
+        if not (self.waiting or self._resume_pending):
+            return None
+        for r in self.running:
+            if (r.state != RequestState.SUSPENDED
+                    or not r.meta.get("tool_blocked")):
+                return None               # someone can still make progress
+        return self.running[0]            # oldest blocked pin first
+
+    def resume(self, req: Request) -> str:
+        """Bring a SUSPENDED request back to RUNNING.
+
+        Outcomes: ``pin`` (never left — state flip only), ``hit``
+        (host pages reclaimed into HBM, prefix blocks re-acquired, slot
+        granted; the engine's ``on_resume`` hook re-injects the KV),
+        ``wait`` (restorable, but no slot/pages right now — queued on
+        the resume-pending list, which ``plan_step`` retries *before*
+        fresh admissions), or ``recompute`` (host copy or prefix chain
+        gone: the eviction ladder's bottom rung — generated tokens fold
+        into the prompt and the request re-enters normal admission)."""
+        if req.state != RequestState.SUSPENDED:
+            return "none"
+        if req in self.running:               # pinned: slot never left
+            req.state = self._resume_state(req)
+            req.meta.pop("suspend_tier", None)
+            if self.on_resume is not None:
+                self.on_resume(req, "pin")
+            return "pin"
+        out = self._try_restore(req)
+        if out == "wait" and req not in self._resume_pending:
+            self._resume_pending.append(req)
+        return out
+
+    def _resume_state(self, req: Request) -> RequestState:
+        """A resume lands in PREFILL when the continuation appended
+        prompt tokens (a tool result) that still need prefilling on top
+        of the restored context; plain resumes go straight to RUNNING."""
+        if req.prefilled < min(req.prompt_len, max(req.available, 0)):
+            return RequestState.PREFILL
+        return RequestState.RUNNING
+
+    def _try_restore(self, req: Request) -> str:
+        ready = self.alloc.restore_ready(req.req_id)
+        if ready == "no_pages" and self.cache is not None:
+            # eviction ladder: reclaim idle cache blocks before forcing
+            # a restorable spill down to recompute (or making it wait)
+            if self.cache.make_room(self.alloc.host_holds(req.req_id)
+                                    * self.cfg.page_size):
+                ready = self.alloc.restore_ready(req.req_id)
+        if ready == "ok":
+            if not self._free_slots:
+                return "wait"
+            self.alloc.restore(req.req_id)
+            req.slot = self._free_slots.pop(0)
+            req.state = self._resume_state(req)
+            req.meta.pop("suspend_tier", None)
+            if req in self.suspended:
+                self.suspended.remove(req)
+            self.running.append(req)
+            self.resume_hits += 1
+            if self.on_admit is not None:
+                self.on_admit(req)
+            if self.on_resume is not None:
+                self.on_resume(req, "hit")
+            return "hit"
+        if ready == "no_pages":
+            return "wait"
+        # gone / no_blocks: drop-and-recompute.  The generated tail's KV
+        # is lost with the host copy, so it folds into the prompt and the
+        # whole context re-prefills through normal admission (where the
+        # prefix cache may still shortcut most of it).
+        self.alloc.drop_suspended(req.req_id)
+        if self.cache is not None:
+            self.cache.seq_done(req.req_id)
+        if req in self.suspended:
+            self.suspended.remove(req)
+        req.meta.pop("suspend_tier", None)
+        if req.generated:
+            if req.prompt_tokens is not None:
+                req.prompt_tokens = (list(req.prompt_tokens)
+                                     + list(req.output_tokens))
+            req.prompt_len += req.generated
+            req.max_new_tokens = max(req.max_new_tokens - req.generated, 1)
+            req.generated = 0
+        req.available = req.prompt_len
+        req.prefilled = 0
+        req.slot = -1
+        self.resume_recomputes += 1
+        if self.cfg.role == "decode" and self.bounce_fn is not None:
+            # decode engines can't run the recompute prefill themselves
+            self.bounce_fn(req)
+        else:
+            self.submit(req)
+        if self.on_resume is not None:
+            self.on_resume(req, "recompute")
+        return "recompute"
+
+    def _resume_pass(self) -> None:
+        """Retry restore-pending resumes — before fresh admissions, so a
+        returning tool call outranks new work for freed capacity."""
+        if not self._resume_pending:
+            return
+        still = []
+        for req in self._resume_pending:
+            if req.state != RequestState.SUSPENDED:
+                continue                  # finished/migrated meanwhile
+            if self._try_restore(req) == "wait":
+                still.append(req)
+        self._resume_pending = still
+
+    def forget_suspended(self, req: Request) -> None:
+        """Strip every trace of a suspended request from this scheduler —
+        the abandon path, and the source side of a cross-engine
+        migration."""
+        if req in self.running:           # pinned: slot + pages held
+            self._release(req)
+        else:
+            self.alloc.drop_suspended(req.req_id)
+            if self.cache is not None:
+                self.cache.seq_done(req.req_id)
+            if req in self.suspended:
+                self.suspended.remove(req)
+            if req in self._resume_pending:
+                self._resume_pending.remove(req)
+        req.meta.pop("suspend_tier", None)
+
+    def finish_suspended(self, req: Request, now: float) -> None:
+        """A suspended request whose continuation was abandoned: release
+        its parked state (pinned slot+pages or host copy) and finish."""
+        self.forget_suspended(req)
+        req.state = RequestState.FINISHED
+        req.finish_time = now
+
     def preempt_one(self) -> Optional[Request]:
         """Evict lowest-priority, youngest running sequence."""
         candidates = [r for r in self.running
@@ -491,6 +728,15 @@ class Scheduler(ControlSurface):
             self._sort_waiting()
 
     def plan_step(self) -> StepPlan:
+        # 0. liveness: a fully pin-parked engine with waiting work can
+        #    never free a slot on its own — demote one pin down the
+        #    ladder (the engine moves the KV) before planning anything
+        if self.demote_fn is not None and self.pin_starved() is not None:
+            self.demote_fn()
+        #    returning tool calls first: restore-pending resumes get the
+        #    freed capacity before any fresh admission sees it
+        if self.cfg.role != "prefill":
+            self._resume_pass()
         # 1. admit while capacity (decode engines only admit through the
         #    handoff path — their waiting queue is bounced by the fabric)
         if self.cfg.role != "decode" and (not self.cfg.decode_first

@@ -31,6 +31,7 @@ PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip (TPU v5e)
 HBM_BW = 819e9             # B/s per chip
 ICI_BW = 50e9              # B/s per link
 DCN_BW = 25e9              # B/s per pod link (cross-pod)
+HOST_BW = 64e9             # B/s HBM<->host DMA (PCIe Gen5 x16-class)
 STEP_OVERHEAD = 2.0e-4     # dispatch/launch overhead per engine step (s)
 BYTES_PER_PARAM = 2        # bf16 weights
 
@@ -102,6 +103,20 @@ class CostModel:
         whether flipping an engine's role pays."""
         raw = self.kv_transfer_bytes(context_len) / bandwidth + latency
         return max(raw - overlap_s, latency)
+
+    def offload_time(self, context_len: int, bandwidth: float = HOST_BW,
+                     latency: float = 0.5e-3) -> float:
+        """HBM→host spill of a suspended sequence's KV over the host DMA
+        link.  Off the critical path (the slot is already released when
+        the copy runs), but OffloadPolicy charges it when deciding
+        whether a suspend pays for itself."""
+        return self.kv_transfer_bytes(context_len) / bandwidth + latency
+
+    def restore_time(self, context_len: int, bandwidth: float = HOST_BW,
+                     latency: float = 0.5e-3) -> float:
+        """Host→HBM refill on resume — the post-tool TTFT tax a warm
+        restore pays instead of a full recompute prefill."""
+        return self.kv_transfer_bytes(context_len) / bandwidth + latency
 
     # -- step times -----------------------------------------------------------
     def _roofline(self, flops: float, bytes_: float) -> float:

@@ -66,6 +66,21 @@ def _ids_partition(a: PageAllocator):
                 for i in a._block_ids.get(b, ())]
         want += a._seq_ids.get(seq, [])
         assert a.page_table(seq) == want
+    # host tier: used ∪ free host ids are exactly host_capacity_pages
+    # distinct ids, all outside the HBM range — the spill plane can
+    # never leak into (or out of) the partition above
+    h_free = list(a._host_free_ids)
+    h_used = [i for ids in a._host_ids.values() for i in ids]
+    h_all = h_free + h_used
+    assert len(h_all) == len(set(h_all)) == a.host_capacity_pages, \
+        "host ids leaked or duplicated"
+    assert all(i >= a.num_pages for i in h_all)
+    assert len(h_used) == a.host_pages
+    assert len(h_free) == a.host_free_pages
+    assert set(a._host_blocks) == set(a._host_ids)
+    for seq in a._host_ids:             # suspended => zero HBM footprint
+        assert seq not in a._seq_ids and seq not in a._used
+        assert seq not in a._seq_blocks
 
 
 def _random_walk(a: PageAllocator, ops):
@@ -84,31 +99,80 @@ def _random_walk(a: PageAllocator, ops):
             a.free(seqs[i % 4])
         elif op == "drop":
             a.drop_block(blocks[i % 4])
+        elif op == "suspend":
+            a.suspend(seqs[i % 4])
+        elif op == "restore":
+            a.restore(seqs[i % 4])
+        elif op == "drop_susp":
+            a.drop_suspended(seqs[i % 4])
+        elif op == "setcap":
+            a.set_host_capacity(n % 10)
         elif op == "reset":
             a.reset()
         _ids_partition(a)
+
+
+_OPS = ["alloc", "share", "acquire", "promote", "free", "drop",
+        "suspend", "restore", "drop_susp", "setcap", "reset"]
 
 
 def test_id_partition_random_walk():
     """Deterministic stand-in for the hypothesis property (runs even
     where hypothesis is not installed)."""
     rng = random.Random(11)
-    kinds = ["alloc", "share", "acquire", "promote", "free", "drop",
-             "reset"]
     for trial in range(50):
-        a = PageAllocator(num_pages=12, page_size=64)
-        ops = [(rng.choice(kinds), rng.randrange(4), rng.randrange(500))
+        a = PageAllocator(num_pages=12, page_size=64,
+                          host_capacity_pages=6)
+        ops = [(rng.choice(_OPS), rng.randrange(4), rng.randrange(500))
                for _ in range(60)]
         _random_walk(a, ops)
 
 
 @settings(max_examples=200, deadline=None)
 @given(st.lists(st.tuples(
-    st.sampled_from(["alloc", "share", "acquire", "promote", "free",
-                     "drop", "reset"]),
+    st.sampled_from(_OPS),
     st.integers(0, 3), st.integers(0, 500)), max_size=60))
 def test_id_partition_property(ops):
-    _random_walk(PageAllocator(num_pages=12, page_size=64), ops)
+    _random_walk(PageAllocator(num_pages=12, page_size=64,
+                               host_capacity_pages=6), ops)
+
+
+# ---------------------------------------------------------------------------
+# host spill tier (tool-call suspend/resume)
+# ---------------------------------------------------------------------------
+
+def test_suspend_restore_partition_roundtrip():
+    a = PageAllocator(num_pages=8, page_size=64, host_capacity_pages=2)
+    assert a.allocate("s0", 3 * 64)
+    assert a.promote("s0", "sys", 1)     # 1 shared + 2 private pages
+    assert a.acquire("s1", "sys")
+    assert a.suspend("s0") == "host"     # only the private pages spill
+    _ids_partition(a)
+    assert a.is_suspended("s0") and a.host_pages == 2
+    assert a.block_refs("sys") == 1      # the sharer keeps the prefix hot
+    assert not a.allocate("s0", 64)      # suspended sequences can't grow
+    assert a.restore("s0")
+    _ids_partition(a)
+    assert not a.is_suspended("s0") and a.host_pages == 0
+    # the restored table leads with the re-acquired prefix chain
+    assert a.page_table("s0")[0] == a.block_pages("sys")[0]
+    assert a.holds("s0") == 2
+    # a footprint beyond host capacity falls off the ladder to "drop"
+    assert a.allocate("big", 5 * 64)
+    assert a.suspend("big") == "drop"
+    assert not a.is_suspended("big")
+    _ids_partition(a)
+
+
+def test_reset_clears_host_tier():
+    a = PageAllocator(num_pages=8, page_size=64, host_capacity_pages=4)
+    assert a.allocate("s0", 3 * 64)
+    assert a.suspend("s0") == "host"
+    assert a.host_pages == 3
+    a.reset()
+    assert a.host_pages == 0 and a.host_free_pages == 4
+    assert not a.is_suspended("s0")
+    _ids_partition(a)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,411 @@
+"""Tool-call suspend/resume plane (ISSUE 10): tiered KV offload that
+multiplies effective decode capacity.
+
+Gates: the hold-open lifecycle (a tool-bound call parks SUSPENDED
+instead of finishing, slot and pages returned), the eviction ladder
+HBM -> host -> drop-and-recompute, resume-outranks-admission ordering,
+the ``offload``/``host_capacity_pages`` knobs on the engine surface,
+the OffloadPolicy / intent loop closed over the ``offload`` knob, the
+ToolAgent heavy-tail + timeout model, and live-engine greedy-token
+parity across suspend -> (same-engine resume | cross-engine migrate).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro import models
+from repro.agents.agent import ToolAgent, expected_tool_latency
+from repro.configs import get_config
+from repro.core import Controller, MetricBus, Registry, compile_intent
+from repro.core.metrics import CentralPoller, Collector, StateStore
+from repro.core.policies import OffloadPolicy
+from repro.core.types import AgentCard, Message, Request, RequestState
+from repro.serving.engine import Engine
+from repro.serving.engine_sim import SimEngine
+from repro.serving.scheduler import SchedulerConfig
+from repro.sim.clock import EventLoop
+from repro.sim.costmodel import CostModel
+
+
+def _sim(max_slots=2, num_pages=256, host_pages=64, **kw):
+    loop = EventLoop()
+    cm = CostModel(get_config("agent-7b"), chips=4)
+    cfg = SchedulerConfig(max_slots=max_slots, num_pages=num_pages,
+                          host_capacity_pages=host_pages, **kw)
+    return loop, SimEngine(loop, cm, cfg, collector=Collector())
+
+
+def _held_call(prompt_len=64, max_new=4, est=2.0):
+    """A request whose final token parks it for a tool (the stamp the
+    workflow layer puts on calls that feed a TOOL stage)."""
+    r = Request(prompt_len=prompt_len, max_new_tokens=max_new)
+    r.meta["hold_open"] = True
+    r.meta["tool_latency_est"] = est
+    return r
+
+
+# ---------------------------------------------------------------------------
+# Sim engine: the hold-open lifecycle across the eviction ladder
+# ---------------------------------------------------------------------------
+
+def test_hold_open_suspends_to_host_and_warm_resumes():
+    loop, eng = _sim()
+    eng.set_param("offload", "aggressive")
+    r = _held_call()
+    calls_done = []
+    eng.on_finish = lambda req, t: calls_done.append(t)
+    eng.submit(r)
+    loop.run_until(60.0)
+    # the *call* completed (stage bookkeeping advanced) but the sequence
+    # parked instead of dying — with zero HBM footprint and a free slot
+    assert calls_done and r.generated == 4
+    assert r.state == RequestState.SUSPENDED
+    assert r.meta["suspend_tier"] == "host"
+    assert eng.scheduler.num_running == 0
+    assert eng.scheduler.suspended_seqs == 1
+    assert eng.scheduler.alloc.host_pages > 0
+    assert r.req_id in eng._host_store
+    # a warm resume is priced as a host->HBM refill, not a recompute
+    assert eng.restore_cost(r) == pytest.approx(
+        eng.cm.restore_time(r.total_len))
+
+    # tool returns: same sequence continues on the restored cache
+    r.max_new_tokens += 2
+    r.meta["post_tool_t0"] = loop.now()
+    assert eng.resume_suspended(r) == "hit"
+    loop.run_until(120.0)
+    assert r.state == RequestState.FINISHED and r.generated == 6
+    assert eng.scheduler.resume_hits == 1
+    assert eng.scheduler.restore_hit_rate == 1.0
+    assert eng.scheduler.alloc.host_pages == 0
+    assert eng.restore_cost(r) == 0.0
+    # post-tool TTFT was observed off the resume stamp
+    assert len(eng.restore_ttfts) == 1 and eng.restore_ttfts[0] > 0
+
+
+def test_auto_offload_pins_without_queue_pressure():
+    """The ``auto`` rule: nobody wants the slot, so the parked sequence
+    keeps it — offloading would pay the spill round trip for nothing."""
+    loop, eng = _sim()
+    assert eng.get_param("offload") == "auto"
+    r = _held_call(prompt_len=32, max_new=3)
+    eng.submit(r)
+    loop.run_until(60.0)
+    assert r.state == RequestState.SUSPENDED
+    assert r.meta["suspend_tier"] == "pin"
+    assert eng.scheduler.num_running == 1        # slot never left
+    assert eng.scheduler.alloc.host_pages == 0
+    assert eng.restore_cost(r) == 0.0            # nothing to refill
+    r.max_new_tokens += 2
+    assert eng.resume_suspended(r) == "pin"
+    loop.run_until(120.0)
+    assert r.state == RequestState.FINISHED and r.generated == 5
+
+
+def test_wait_resume_outranks_fresh_admissions():
+    """A returning tool call queued on the resume-pending list gets the
+    freed slot *before* fresh work waiting in the admission queue."""
+    loop, eng = _sim(max_slots=1, num_pages=64)
+    eng.set_param("offload", "aggressive")
+    r1 = _held_call()
+    eng.submit(r1)
+    loop.run_until(60.0)
+    assert r1.state == RequestState.SUSPENDED
+
+    r2 = Request(prompt_len=64, max_new_tokens=4)
+    r3 = Request(prompt_len=64, max_new_tokens=4)
+    eng.submit(r2)                               # takes the lone slot
+    eng.submit(r3)                               # queues behind it
+    r1.max_new_tokens += 2
+    assert eng.resume_suspended(r1) == "wait"
+    loop.run_until(400.0)
+    for r in (r1, r2, r3):
+        assert r.state == RequestState.FINISHED
+    assert eng.scheduler.resume_hits == 1
+    assert r1.finish_time <= r3.first_token_time
+
+
+def test_host_tier_full_drops_and_recompute_resumes():
+    """Bottom rung of the ladder: no host room at suspend time drops the
+    KV; resume folds the generated tail into the prompt and re-prefills
+    through normal admission."""
+    loop, eng = _sim(host_pages=0)
+    eng.set_param("offload", "aggressive")
+    r = _held_call(prompt_len=48, max_new=4)
+    eng.submit(r)
+    loop.run_until(60.0)
+    assert r.state == RequestState.SUSPENDED
+    assert r.meta["suspend_tier"] == "drop"
+    assert eng.scheduler.alloc.host_pages == 0
+    assert r.req_id not in eng._host_store
+
+    r.max_new_tokens += 2
+    assert eng.resume_suspended(r) == "recompute"
+    loop.run_until(200.0)
+    assert r.state == RequestState.FINISHED
+    assert eng.scheduler.resume_recomputes == 1
+    assert eng.scheduler.restore_hit_rate == 0.0
+    # the 4 generated tokens became prompt; the 2 new ones decoded on top
+    assert r.prompt_len == 48 + 4
+    assert r.generated == 2 and len(r.output_tokens) == 4 + 2
+
+
+def test_finish_suspended_releases_parked_state():
+    """The abandon path: a held-open sequence whose continuation went
+    elsewhere frees its host copy and counts as finished."""
+    loop, eng = _sim()
+    eng.set_param("offload", "aggressive")
+    r = _held_call()
+    eng.submit(r)
+    loop.run_until(60.0)
+    assert r.state == RequestState.SUSPENDED
+    assert eng.scheduler.alloc.host_pages > 0
+    eng.finish_suspended(r)
+    assert r.state == RequestState.FINISHED
+    assert eng.scheduler.alloc.host_pages == 0
+    assert eng.scheduler.suspended_seqs == 0
+    assert r in eng.finished and r.req_id not in eng._host_store
+
+
+def test_starved_pin_demotion_breaks_fanin_wedge():
+    """The liveness rung under ``offload off``: queue pressure alone
+    never evicts a pin (a parked tool call frees its own slot when the
+    tool returns), but a *wedge* — every slot held by a pin whose tool
+    cannot dispatch until queued sibling work runs — demotes the oldest
+    blocked pin to the host tier so the siblings can make progress."""
+    loop, eng = _sim()                           # 2 slots
+    eng.set_param("offload", "off")
+    a, b = _held_call(), _held_call()
+    eng.submit(a)
+    eng.submit(b)
+    loop.run_until(60.0)
+    assert a.meta["suspend_tier"] == "pin" == b.meta["suspend_tier"]
+    assert eng.scheduler.num_running == 2
+
+    f1 = Request(prompt_len=32, max_new_tokens=2)
+    eng.submit(f1)                               # pressure, no wedge
+    loop.run_until(90.0)
+    assert eng.demote_count == 0 and f1.state == RequestState.QUEUED
+
+    a.meta["tool_blocked"] = True                # one occupant blocked:
+    f2 = Request(prompt_len=32, max_new_tokens=2)
+    eng.submit(f2)                               # still no wedge — b's
+    loop.run_until(120.0)                        # tool frees b's slot
+    assert eng.demote_count == 0 and f1.state == RequestState.QUEUED
+
+    b.meta["tool_blocked"] = True                # true wedge
+    f3 = Request(prompt_len=32, max_new_tokens=2)
+    eng.submit(f3)
+    loop.run_until(180.0)
+    assert eng.demote_count == 1
+    assert a.meta["suspend_tier"] == "host"      # oldest pin spilled
+    assert b.meta["suspend_tier"] == "pin"       # the rest stay pinned
+    for f in (f1, f2, f3):
+        assert f.state == RequestState.FINISHED
+    # a demoted pin still resumes warm off the host tier
+    a.max_new_tokens += 1
+    a.meta.pop("tool_blocked")
+    assert eng.resume_suspended(a) == "hit"
+    loop.run_until(240.0)
+    assert a.state == RequestState.FINISHED
+    assert eng.scheduler.resume_hits == 1
+
+
+# ---------------------------------------------------------------------------
+# Knob surface
+# ---------------------------------------------------------------------------
+
+def test_suspend_knobs_on_engine_surface():
+    loop, eng = _sim()
+    assert eng.get_param("offload") == "auto"
+    eng.set_param("offload", "aggressive")
+    assert eng.offload == "aggressive"
+    with pytest.raises(ValueError):
+        eng.set_param("offload", "sometimes")
+    # host capacity is a scheduler knob proxied through the engine; the
+    # on_change hook resizes the allocator's host tier in place
+    eng.set_param("host_capacity_pages", 8)
+    assert eng.scheduler.cfg.host_capacity_pages == 8
+    assert eng.scheduler.alloc.host_capacity_pages == 8
+    card = eng.card()
+    assert "offload" in card.knobs and "host_capacity_pages" in card.knobs
+    assert "suspended_seqs" in card.metrics
+    assert "restore_ttft" in card.metrics
+
+
+# ---------------------------------------------------------------------------
+# Control plane: OffloadPolicy + intent rule close the loop on the knob
+# ---------------------------------------------------------------------------
+
+def _control(objs, bus):
+    loop = EventLoop()
+    reg = Registry()
+    for o in objs:
+        reg.register(o)
+    store = StateStore()
+    poller = CentralPoller(store)
+    c = Controller(loop, reg, poller, interval=0.05, bus=bus)
+    col = Collector(bus=bus)
+    poller.attach(col)
+    return loop, reg, col, c
+
+
+class FakeOffloadEngine:
+    """Knob-surface stub: just the offload knob, for policy unit tests."""
+    name, kind = "e0", "llm"
+
+    def __init__(self):
+        self.values = {"offload": "auto"}
+        self._defaults = {}
+
+    def card(self):
+        return AgentCard(name=self.name, kind=self.kind,
+                         knobs=dict(self.values),
+                         metrics=("queue_len",), capabilities=())
+
+    def get_param(self, k):
+        return self.values[k]
+
+    def set_param(self, k, v):
+        self._defaults.setdefault(k, self.values[k])
+        self.values[k] = v
+
+    def reset_param(self, k):
+        self.values[k] = self._defaults.get(k, self.values[k])
+
+
+def test_offload_policy_escalates_and_relaxes():
+    bus = MetricBus()
+    eng = FakeOffloadEngine()
+    loop, reg, col, c = _control([eng], bus)
+    pol = OffloadPolicy("e0", queue_hi=8, queue_lo=2, dwell=0.0)
+    c.install(pol)
+    c.start()
+    col.gauge("e0.queue_len", 12, 0.01)           # admission backed up
+    loop.run_until(0.2)
+    assert eng.values["offload"] == "aggressive"
+    col.gauge("e0.queue_len", 1, 0.21)            # drained below low water
+    loop.run_until(0.4)
+    assert eng.values["offload"] == "auto"
+    assert [w for _, w in pol.moves] == ["aggressive", "auto"]
+
+
+def test_offload_policy_holds_between_watermarks():
+    bus = MetricBus()
+    eng = FakeOffloadEngine()
+    loop, reg, col, c = _control([eng], bus)
+    pol = OffloadPolicy("e0", queue_hi=8, queue_lo=2, dwell=0.0)
+    c.install(pol)
+    c.start()
+    col.gauge("e0.queue_len", 5, 0.01)            # between the marks
+    loop.run_until(0.2)
+    assert eng.values["offload"] == "auto" and not pol.moves
+
+
+def test_intent_rule_escalates_offload():
+    bus = MetricBus()
+    eng = FakeOffloadEngine()
+    loop, reg, col, c = _control([eng], bus)
+    c.install(compile_intent("""
+rule offload on engine e0.queue_len > 8:
+    => set engine e0.offload aggressive
+"""))
+    col.gauge("e0.queue_len", 4, 0.01)            # under threshold
+    loop.run_until(0.05)
+    assert eng.values["offload"] == "auto"
+    col.gauge("e0.queue_len", 12, 0.06)           # breach
+    loop.run_until(0.15)
+    assert eng.values["offload"] == "aggressive"
+    assert any(a.kind == "set" for a in c.action_log())
+
+
+# ---------------------------------------------------------------------------
+# ToolAgent: heavy-tailed latency + timeout/retry counters
+# ---------------------------------------------------------------------------
+
+def test_tool_timeout_and_retry_counters():
+    loop = EventLoop()
+    tool = ToolAgent("web", loop, latency=1.0, latency_cv=2.0,
+                     timeout=1.5, max_retries=1, concurrency=4, seed=11)
+    done = []
+    for i in range(32):
+        tool.deliver(Message(src="s", dst="web", payload=i),
+                     on_done=done.append)
+    loop.run_until(1e4)
+    # every call completes (fail-open after the retry budget) ...
+    assert len(done) == 32 and tool.calls == 32
+    # ... but the cv=2 tail blew through the 1.5 s cap more than once
+    assert tool.timeouts > 0 and tool.retries > 0
+    assert tool.timeouts >= tool.retries
+    # the planners charge the closed-form mean, not the nominal median
+    assert tool.mean_latency() == pytest.approx(
+        expected_tool_latency(1.0, 2.0, 1.5, 1))
+    # tail math sanity: the lognormal mean dominates its median, and a
+    # timeout caps (then retry-pads) the expectation below the raw mean
+    assert expected_tool_latency(1.0, 2.0) == pytest.approx(5 ** 0.5)
+    assert expected_tool_latency(1.0, 2.0, 1.5, 1) \
+        < expected_tool_latency(1.0, 2.0)
+
+
+# ---------------------------------------------------------------------------
+# Live engine: suspend -> resume / migrate keeps greedy decode token-exact
+# ---------------------------------------------------------------------------
+
+BASE = get_config("tiny-agent").replace(dtype="float32")
+PAGE = 16
+
+
+def _live_engine(params, name):
+    sched = SchedulerConfig(max_slots=2, num_pages=64, max_context=128,
+                            page_size=PAGE, host_capacity_pages=32)
+    return Engine(BASE, params, sched, name=name, cache_layout="paged")
+
+
+def _ref_tokens(params, p, max_new):
+    eng = _live_engine(params, "tc-ref")
+    r = Request(prompt_len=len(p), max_new_tokens=max_new,
+                prompt_tokens=np.asarray(p, np.int32))
+    eng.submit(r)
+    eng.run_until_idle()
+    assert r.state == RequestState.FINISHED
+    return list(r.output_tokens)
+
+
+def _decode_partially(eng, p, max_new, upto):
+    r = Request(prompt_len=len(p), max_new_tokens=max_new,
+                prompt_tokens=np.asarray(p, np.int32))
+    eng.submit(r)
+    while r.generated < upto:
+        eng.step()
+    return r
+
+
+def test_live_suspend_resume_preserves_greedy_decode():
+    params = models.init(BASE, jax.random.key(0))
+    p = np.arange(1, 28) % BASE.vocab
+    ref = _ref_tokens(params, p, 10)
+
+    # same-engine warm resume: spill to host, reclaim, decode on
+    eng = _live_engine(params, "tc-home")
+    r = _decode_partially(eng, p, 10, upto=4)
+    assert eng.suspend_request(r, offload=True) == "host"
+    assert eng.scheduler.num_running == 0
+    assert eng.scheduler.alloc.is_suspended(r.req_id)
+    assert eng.resume_suspended(r) == "hit"
+    eng.run_until_idle()
+    assert r.state == RequestState.FINISHED
+    assert list(r.output_tokens) == ref
+
+    # cross-engine migrate: the host copy lands on a sibling through the
+    # handoff admission path and decoding continues token-exact there
+    engA = _live_engine(params, "tc-src")
+    engB = _live_engine(params, "tc-dst")
+    r2 = _decode_partially(engA, p, 10, upto=4)
+    assert engA.suspend_request(r2, offload=True) == "host"
+    assert engA.migrate_suspended(r2, engB)
+    assert not engA.scheduler.alloc.is_suspended(r2.req_id)
+    assert r2.req_id not in engA._host_store
+    engB.run_until_idle()
+    assert r2.state == RequestState.FINISHED
+    assert list(r2.output_tokens) == ref
+    assert engB.scheduler.resume_hits == 1

@@ -5,6 +5,7 @@ import math
 
 import pytest
 
+from repro.agents.agent import expected_tool_latency
 from repro.agents.graph import (GraphError, GraphTask, WorkflowGraph,
                                 debate, deep_review, fig1, map_reduce)
 from repro.agents.stage import StageKind
@@ -18,9 +19,13 @@ except ImportError:                      # pragma: no cover - env dependent
 
 
 def unit_cost(spec, est_in):
-    """Deterministic hand-checkable cost: 1s per stage + 0.01s/out tok."""
+    """Deterministic hand-checkable cost: 1s per stage + 0.01s/out tok.
+    TOOL stages charge their *expected* dwell under the heavy-tailed
+    latency model (== tool_latency when the tail is off)."""
     if spec.kind is StageKind.TOOL:
-        return spec.tool_latency
+        return expected_tool_latency(spec.tool_latency,
+                                     spec.tool_latency_cv,
+                                     spec.tool_timeout)
     return 1.0 + 0.01 * spec.out_tokens
 
 
@@ -161,6 +166,60 @@ def test_deadline_propagation_monotone_along_edges():
         for (u, v) in g.edges:
             assert cp[u] > cp[v], (g.name, u, v)
             assert through[u] <= through[v] + 1e-9, (g.name, u, v)
+
+
+def test_critical_path_includes_tool_latency_pinned():
+    """Hand-checked debate CPs: the TOOL stage sits on the longest path
+    and contributes its full expected dwell.  Per-stage unit costs:
+    moderator 1.48, pro/con 1.80, judge 1.72, verdict 1.24, revise 1.64
+    (the heavier verdict arm), accept 1.16."""
+    cp = debate().critical_path(unit_cost)       # tool_latency = 0.05
+    assert cp["judge"] == pytest.approx(4.60)
+    assert cp["factcheck"] == pytest.approx(4.65)
+    assert cp["pro"] == pytest.approx(6.45)
+    assert cp["moderator"] == pytest.approx(7.93)
+
+    # heavy tail: the lognormal's *mean* (median * exp(sigma^2/2)), not
+    # the nominal median, lands on the path — with cv=1 a "2 s" tool
+    # really costs 2*sqrt(2) s per call in expectation
+    tall = debate(tool_latency=2.0, tool_latency_cv=1.0)
+    cph = tall.critical_path(unit_cost)
+    exp_tool = 2.0 * math.sqrt(2.0)
+    assert cph["factcheck"] == pytest.approx(exp_tool + 4.60)
+    assert cph["moderator"] == pytest.approx(1.48 + 1.80 + exp_tool + 4.60)
+    flat = debate(tool_latency=2.0).critical_path(unit_cost)
+    assert cph["moderator"] > flat["moderator"]  # the tail is not free
+
+
+def test_critical_path_fig1_pinned():
+    """fig1 hand-check: developer (out 288) = 3.88, tester (out 40) =
+    1.40; the chain's total is their sum."""
+    cp = fig1().critical_path(unit_cost)
+    assert cp["tester"] == pytest.approx(1.40)
+    assert cp["developer"] == pytest.approx(5.28)
+    assert fig1().cp_total(cp) == pytest.approx(5.28)
+
+
+def test_deep_review_tool_insertion():
+    """tool_latency > 0 threads a research TOOL stage after every
+    reviewer; the default shape stays tool-free and the chain stays
+    valid either way."""
+    plain = deep_review(depth=3).validate()
+    assert not any(s.kind is StageKind.TOOL for s in plain.stages.values())
+    tooled = deep_review(depth=3, tool_latency=1.0, tool_latency_cv=0.5,
+                         tool_timeout=4.0).validate()
+    research = [n for n, s in tooled.stages.items()
+                if s.kind is StageKind.TOOL]
+    assert len(research) == 3
+    assert tooled.stages["research-0"].tool_latency_cv == 0.5
+    assert tooled.succs("reviewer-0") == ["research-0"]
+    assert tooled.succs("research-0") == ["reviewer-1"]
+    # every tool on the chain adds its expected dwell to the source cp
+    cp_plain = plain.critical_path(unit_cost)
+    cp_tool = tooled.critical_path(unit_cost)
+    per_tool = expected_tool_latency(1.0, 0.5, 4.0)
+    assert (cp_tool["author"] - cp_plain["author"]
+            == pytest.approx(3 * per_tool))
 
 
 def test_graph_task_defaults():
